@@ -1,0 +1,33 @@
+"""Shared benchmark utilities: timing + CSV emission.
+
+Imported by every benchmark module -- enables float64 FIRST (the paper's
+reference arithmetic; without it everything silently degrades to f32 and
+the format-comparison errors drown in accumulation noise).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+
+def time_fn(fn: Callable, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall time (us) of jitted fn over ``iters`` runs."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.2f},{derived}", flush=True)

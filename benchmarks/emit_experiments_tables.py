@@ -1,0 +1,122 @@
+"""Regenerate the EXPERIMENTS.md roofline table + perf log from
+dryrun_results/*.json (keeps the report reproducible)."""
+import glob
+import json
+import os
+
+RES = os.path.join(os.path.dirname(__file__), "..", "dryrun_results")
+
+
+def _lever(r) -> str:
+    """One sentence: what would move the dominant term down (per cell)."""
+    b = r["bottleneck"]
+    arch = r["arch"]
+    shape = r["shape"]
+    moe = "moe" in arch or "grok" in arch
+    if b == "collective":
+        if moe and "train" in shape or moe and "prefill" in shape:
+            return ("shard-local MoE dispatch kills the global-sort "
+                    "gathers (proven 20x in §Perf A)")
+        if "decode" in shape:
+            return ("serving rules: drop FSDP on weights (TP-only) -- "
+                    "proven in §Perf B1")
+        return ("overlap FSDP gathers with compute (scan scheduler) + "
+                "GSE-SEM head wire format on the pod axis")
+    if b == "memory":
+        if "decode" in shape or "long" in shape:
+            return ("GSE-SEM 8-bit KV cache + tag-1 weight segments "
+                    "(proven 2.4x in §Perf B)")
+        return ("flash-attention Pallas kernel (kernels/flash_attn.py) "
+                "keeps score tiles in VMEM; bf16 stored params halve "
+                "weight reads")
+    return "MXU-aligned tiling; larger per-chip batch"
+
+
+def roofline_markdown() -> str:
+    rows = []
+    for p in sorted(glob.glob(os.path.join(RES, "*__baseline.json"))):
+        r = json.load(open(p))
+        if r.get("skipped") or "error" in r:
+            continue
+        rows.append(r)
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    out = ["| arch | shape | mesh | comp (s) | mem (s) | coll (s) | bound "
+           "| frac | useful | lever for the dominant term |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.4g} | {r['t_memory_s']:.4g} "
+            f"| {r['t_collective_s']:.4g} | {r['bottleneck']} "
+            f"| {r['roofline_fraction']:.3f} "
+            f"| {r['model_over_hlo_flops']:.2f} "
+            f"| {_lever(r)} |"
+        )
+    skips = []
+    for p in sorted(glob.glob(os.path.join(RES, "*__baseline.json"))):
+        r = json.load(open(p))
+        if r.get("skipped"):
+            skips.append(f"{r['arch']}/{r['shape']}")
+    out.append("")
+    out.append(f"Skipped cells (sub-quadratic-only shape): "
+               f"{len(skips)} -- {', '.join(sorted(set(skips)))}")
+    return "\n".join(out)
+
+
+def perf_markdown() -> str:
+    cells = {
+        "A qwen3_moe_235b_a22b/train_4k":
+            ["qwen3_moe_235b_a22b__train_4k__sp__{}.json",
+             ["baseline", "opt1_grouped", "opt2_grouped_gather",
+              "opt3_grouped_bf16g"]],
+        "B qwen15_32b/decode_32k":
+            ["qwen15_32b__decode_32k__sp__{}.json",
+             ["baseline", "opt1_serve_rules", "opt2_gse_t1", "opt3_kv_u8"]],
+        "C granite_34b/train_4k":
+            ["granite_34b__train_4k__sp__{}.json",
+             ["baseline", "opt1_bf16gather", "opt2_remat_dots",
+              "opt3_dots_chunked"]],
+    }
+    out = []
+    for name, (pat, tags) in cells.items():
+        out.append(f"**Cell {name}**\n")
+        out.append("| variant | comp (s) | mem (s) | coll (s) | bound |")
+        out.append("|---|---|---|---|---|")
+        for t in tags:
+            p = os.path.join(RES, pat.format(t))
+            if not os.path.exists(p):
+                continue
+            r = json.load(open(p))
+            if "error" in r:
+                out.append(f"| {t} | ERROR | | | |")
+                continue
+            out.append(
+                f"| {t} | {r['t_compute_s']:.4g} | {r['t_memory_s']:.4g} "
+                f"| {r['t_collective_s']:.4g} | {r['bottleneck']} |"
+            )
+        out.append("")
+    return "\n".join(out)
+
+
+def dryrun_bytes_markdown() -> str:
+    """Per-device argument/temp bytes, train_4k, both meshes: shows the
+    pod axis sharding the state (deliverable-e record)."""
+    out = ["| arch | mesh | args GB/dev | temp GB/dev | HLO GFLOPs/dev |",
+           "|---|---|---|---|---|"]
+    for p in sorted(glob.glob(os.path.join(RES, "*__train_4k__*baseline.json"))):
+        r = json.load(open(p))
+        if r.get("skipped") or "error" in r:
+            continue
+        ma = r["memory_analysis"]
+        out.append(
+            f"| {r['arch']} | {r['mesh']} "
+            f"| {ma['argument_bytes']/1e9:.2f} "
+            f"| {(ma['temp_bytes'] or 0)/1e9:.2f} "
+            f"| {r['hlo_flops_per_dev']/1e9:.0f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(roofline_markdown())
+    print()
+    print(perf_markdown())

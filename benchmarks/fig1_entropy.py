@@ -1,0 +1,43 @@
+"""Paper Fig. 1: value/exponent/mantissa entropy + top-k exponent coverage.
+
+Validates the paper's motivating claim on the synthetic SuiteSparse
+stand-in suite: exponent entropy << value entropy; top-8 coverage ~90%.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.gse import exponent_stats
+from repro.sparse import generators as G
+
+
+def run() -> dict:
+    suite = G.spmv_suite(small=True)
+    rows = {}
+    agg = {k: [] for k in
+           ("entropy_value", "entropy_exponent", "entropy_mantissa",
+            "top1", "top2", "top4", "top8", "top16", "top32", "top64")}
+    for name, a in suite.items():
+        st = exponent_stats(np.asarray(a.val))
+        rows[name] = st
+        for k in agg:
+            agg[k].append(st[k])
+        emit(
+            f"fig1/{name}", 0.0,
+            f"H_val={st['entropy_value']:.2f} H_exp={st['entropy_exponent']:.2f}"
+            f" H_man={st['entropy_mantissa']:.2f} top8={st['top8']:.3f}"
+        )
+    means = {k: float(np.mean(v)) for k, v in agg.items()}
+    emit(
+        "fig1/MEAN", 0.0,
+        f"H_exp_mean={means['entropy_exponent']:.2f} "
+        f"top1={means['top1']:.3f} top8={means['top8']:.3f} "
+        f"top64={means['top64']:.3f} "
+        f"(paper: 64.7%/90.9%/99.8% for top1/8/64)"
+    )
+    return {"rows": rows, "means": means}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Paper Fig. 6: SpMV across storage formats -- GFLOPS proxy + maxAbsErr.
+
+FP64 / FP32 / FP16 / BF16 vs GSE-SEM tags 1..3.  The paper's headline:
+GSE-SEM head (16-bit) has FAR smaller error than FP16/BF16 at the same
+width, at comparable bandwidth savings.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.sparse import generators as G
+from repro.sparse.csr import pack_csr
+from repro.sparse.spmv import spmv, spmv_gse
+
+
+def run() -> dict:
+    out = {}
+    suite = G.spmv_suite(small=True)
+    for name, a in suite.items():
+        x = jnp.ones((a.shape[1],), jnp.float64)
+        ref = np.asarray(spmv(a, x))
+        g = pack_csr(a, k=8)
+        flops = 2.0 * a.nnz
+        rows = {}
+        for label, fn in {
+            "fp64": lambda: spmv(a, x),
+            "fp32": lambda: spmv(a, x, store_dtype=jnp.float32),
+            "fp16": lambda: spmv(a, x, store_dtype=jnp.float16),
+            "bf16": lambda: spmv(a, x, store_dtype=jnp.bfloat16),
+            "gse_h": lambda: spmv_gse(g, x, tag=1),
+            "gse_ht1": lambda: spmv_gse(g, x, tag=2),
+            "gse_full": lambda: spmv_gse(g, x, tag=3),
+        }.items():
+            y = np.asarray(fn())
+            err = float(np.abs(y - ref).max())
+            us = time_fn(fn, iters=10)
+            rows[label] = dict(err=err, us=us, gflops=flops / us / 1e3)
+            emit(f"fig6/{name}/{label}", us,
+                 f"maxAbsErr={err:.3e} gflops={flops/us/1e3:.2f}")
+        out[name] = rows
+        better = (rows["gse_h"]["err"] <= rows["fp16"]["err"] + 1e-300 and
+                  rows["gse_h"]["err"] <= rows["bf16"]["err"] + 1e-300)
+        emit(f"fig6/{name}/gse_head_beats_16bit", 0.0, str(better))
+    return out
+
+
+if __name__ == "__main__":
+    run()

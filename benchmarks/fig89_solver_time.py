@@ -1,0 +1,93 @@
+"""Paper Figs. 8/9: end-to-end solver wall time + speedup over FP64.
+
+Includes GSE-SEM* (paper Eq. 7): the projected time if format conversion
+were free (hardware GSE-SEM support), computed as
+TIME_fp16 / ITERS_fp16 * ITERS_gse.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.precision import MonitorParams
+from repro.sparse import generators as G
+from repro.sparse.csr import pack_csr
+from repro.solvers import (
+    make_fixed_operator,
+    make_gse_operator,
+    solve_cg,
+    solve_gmres,
+)
+
+_PARAMS = MonitorParams(t=40, l=60, m=30, rsd_limit=0.5, reldec_limit=0.45)
+
+
+def _timed(solver, op, b, **kw):
+    res = solver(op, b, **kw)  # warm compile
+    jax.block_until_ready(res.x)
+    t0 = time.perf_counter()
+    res = solver(op, b, **kw)
+    jax.block_until_ready(res.x)
+    return res, time.perf_counter() - t0
+
+
+def run() -> dict:
+    out = {}
+    cases = []
+    for i, (name, a) in enumerate(list(G.cg_suite(small=True).items())[:4]):
+        if a is None:
+            continue
+        cases.append(("cg", name, a, i))
+    for i, (name, a) in enumerate(list(G.gmres_suite(small=True).items())[:3]):
+        cases.append(("gmres", name, a, 100 + i))
+
+    for kind, name, a, seed in cases:
+        rng = np.random.default_rng(seed)
+        from repro.sparse.spmv import spmv
+
+        b = jnp.asarray(np.asarray(spmv(a, jnp.asarray(
+            rng.normal(size=a.shape[1])))))
+        g = pack_csr(a, k=8)
+        solver = solve_cg if kind == "cg" else solve_gmres
+        kw = dict(tol=1e-6, params=_PARAMS)
+        kw["maxiter"] = 1500 if kind == "cg" else 2400
+
+        rows = {}
+        for label, op in {
+            "fp64": make_fixed_operator(a),
+            "fp16": make_fixed_operator(a, store_dtype=jnp.float16),
+            "bf16": make_fixed_operator(a, store_dtype=jnp.bfloat16),
+            "gse": make_gse_operator(g),
+        }.items():
+            res, t = _timed(solver, op, b, **kw)
+            rows[label] = dict(t=t, iters=int(res.iters),
+                               relres=float(res.relres))
+        # Paper Eq. 7: GSE-SEM* projection (conversion-free hardware).
+        if rows["fp16"]["iters"] > 0:
+            t_star = (rows["fp16"]["t"] / rows["fp16"]["iters"]
+                      * rows["gse"]["iters"])
+        else:
+            t_star = rows["gse"]["t"]
+        rows["gse_star"] = dict(t=t_star, iters=rows["gse"]["iters"],
+                                relres=rows["gse"]["relres"])
+        base = rows["fp64"]["t"]
+        # Bytes-modeled speedup: SpMV value+col stream bytes per nnz
+        # (the bandwidth-bound quantity that holds on TPU/GPU; CPU wall
+        # time here is decode-overhead-dominated and a weak proxy).
+        stream = {"fp64": 12, "fp16": 6, "bf16": 6, "gse": 6, "gse_star": 6}
+        it64 = max(rows["fp64"]["iters"], 1)
+        for label, r in rows.items():
+            modeled = (12 * it64) / (stream[label] * max(r["iters"], 1))
+            emit(f"fig89/{kind}/{name}/{label}", r["t"] * 1e6,
+                 f"iters={r['iters']} speedup={base / max(r['t'],1e-12):.2f}"
+                 f" modeled_speedup={modeled:.2f}")
+        out[(kind, name)] = rows
+    return out
+
+
+if __name__ == "__main__":
+    run()

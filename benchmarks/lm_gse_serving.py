@@ -1,0 +1,61 @@
+"""Beyond-paper bridge: GSE-SEM weight serving for LM matmuls.
+
+One stored copy -> three serving precisions (paper's storage/compute
+decoupling at LM scale): bytes-per-weight and matmul error vs bf16/fp16
+for a real (smoke-scale) transformer's weight matrices + Pallas kernel
+timing (interpret mode; structural on CPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro import configs
+from repro.core import gse
+from repro.models import transformer as T
+from repro.quant import gse_tensor as Q
+
+
+def run() -> dict:
+    cfg = configs.get_config("qwen3_4b", smoke=True)
+    params, _ = T.init_params(cfg, jax.random.key(0))
+    w = params["layers"]["mlp"]["w_up"][0]  # (d, ff) real init stats
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(64, w.shape[0])), jnp.float32)
+    exact = np.asarray(x, np.float64) @ np.asarray(w, np.float64)
+
+    q = Q.quantize_tree({"w": w}, min_size=16)["w"]
+    out = {}
+    for label, (y, nbytes) in {
+        "f32": (x @ w, w.nbytes),
+        "bf16": (x @ w.astype(jnp.bfloat16).astype(jnp.float32),
+                 w.size * 2),
+        "fp16": (x @ w.astype(jnp.float16).astype(jnp.float32),
+                 w.size * 2),
+        "gse_t1": (Q.gse_linear(x, q, tag=1, dtype=jnp.float32),
+                   q.nbytes(1)),
+        "gse_t2": (Q.gse_linear(x, q, tag=2, dtype=jnp.float32),
+                   q.nbytes(2)),
+        "gse_t3": (Q.gse_linear(x, q, tag=3, dtype=jnp.float32),
+                   q.nbytes(3)),
+    }.items():
+        err = float(np.abs(np.asarray(y, np.float64) - exact).max()
+                    / np.abs(exact).max())
+        out[label] = dict(err=err, bytes=nbytes)
+        emit(f"lm_serving/{label}", 0.0,
+             f"rel_err={err:.3e} bytes_per_weight={nbytes/w.size:.2f}")
+
+    # Pallas fused dequant-matmul (interpret): correctness + proxy timing
+    from repro.kernels import ops
+
+    p = gse.pack(np.asarray(w, np.float64), 8)
+    t_us = time_fn(lambda: ops.gse_matmul(x[:8], p, tag=1), iters=3,
+                   warmup=1)
+    emit("lm_serving/pallas_gse_matmul_t1", t_us, "interpret-mode timing")
+    return out
+
+
+if __name__ == "__main__":
+    run()

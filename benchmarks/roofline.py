@@ -1,0 +1,42 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads dryrun_results/*.json (written by repro.launch.dryrun) and prints
+the per-(arch x shape x mesh) three-term roofline.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "dryrun_results")
+
+
+def run() -> list:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        name = f"roofline/{r['arch']}/{r['shape']}/{r.get('mesh','?')}/" \
+               f"{r.get('tag','baseline')}"
+        if r.get("skipped"):
+            emit(name, 0.0, f"SKIP: {r['reason'][:60]}")
+            continue
+        if "error" in r:
+            emit(name, 0.0, f"ERROR: {r['error'][:80]}")
+            continue
+        rows.append(r)
+        emit(
+            name, 0.0,
+            f"comp={r['t_compute_s']:.4f}s mem={r['t_memory_s']:.4f}s "
+            f"coll={r['t_collective_s']:.4f}s bound={r['bottleneck']} "
+            f"frac={r['roofline_fraction']:.3f} "
+            f"useful={r['model_over_hlo_flops']:.2f}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

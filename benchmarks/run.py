@@ -1,0 +1,57 @@
+"""Benchmark harness: one module per paper table/figure (deliverable d).
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  fig1   -- Fig. 1   value/exponent/mantissa entropy, top-k coverage
+  fig45  -- Figs 4/5 shared-exponent count k sweep (speed + error)
+  fig6   -- Fig. 6   SpMV format comparison (GSE-SEM vs FP16/BF16/FP64)
+  tab34  -- Tables III/IV  CG/GMRES convergence per format
+  fig89  -- Figs 8/9 solver wall time + GSE-SEM* projection (Eq. 7)
+  lm     -- beyond-paper: GSE-SEM LM weight serving ladder
+  roofline -- dry-run roofline table (deliverable g)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: fig1,fig45,fig6,tab34,"
+                         "fig89,lm,roofline")
+    args = ap.parse_args()
+    want = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (fig1_entropy, fig45_k_sweep, fig6_spmv_formats,
+                            fig89_solver_time, lm_gse_serving, roofline,
+                            tab34_solver_convergence)
+
+    suites = {
+        "fig1": fig1_entropy.run,
+        "fig45": fig45_k_sweep.run,
+        "fig6": fig6_spmv_formats.run,
+        "tab34": tab34_solver_convergence.run,
+        "fig89": fig89_solver_time.run,
+        "lm": lm_gse_serving.run,
+        "roofline": roofline.run,
+    }
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in suites.items():
+        if want and name not in want:
+            continue
+        try:
+            fn()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

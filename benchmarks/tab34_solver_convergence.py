@@ -1,0 +1,86 @@
+"""Paper Tables III/IV: solver iterations + relative residuals per format.
+
+CG (SPD suite) and GMRES (asymmetric suite) with FP64 / FP16 / BF16 /
+stepped GSE-SEM.  Expected phenomenology (paper): FP16 overflows or
+stalls on wide-range matrices, BF16 converges slowly or stalls, stepped
+GSE-SEM tracks FP64 (sometimes in fewer iterations).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core.precision import MonitorParams
+from repro.sparse import generators as G
+from repro.sparse.csr import pack_csr
+from repro.solvers import (
+    make_fixed_operator,
+    make_gse_operator,
+    solve_cg,
+    solve_gmres,
+)
+
+_PARAMS = MonitorParams(t=40, l=60, m=30, rsd_limit=0.5, reldec_limit=0.45)
+
+
+def _b(a, seed):
+    rng = np.random.default_rng(seed)
+    from repro.sparse.spmv import spmv
+
+    return jnp.asarray(np.asarray(spmv(a, jnp.asarray(
+        rng.normal(size=a.shape[1])))))
+
+
+def _fmt(res):
+    it = int(res.iters)
+    rr = float(res.relres)
+    rr_s = "/" if not np.isfinite(rr) else f"{rr:.1e}"
+    return it, rr, rr_s
+
+
+def run(maxiter_cg=1500, maxiter_gm=3000) -> dict:
+    out = {"cg": {}, "gmres": {}}
+
+    for i, (name, a) in enumerate(G.cg_suite(small=True).items()):
+        if a is None:
+            continue
+        b = _b(a, i)
+        g = pack_csr(a, k=8)
+        rows = {}
+        for label, op in {
+            "fp64": make_fixed_operator(a),
+            "fp16": make_fixed_operator(a, store_dtype=jnp.float16),
+            "bf16": make_fixed_operator(a, store_dtype=jnp.bfloat16),
+            "gse": make_gse_operator(g),
+        }.items():
+            res = solve_cg(op, b, tol=1e-6, maxiter=maxiter_cg,
+                           params=_PARAMS)
+            it, rr, rr_s = _fmt(res)
+            rows[label] = (it, rr)
+            emit(f"tab4_cg/{name}/{label}", 0.0,
+                 f"iters={it} relres={rr_s} tag={int(res.tag)}")
+        out["cg"][name] = rows
+
+    for i, (name, a) in enumerate(G.gmres_suite(small=True).items()):
+        b = _b(a, 100 + i)
+        g = pack_csr(a, k=8)
+        rows = {}
+        for label, op in {
+            "fp64": make_fixed_operator(a),
+            "fp16": make_fixed_operator(a, store_dtype=jnp.float16),
+            "bf16": make_fixed_operator(a, store_dtype=jnp.bfloat16),
+            "gse": make_gse_operator(g),
+        }.items():
+            res = solve_gmres(op, b, tol=1e-6, restart=30,
+                              maxiter=maxiter_gm, params=_PARAMS)
+            it, rr, rr_s = _fmt(res)
+            rows[label] = (it, rr)
+            emit(f"tab3_gmres/{name}/{label}", 0.0,
+                 f"iters={it} relres={rr_s} tag={int(res.tag)}")
+        out["gmres"][name] = rows
+    return out
+
+
+if __name__ == "__main__":
+    run()

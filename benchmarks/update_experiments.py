@@ -1,0 +1,22 @@
+"""Splice the regenerated roofline table into EXPERIMENTS.md."""
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+from emit_experiments_tables import roofline_markdown  # noqa: E402
+
+EXP = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+
+src = open(EXP).read()
+table = roofline_markdown()
+marker = "<!-- ROOFLINE_TABLE -->"
+if marker in src:
+    src = src.replace(marker, marker + "\n\n" + table)
+else:
+    # replace the previously spliced table (between marker-start comments)
+    src = re.sub(
+        r"(<!-- ROOFLINE_TABLE_START -->).*?(<!-- ROOFLINE_TABLE_END -->)",
+        r"\1\n" + table + r"\n\2", src, flags=re.S)
+open(EXP, "w").write(src)
+print("spliced roofline table:", len(table.splitlines()), "rows")

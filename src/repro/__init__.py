@@ -1,0 +1,3 @@
+"""repro: GSE-SEM precision-aware framework (paper reproduction + LM-scale)."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,158 @@
+"""Checkpointing: msgpack+zstd, async double-buffered, hash-verified,
+elastic re-sharding on restore.
+
+Fault-tolerance contract (DESIGN.md §5):
+  * ``save`` writes to a temp dir, fsyncs, verifies a content hash, then
+    atomically renames -- a crash mid-write never corrupts the latest
+    checkpoint (the previous one survives; ``latest_step`` skips partials).
+  * ``save_async`` does the serialization off-thread (double-buffered:
+    at most one outstanding write; the train loop never blocks on I/O
+    beyond the device->host copy).
+  * ``restore(..., target_sharding=...)`` re-shards arrays onto a
+    different mesh than they were saved from (elastic restart).
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import hashlib
+import json
+import os
+import shutil
+import struct
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard as zstd
+
+_EXEC = cf.ThreadPoolExecutor(max_workers=1)
+_PENDING: Dict[str, cf.Future] = {}
+_LOCK = threading.Lock()
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        flat[jax.tree_util.keystr(path)] = np.asarray(leaf)
+    return flat
+
+
+def _pack_array(a: np.ndarray) -> Dict:
+    return {
+        "dtype": str(a.dtype),
+        "shape": list(a.shape),
+        "data": a.tobytes(),
+    }
+
+
+def _unpack_array(d: Dict) -> np.ndarray:
+    return np.frombuffer(d["data"], dtype=np.dtype(d["dtype"])).reshape(
+        d["shape"]
+    )
+
+
+def save(path: str, tree: Any, step: int, extra: Optional[Dict] = None
+         ) -> str:
+    """Synchronous atomic save. Returns the final checkpoint dir."""
+    flat = _flatten(tree)
+    payload = {
+        "step": step,
+        "extra": extra or {},
+        "arrays": {k: _pack_array(v) for k, v in flat.items()},
+    }
+    raw = msgpack.packb(payload, use_bin_type=True)
+    comp = zstd.ZstdCompressor(level=3).compress(raw)
+    digest = hashlib.sha256(comp).hexdigest()
+
+    final = os.path.join(path, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    with open(os.path.join(tmp, "ckpt.msgpack.zst"), "wb") as f:
+        f.write(comp)
+        f.flush()
+        os.fsync(f.fileno())
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump({"step": step, "sha256": digest, "bytes": len(comp)}, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def save_async(path: str, tree: Any, step: int,
+               extra: Optional[Dict] = None) -> cf.Future:
+    """Double-buffered async save: waits for the previous write first
+    (bounded memory), then snapshots to host and hands off to a thread."""
+    with _LOCK:
+        prev = _PENDING.get(path)
+    if prev is not None:
+        prev.result()  # at most one outstanding write per path
+    host_tree = jax.tree.map(lambda x: np.asarray(x), tree)  # D2H now
+    fut = _EXEC.submit(save, path, host_tree, step, extra)
+    with _LOCK:
+        _PENDING[path] = fut
+    return fut
+
+
+def wait_pending(path: str) -> None:
+    with _LOCK:
+        fut = _PENDING.get(path)
+    if fut is not None:
+        fut.result()
+
+
+def latest_step(path: str) -> Optional[int]:
+    if not os.path.isdir(path):
+        return None
+    steps = []
+    for name in os.listdir(path):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            meta = os.path.join(path, name, "meta.json")
+            if os.path.exists(meta):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(path: str, step: int, like: Any,
+            target_sharding: Any = None) -> Any:
+    """Restore into the structure of ``like``.
+
+    ``target_sharding``: optional pytree of jax.sharding.Sharding matching
+    ``like`` -- arrays are placed (re-sharded) accordingly, enabling
+    elastic restarts onto a different mesh.
+    """
+    d = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+    with open(os.path.join(d, "ckpt.msgpack.zst"), "rb") as f:
+        comp = f.read()
+    if hashlib.sha256(comp).hexdigest() != meta["sha256"]:
+        raise IOError(f"checkpoint {d} failed integrity check")
+    payload = msgpack.unpackb(
+        zstd.ZstdDecompressor().decompress(comp), raw=False
+    )
+    arrays = {k: _unpack_array(v) for k, v in payload["arrays"].items()}
+
+    flat_like = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_keys, leaf in flat_like[0]:
+        key = jax.tree_util.keystr(path_keys)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        a = arrays[key]
+        if tuple(a.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {a.shape} vs {leaf.shape}"
+            )
+        leaves.append(a.astype(leaf.dtype))
+    tree = jax.tree_util.tree_unflatten(flat_like[1], leaves)
+    if target_sharding is not None:
+        tree = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), tree, target_sharding
+        )
+    return tree, payload["step"], payload["extra"]

@@ -1,0 +1,59 @@
+"""Architecture registry: --arch <id> resolves here.
+
+Each module defines ``config()`` (the exact assigned configuration),
+``smoke_config()`` (a reduced same-family config for CPU tests), and
+optionally ``RULES`` (per-arch logical->mesh sharding rule overrides).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Optional
+
+from repro.distributed.sharding import DEFAULT_RULES
+from repro.models.config import ModelConfig
+
+ARCH_IDS = (
+    "seamless_m4t_large_v2",
+    "internvl2_2b",
+    "qwen3_moe_235b_a22b",
+    "grok1_314b",
+    "recurrentgemma_2b",
+    "qwen15_32b",
+    "qwen3_4b",
+    "granite_34b",
+    "granite_3_2b",
+    "rwkv6_1p6b",
+)
+
+# accept dashed aliases from the assignment text
+ALIASES = {
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "internvl2-2b": "internvl2_2b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "grok-1-314b": "grok1_314b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "qwen1.5-32b": "qwen15_32b",
+    "qwen3-4b": "qwen3_4b",
+    "granite-34b": "granite_34b",
+    "granite-3-2b": "granite_3_2b",
+    "rwkv6-1.6b": "rwkv6_1p6b",
+}
+
+
+def _module(arch: str):
+    arch = ALIASES.get(arch, arch).replace("-", "_")
+    if arch not in ARCH_IDS and arch != "paper_solver":
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return importlib.import_module(f"repro.configs.{arch}")
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    mod = _module(arch)
+    return mod.smoke_config() if smoke else mod.config()
+
+
+def get_rules(arch: str) -> Dict:
+    mod = _module(arch)
+    rules = dict(DEFAULT_RULES)
+    rules.update(getattr(mod, "RULES", {}))
+    return rules

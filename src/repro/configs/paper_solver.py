@@ -1,0 +1,21 @@
+"""The paper's own workload: stepped mixed-precision CG / GMRES solving
+synthetic sparse systems (the 'architecture' of the paper itself).
+
+Not an LM config -- exposes solver entry points used by examples and
+benchmarks; kept in the registry so ``--arch paper_solver`` selects the
+paper-native path in drivers.
+"""
+from repro.core.precision import MonitorParams
+from repro.sparse import generators
+
+
+def cg_setup(name: str = "poisson2d_64", small: bool = True):
+    suite = generators.cg_suite(small)
+    a = suite.get(name) or generators.poisson2d(64)
+    return a, MonitorParams.for_cg()
+
+
+def gmres_setup(name: str = "convdiff_32", small: bool = True):
+    suite = generators.gmres_suite(small)
+    a = suite.get(name) or generators.convection_diffusion_2d(32)
+    return a, MonitorParams.for_gmres()

@@ -1,0 +1,43 @@
+"""seamless-m4t-large-v2 [audio, enc-dec]  (arXiv:2308.11596; hf).
+
+24L encoder + 24L decoder, d_model=1024, 16H (GQA kv=16), d_ff=8192,
+vocab=256206.  The speech frontend is a STUB: ``input_specs`` supplies
+precomputed frame embeddings to the encoder (per assignment).
+"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="seamless_m4t_large_v2",
+        family="encdec",
+        num_layers=24,
+        encoder_layers=24,
+        d_model=1024,
+        num_heads=16,
+        num_kv_heads=16,
+        d_ff=8192,
+        vocab_size=256206,
+        mlp_act="gelu",
+        frontend="audio_stub",
+        remat="full",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="seamless_smoke",
+        family="encdec",
+        num_layers=2,
+        encoder_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=128,
+        vocab_size=503,
+        mlp_act="gelu",
+        frontend="audio_stub",
+    )
+
+
+RULES = {}  # heads=16, kv=16, vocab, ff all divide the 16-way model axis

@@ -1,0 +1,27 @@
+"""Core of the paper's contribution: GSE-SEM format + stepped precision."""
+from repro.core import gse, precision, twofloat
+from repro.core.gse import (
+    GSEPacked,
+    decode,
+    decode_jnp,
+    extract_shared_exponents,
+    gse_fake_quant,
+    pack,
+    pack_with_table,
+)
+from repro.core.precision import MonitorParams, MonitorState
+
+__all__ = [
+    "gse",
+    "precision",
+    "twofloat",
+    "GSEPacked",
+    "decode",
+    "decode_jnp",
+    "extract_shared_exponents",
+    "gse_fake_quant",
+    "pack",
+    "pack_with_table",
+    "MonitorParams",
+    "MonitorState",
+]

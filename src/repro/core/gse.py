@@ -1,0 +1,477 @@
+"""GSE-SEM: Group-Shared-Exponent / Sign-ExponentIndex-Mantissa format.
+
+Paper: "Precision-Aware Iterative Algorithms Based on Group-Shared Exponents
+of Floating-Point Numbers" (Gao et al., 2024), Section III.B.
+
+Format spec (bit-exact, generalizing the paper's k=8 example):
+
+  * ``k`` shared exponents are extracted from the data (top-(k-1) by
+    frequency plus, mandatorily, the maximum exponent).  Each table entry is
+    stored as ``biased_exponent + 1`` -- the paper's denormalized convention
+    that makes the hidden leading 1 explicit.
+  * ``EI_BIT = ceil(log2(k))`` bits of each 16-bit *head* word index the
+    table.  ``M_H = 15 - EI_BIT`` mantissa bits remain in the head.
+  * The denormalized mantissa is a ``W = M_H + 48``-bit integer ``M`` such
+    that  ``value = (-1)^sign * M * 2^(E_sh - W)``  where
+    ``E_sh = table[expIdx] - BIAS`` is the *unbiased* shared exponent
+    (table stores biased+1, so subtracting the IEEE bias directly yields the
+    "+1" convention).  ``M`` is the 53-bit explicit-1 mantissa shifted by
+    ``W - 52 - minDiff`` (left when positive), ``minDiff >= 1`` being the
+    distance to the nearest shared exponent strictly above.
+  * Segments: head mantissa = top ``M_H`` bits of ``M``; tail1 = next 16
+    bits; tail2 = low 32 bits.  head/tail1/tail2 are stored as three
+    contiguous arrays (struct-of-arrays) -> one copy, three precisions:
+
+        tag=1  head                 (16 bits/val)
+        tag=2  head + tail1         (32 bits/val)
+        tag=3  head + tail1 + tail2 (64 bits/val)
+
+TPU adaptation (DESIGN.md section 2): decoding never bit-scans.  A
+denormalized mantissa is already an integer scaled by a power of two, so
+``decode = int->float convert * 2^(E_sh - width)`` -- one convert and one
+multiply per element, fully vectorizable on the VPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "GSEPacked",
+    "extract_shared_exponents",
+    "pack",
+    "pack_with_table",
+    "decode",
+    "decode_jnp",
+    "pack32_jnp",
+    "decode32_jnp",
+    "gse_fake_quant",
+    "exponent_stats",
+]
+
+_F64_BIAS = 1023
+_F64_FRAC = 52
+_F32_BIAS = 127
+_F32_FRAC = 23
+_BIG = np.int64(1 << 40)
+
+
+def _ei_bit(k: int) -> int:
+    if k < 2 or k > 4096:
+        raise ValueError(f"k must be in [2, 4096], got {k}")
+    return max(1, int(np.ceil(np.log2(k))))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class GSEPacked:
+    """A GSE-SEM packed tensor (pytree; segment arrays are leaves)."""
+
+    table: jnp.ndarray   # (k,) int32, biased exponent + 1
+    head: jnp.ndarray    # (...,) uint16: sign | expIdx | top mantissa
+    tail1: jnp.ndarray   # (...,) uint16: mantissa bits [W-M_H-16, W-M_H)
+    tail2: jnp.ndarray   # (...,) uint32: mantissa bits [0, 32)
+    ei_bit: int          # static
+    frac_bits: int       # static: 52 (f64 source) or 23 (f32 source)
+
+    @property
+    def m_h(self) -> int:
+        return 15 - self.ei_bit
+
+    @property
+    def width(self) -> int:
+        return self.m_h + 48 if self.frac_bits == _F64_FRAC else self.m_h + 16
+
+    @property
+    def shape(self):
+        return self.head.shape
+
+    def nbytes(self, tag: int) -> int:
+        n = int(np.prod(self.head.shape))
+        per = {1: 2, 2: 4, 3: 8}[tag]
+        return n * per + self.table.size * 4
+
+    def tree_flatten(self):
+        return (self.table, self.head, self.tail1, self.tail2), (
+            self.ei_bit,
+            self.frac_bits,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, ei_bit=aux[0], frac_bits=aux[1])
+
+
+# ---------------------------------------------------------------------------
+# Shared exponent extraction (paper section III.B.1)
+# ---------------------------------------------------------------------------
+
+def extract_shared_exponents(vals: np.ndarray, k: int) -> np.ndarray:
+    """Return the (k,) int32 table of shared exponents, stored biased+1.
+
+    Top-(k-1) biased exponents by frequency of occurrence, plus the maximum
+    exponent (paper: "one of the shared exponents must be the maximum
+    exponent of all non-zeros plus one; otherwise a few non-zeros may not be
+    represented").  Entries are sorted descending; unused slots repeat the
+    max entry (harmless: they are never the argmin of a positive diff).
+    """
+    v = np.asarray(vals, dtype=np.float64).ravel()
+    bits = v.view(np.uint64)
+    e_b = ((bits >> _F64_FRAC) & 0x7FF).astype(np.int64)
+    frac = bits & ((np.uint64(1) << np.uint64(_F64_FRAC)) - np.uint64(1))
+    nonzero = (e_b != 0) | (frac != 0)
+    e_eff = np.where(e_b != 0, e_b, 1)[nonzero]  # subnormals -> biased 1
+    if e_eff.size == 0:
+        return np.full((k,), 1, dtype=np.int32)
+    counts = np.bincount(e_eff, minlength=2048)
+    order = np.argsort(-counts, kind="stable")
+    top = [int(e) for e in order[: k] if counts[e] > 0]
+    e_max = int(e_eff.max())
+    if e_max not in top:
+        top = top[: k - 1] + [e_max]
+    table = np.asarray(top, dtype=np.int64) + 1  # denormalized convention
+    if table.size < k:
+        table = np.concatenate(
+            [table, np.full((k - table.size,), table.max(), dtype=np.int64)]
+        )
+    # Descending order: ties in minDiff resolve to identical encodings
+    # regardless of histogram order (stable for tests).
+    table = np.sort(table)[::-1]
+    return table.astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Packing (paper Algorithm 1, vectorized; f64 source)
+# ---------------------------------------------------------------------------
+
+def pack_with_table(vals: np.ndarray, table: np.ndarray, k: int) -> GSEPacked:
+    """Pack float64 ``vals`` against an existing shared-exponent table.
+
+    Values whose exponent is >= every table entry saturate to the largest
+    representable magnitude under the max table entry (overflow policy:
+    saturate; only reachable when reusing a stale table on new data).
+    """
+    ei = _ei_bit(k)
+    m_h = 15 - ei
+    w = m_h + 48
+    v = np.ascontiguousarray(np.asarray(vals, dtype=np.float64))
+    shp = v.shape
+    v = v.ravel()
+    bits = v.view(np.uint64)
+    sign = ((bits >> np.uint64(63)) & np.uint64(1)).astype(np.uint64)
+    e_b = ((bits >> np.uint64(_F64_FRAC)) & np.uint64(0x7FF)).astype(np.int64)
+    frac = (bits & ((np.uint64(1) << np.uint64(_F64_FRAC)) - np.uint64(1))).astype(
+        np.uint64
+    )
+    nonzero = (e_b != 0) | (frac != 0)
+    m53 = np.where(e_b != 0, (np.uint64(1) << np.uint64(_F64_FRAC)) | frac, frac)
+    e_eff = np.where(e_b != 0, e_b, 1)
+
+    tbl = np.asarray(table, dtype=np.int64)
+    diff = tbl[None, :] - e_eff[:, None]  # (n, k)
+    diff = np.where(diff > 0, diff, _BIG)
+    exp_idx = np.argmin(diff, axis=1).astype(np.uint64)
+    min_diff = diff[np.arange(diff.shape[0]), exp_idx]
+    overflow = min_diff >= _BIG  # value above all table entries
+    min_diff = np.where(overflow, 1, min_diff)
+
+    lsh = w - _F64_FRAC - min_diff  # left shift amount (may be negative)
+    m = np.where(
+        lsh >= 0,
+        m53 << np.maximum(lsh, 0).astype(np.uint64),
+        m53 >> np.minimum(np.maximum(-lsh, 0), 63).astype(np.uint64),
+    )
+    m = np.where(nonzero, m, np.uint64(0))
+    # Saturate overflowed values to all-ones mantissa under the max entry.
+    max_idx = np.uint64(np.argmax(tbl))
+    m = np.where(overflow & nonzero, (np.uint64(1) << np.uint64(w)) - np.uint64(1), m)
+    exp_idx = np.where(overflow & nonzero, max_idx, exp_idx)
+
+    head = (
+        (sign << np.uint64(15))
+        | (exp_idx << np.uint64(m_h))
+        | (m >> np.uint64(w - m_h))
+    ).astype(np.uint16)
+    tail1 = ((m >> np.uint64(32)) & np.uint64(0xFFFF)).astype(np.uint16)
+    tail2 = (m & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    return GSEPacked(
+        table=jnp.asarray(np.asarray(table, np.int32)),
+        head=jnp.asarray(head.reshape(shp)),
+        tail1=jnp.asarray(tail1.reshape(shp)),
+        tail2=jnp.asarray(tail2.reshape(shp)),
+        ei_bit=ei,
+        frac_bits=_F64_FRAC,
+    )
+
+
+def pack(vals: np.ndarray, k: int = 8) -> GSEPacked:
+    """Extract shared exponents from ``vals`` and pack (paper Algorithm 1)."""
+    table = extract_shared_exponents(vals, k)
+    return pack_with_table(vals, table, k)
+
+
+# ---------------------------------------------------------------------------
+# Decoding (paper Algorithm 2 semantics, TPU-native formulation)
+# ---------------------------------------------------------------------------
+
+def _decode_parts(
+    table, head, tail1, tail2, ei_bit: int, frac_bits: int, tag: int, xp
+):
+    """Shared numpy/jnp decode. Returns (sign_factor, mant_float, exp_scale_pow).
+
+    value = sign * mant * 2**pow  with  mant an integer-valued float.
+    """
+    m_h = 15 - ei_bit
+    w = m_h + 48 if frac_bits == _F64_FRAC else m_h + 16
+    h = head.astype(xp.uint32)
+    sign = (h >> 15) & 0x1
+    exp_idx = (h >> m_h) & ((1 << ei_bit) - 1)
+    m_head = (h & ((1 << m_h) - 1)).astype(xp.uint64 if xp is np else xp.uint32)
+
+    if tag == 1:
+        mant = m_head
+        bits_used = m_h
+    elif tag == 2:
+        mant = (m_head.astype(xp.uint64) << 16) | tail1.astype(xp.uint64)
+        bits_used = m_h + 16
+    elif tag == 3:
+        mant = (
+            (m_head.astype(xp.uint64) << 48)
+            | (tail1.astype(xp.uint64) << 32)
+            | tail2.astype(xp.uint64)
+        )
+        bits_used = w
+    else:
+        raise ValueError(f"tag must be 1, 2 or 3, got {tag}")
+
+    e_sh = table[exp_idx].astype(xp.int64 if xp is np else xp.int32) - (
+        _F64_BIAS if frac_bits == _F64_FRAC else _F32_BIAS
+    )
+    pow_ = e_sh - bits_used
+    sgn = 1.0 - 2.0 * sign.astype(xp.float64 if xp is np else xp.float32)
+    return sgn, mant, pow_
+
+
+def decode(packed: GSEPacked, tag: int = 3) -> np.ndarray:
+    """Numpy reference decode to float64. tag selects precision (1/2/3)."""
+    table = np.asarray(packed.table)
+    sgn, mant, pow_ = _decode_parts(
+        table,
+        np.asarray(packed.head),
+        np.asarray(packed.tail1),
+        np.asarray(packed.tail2),
+        packed.ei_bit,
+        packed.frac_bits,
+        tag,
+        np,
+    )
+    return sgn * np.ldexp(mant.astype(np.float64), pow_.astype(np.int64))
+
+
+def _pow2_exact(n: jnp.ndarray, dtype) -> jnp.ndarray:
+    """Exact 2**n for integer n, via exponent-field construction.
+
+    Exponents below the normal range clip to 0 (underflow-to-zero), above it
+    to the max finite binade (saturate) -- both only reachable when decoding
+    far outside the target dtype's range.
+    """
+    if dtype in (jnp.float64, np.float64):
+        e = jnp.clip(n.astype(jnp.int64) + _F64_BIAS, 0, 2046)
+        return jax.lax.bitcast_convert_type(
+            (e << _F64_FRAC).astype(jnp.uint64), jnp.float64
+        )
+    e = jnp.clip(n.astype(jnp.int32) + _F32_BIAS, 0, 254)
+    f = jax.lax.bitcast_convert_type((e << _F32_FRAC).astype(jnp.uint32), jnp.float32)
+    return f.astype(dtype)
+
+
+@partial(jax.jit, static_argnames=("ei_bit", "frac_bits", "tag", "dtype"))
+def _decode_jnp(table, head, tail1, tail2, ei_bit, frac_bits, tag, dtype):
+    m_h = 15 - ei_bit
+    w = m_h + 48 if frac_bits == _F64_FRAC else m_h + 16
+    h = head.astype(jnp.uint32)
+    sign = (h >> 15) & 0x1
+    exp_idx = (h >> m_h) & ((1 << ei_bit) - 1)
+    m_head = h & ((1 << m_h) - 1)
+
+    if tag == 1:
+        mant = m_head.astype(dtype)  # <= 15 bits: exact in f32
+        bits_used = m_h
+    elif tag == 2:
+        # <= 31 bits.  f32 rounds (24-bit significand); f64 exact.
+        mant = m_head.astype(dtype) * jnp.asarray(65536.0, dtype) + tail1.astype(
+            dtype
+        )
+        bits_used = m_h + 16
+    else:
+        mant = (
+            m_head.astype(dtype) * jnp.asarray(2.0**48, dtype)
+            + tail1.astype(dtype) * jnp.asarray(2.0**32, dtype)
+            + tail2.astype(dtype)
+        )
+        bits_used = w
+
+    e_sh = table[exp_idx].astype(jnp.int32) - (
+        _F64_BIAS if frac_bits == _F64_FRAC else _F32_BIAS
+    )
+    pow_ = e_sh - bits_used
+    # Exact power-of-two scales via exponent-field bitcast (XLA's exp2 is
+    # exp(x*ln2) and NOT correctly rounded).  Two factors so intermediate
+    # scales can't overflow; clipping gives IEEE-ish under/overflow.
+    half = pow_ // 2
+    sgn = 1.0 - 2.0 * sign.astype(dtype)
+    # Fold mant in before the second factor: scale1*scale2 alone can be
+    # subnormal (flushed to 0 on some backends) even when the final value
+    # is normal.
+    return sgn * ((mant * _pow2_exact(half, dtype)) * _pow2_exact(pow_ - half, dtype))
+
+
+def decode_jnp(packed: GSEPacked, tag: int = 3, dtype=jnp.float32) -> jnp.ndarray:
+    """Jittable decode: int->float convert + scale (no bit scan; DESIGN §2)."""
+    return _decode_jnp(
+        packed.table,
+        packed.head,
+        packed.tail1,
+        packed.tail2,
+        packed.ei_bit,
+        packed.frac_bits,
+        tag,
+        dtype,
+    )
+
+
+# ---------------------------------------------------------------------------
+# f32-source jittable pack (gradient compression / on-device quantization)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("k",))
+def extract_shared_exponents_jnp(vals: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Jittable top-k exponent extraction for f32 tensors (biased+1 table)."""
+    bits = jax.lax.bitcast_convert_type(vals.astype(jnp.float32), jnp.uint32)
+    e_b = ((bits >> _F32_FRAC) & 0xFF).astype(jnp.int32)
+    frac = bits & ((1 << _F32_FRAC) - 1)
+    nonzero = (e_b != 0) | (frac != 0)
+    e_eff = jnp.where(e_b != 0, e_b, 1)
+    counts = jnp.zeros((256,), jnp.int32).at[e_eff.ravel()].add(
+        nonzero.ravel().astype(jnp.int32)
+    )
+    _, top = jax.lax.top_k(counts, k - 1)
+    e_max = jnp.max(jnp.where(nonzero, e_eff, 0))
+    e_max = jnp.maximum(e_max, 1)
+    table = jnp.concatenate([top.astype(jnp.int32), e_max[None].astype(jnp.int32)])
+    # Deduplicate-against-max not required: duplicates are harmless.
+    table = jnp.sort(table + 1)[::-1]
+    return table
+
+
+@partial(jax.jit, static_argnames=("k",))
+def pack32_jnp(vals: jnp.ndarray, table: jnp.ndarray, k: int):
+    """Jittable f32 -> (head u16, tail1 u16) pack against a (k,) table.
+
+    W = M_H + 16; tag=1 (head) and tag=2 (head+tail1) available; tail2 is
+    conceptually zero for f32 sources (24-bit significand < W).
+    """
+    ei = _ei_bit(k)
+    m_h = 15 - ei
+    w = m_h + 16
+    x = vals.astype(jnp.float32)
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    sign = (bits >> 31) & 0x1
+    e_b = ((bits >> _F32_FRAC) & 0xFF).astype(jnp.int32)
+    frac = bits & ((1 << _F32_FRAC) - 1)
+    nonzero = (e_b != 0) | (frac != 0)
+    m24 = jnp.where(e_b != 0, (1 << _F32_FRAC) | frac, frac).astype(jnp.uint32)
+    e_eff = jnp.where(e_b != 0, e_b, 1)
+
+    diff = table.astype(jnp.int32)[None, :] - e_eff.ravel()[:, None]
+    diff = jnp.where(diff > 0, diff, jnp.int32(1 << 20))
+    exp_idx = jnp.argmin(diff, axis=1).astype(jnp.uint32).reshape(e_eff.shape)
+    min_diff = jnp.min(diff, axis=1).reshape(e_eff.shape)
+    overflow = min_diff >= (1 << 20)
+    min_diff = jnp.where(overflow, 1, min_diff)
+
+    lsh = w - _F32_FRAC - min_diff
+    # m24 << lsh for lsh in [-31, w-24]; emulate signed shift.
+    m = jnp.where(
+        lsh >= 0,
+        m24 << jnp.clip(lsh, 0, 31).astype(jnp.uint32),
+        m24 >> jnp.clip(-lsh, 0, 31).astype(jnp.uint32),
+    )
+    m = jnp.where(nonzero, m, 0)
+    m = jnp.where(overflow & nonzero, (1 << w) - 1, m)
+    max_idx = jnp.argmax(table).astype(jnp.uint32)
+    exp_idx = jnp.where(overflow & nonzero, max_idx, exp_idx)
+
+    head = (
+        (sign.astype(jnp.uint32) << 15) | (exp_idx << m_h) | (m >> 16)
+    ).astype(jnp.uint16)
+    tail1 = (m & 0xFFFF).astype(jnp.uint16)
+    return head, tail1
+
+
+@partial(jax.jit, static_argnames=("k", "tag", "dtype"))
+def decode32_jnp(table, head, tail1, k: int, tag: int = 1, dtype=jnp.float32):
+    """Jittable decode of an f32-source pack (tags 1 and 2)."""
+    ei = _ei_bit(k)
+    zeros = jnp.zeros(head.shape, jnp.uint32)
+    if tag not in (1, 2):
+        raise ValueError("f32-source packs support tags 1 and 2 only")
+    return _decode_jnp(table, head, tail1, zeros, ei, _F32_FRAC, tag, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fake-quant (straight-through) for stepped-precision training
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def gse_fake_quant(x: jnp.ndarray, k: int = 8, tag: int = 1) -> jnp.ndarray:
+    """decode(pack(x)) with identity gradient (straight-through estimator)."""
+    table = extract_shared_exponents_jnp(x, k)
+    head, tail1 = pack32_jnp(x, table, k)
+    return decode32_jnp(table, head, tail1, k, tag, jnp.float32).astype(x.dtype)
+
+
+def _fq_fwd(x, k, tag):
+    return gse_fake_quant(x, k, tag), None
+
+
+def _fq_bwd(k, tag, res, g):
+    return (g,)
+
+
+gse_fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Numeric-distribution statistics (paper Fig. 1)
+# ---------------------------------------------------------------------------
+
+def exponent_stats(vals: np.ndarray, top_ks=(1, 2, 4, 8, 16, 32, 64)) -> dict:
+    """Entropy of values / exponents / mantissas + top-k exponent coverage."""
+    v = np.asarray(vals, np.float64).ravel()
+    v = v[v != 0]
+    bits = v.view(np.uint64)
+    e_b = ((bits >> np.uint64(_F64_FRAC)) & np.uint64(0x7FF)).astype(np.int64)
+    frac = (bits & ((np.uint64(1) << np.uint64(52)) - np.uint64(1))).astype(np.uint64)
+
+    def entropy(arr):
+        _, counts = np.unique(arr, return_counts=True)
+        p = counts / counts.sum()
+        return float(-(p * np.log2(p)).sum())
+
+    counts = np.bincount(e_b, minlength=2048).astype(np.float64)
+    order = np.sort(counts)[::-1]
+    total = counts.sum()
+    cover = {f"top{k}": float(order[:k].sum() / total) for k in top_ks}
+    return {
+        "entropy_value": entropy(v),
+        "entropy_exponent": entropy(e_b),
+        "entropy_mantissa": entropy(frac >> np.uint64(32)),  # top 20 bits
+        "num_exponents": int((counts > 0).sum()),
+        **cover,
+    }

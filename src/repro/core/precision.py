@@ -1,0 +1,132 @@
+"""Stepped mixed-precision controller (paper Section III.D, Eq. 3-6).
+
+Pure-functional residual monitor usable inside ``jax.lax.while_loop``:
+state is a fixed-size ring buffer of recent residuals plus counters.
+
+Metrics over the trailing window of ``t`` residuals (paper Eq. 3-6):
+
+  RSD     relative standard deviation of the window
+  nDec    number of strict decreases resid[i] > resid[i+1]
+  relDec  (resid[j-t] - resid[j-1]) / resid[j-t]
+
+Switch-up conditions (any one fires => precision tag += 1):
+
+  C1:  RSD > rsd_limit  and  nDec < ndec_limit     (stall with oscillation)
+  C2:  nDec >= ndec_limit and relDec < reldec_limit (decreasing, too slowly)
+  C3:  nDec == 0                                    (no decrease at all)
+
+NOTE on paper fidelity: the paper's Condition-2 text is elliptical
+("nDec >= t/2 && relDec_limit"); its parameter list names an explicit
+``nDec_limit`` (80 for GMRES with t=300; 130 for CG with t=250).  We
+therefore use a configurable ``ndec_limit`` defaulting to ``t // 2`` and
+read C2 as ``relDec < reldec_limit``, which matches the prose ("the rate of
+residual decrease ... was slower").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["MonitorParams", "MonitorState", "init", "record", "metrics", "update_tag"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MonitorParams:
+    """Static controller parameters (paper Section IV.D.1)."""
+
+    t: int = 250              # trailing window length
+    l: int = 3000             # iterations before first possible switch
+    m: int = 500              # check cadence
+    rsd_limit: float = 0.50
+    reldec_limit: float = 0.45
+    ndec_limit: int | None = None  # default: t // 2
+    max_tag: int = 3
+
+    @property
+    def ndec(self) -> int:
+        return self.t // 2 if self.ndec_limit is None else self.ndec_limit
+
+    @classmethod
+    def for_gmres(cls) -> "MonitorParams":
+        return cls(t=300, l=9000, m=1500, rsd_limit=0.03, reldec_limit=0.08,
+                   ndec_limit=80)
+
+    @classmethod
+    def for_cg(cls) -> "MonitorParams":
+        return cls(t=250, l=3000, m=500, rsd_limit=0.50, reldec_limit=0.45,
+                   ndec_limit=130)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MonitorState:
+    hist: jnp.ndarray   # (t,) f64/f32 ring buffer of residuals
+    count: jnp.ndarray  # () int32 residuals recorded so far
+    tag: jnp.ndarray    # () int32 current precision tag (1..3)
+
+    def tree_flatten(self):
+        return (self.hist, self.count, self.tag), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+
+def init(params: MonitorParams, dtype=jnp.float64, tag: int = 1) -> MonitorState:
+    return MonitorState(
+        hist=jnp.full((params.t,), jnp.inf, dtype=dtype),
+        count=jnp.zeros((), jnp.int32),
+        tag=jnp.full((), tag, jnp.int32),
+    )
+
+
+def record(state: MonitorState, resid: jnp.ndarray) -> MonitorState:
+    """Push one residual into the ring buffer."""
+    t = state.hist.shape[0]
+    idx = state.count % t
+    return MonitorState(
+        hist=state.hist.at[idx].set(resid.astype(state.hist.dtype)),
+        count=state.count + 1,
+        tag=state.tag,
+    )
+
+
+def _ordered(state: MonitorState) -> jnp.ndarray:
+    """Window ordered oldest -> newest (resid[j-t] ... resid[j-1])."""
+    t = state.hist.shape[0]
+    return jnp.roll(state.hist, -(state.count % t))
+
+
+def metrics(state: MonitorState) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(RSD, nDec, relDec) over the trailing window (paper Eq. 3-6)."""
+    w = _ordered(state)
+    avg = jnp.mean(w)
+    rsd = jnp.sqrt(jnp.mean((w - avg) ** 2)) / jnp.maximum(avg, 1e-300)
+    ndec = jnp.sum((w[:-1] > w[1:]).astype(jnp.int32))
+    reldec = (w[0] - w[-1]) / jnp.where(w[0] == 0, 1.0, w[0])
+    return rsd, ndec, reldec
+
+
+def update_tag(state: MonitorState, params: MonitorParams) -> MonitorState:
+    """Evaluate the switch conditions; returns state with (possibly) tag+1.
+
+    Only acts when the window is full, ``count >= l``, and ``count % m == 0``
+    -- safe to call every iteration inside ``lax.while_loop``.
+    """
+    t = state.hist.shape[0]
+    due = (
+        (state.count >= params.l)
+        & (state.count >= t)
+        & (state.count % params.m == 0)
+        & (state.tag < params.max_tag)
+    )
+    rsd, ndec, reldec = metrics(state)
+    c1 = (rsd > params.rsd_limit) & (ndec < params.ndec)
+    c2 = (ndec >= params.ndec) & (reldec < params.reldec_limit)
+    c3 = ndec == 0
+    step = due & (c1 | c2 | c3)
+    new_tag = jnp.where(step, state.tag + 1, state.tag)
+    return MonitorState(hist=state.hist, count=state.count, tag=new_tag)

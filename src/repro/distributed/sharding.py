@@ -1,0 +1,135 @@
+"""Logical-axis sharding rules (MaxText-style) -> PartitionSpecs.
+
+Tensors declare *logical* axes (("embed","mlp"), ("batch","seq",...)); a
+per-arch rule table maps logical names to mesh axes.  Swapping a sharding
+strategy = swapping one dict -- this is the primary perf-hillclimb lever
+(DESIGN.md §5).
+
+Default rules target the production mesh (pod, data, model):
+  * weights: FSDP over ``data`` on the embed dim, TP over ``model`` on
+    heads / mlp / vocab / experts;
+  * activations: batch over (pod, data), model-parallel dims over model.
+
+``shard()`` inserts with_sharding_constraint only inside an active rules
+context (so single-device tests and benchmarks never touch meshes).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec
+
+_STATE = threading.local()
+
+
+DEFAULT_RULES: Dict[str, Any] = {
+    # -- weight dims --
+    "embed": "data",          # FSDP shard
+    "embed_out": "model",
+    "vocab": "model",
+    "qkv": "model",           # fused attention projections (H*hd)
+    "capacity": ("pod", "data"),  # MoE dispatch buffer token slots
+    "mlp": "model",
+    "expert_mlp": None,       # per-expert ff usually small; EP carries it
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "experts": "model",       # EP
+    "experts_router": None,
+    "layers": None,           # scan-stacked dim never sharded
+    "lru": "model",
+    "lru_in": None,
+    "conv_w": None,
+    "lora": None,
+    "rwkv_heads": "model",
+    # -- activation dims --
+    "batch": ("pod", "data"),
+    "seq": None,
+    "act_embed": None,
+    "act_mlp": "model",
+    "act_vocab": "model",
+    "kv": None,
+}
+
+
+def _mesh_axes() -> Tuple[str, ...]:
+    m = getattr(_STATE, "mesh", None)
+    return tuple(m.axis_names) if m is not None else ()
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Dict[str, Any], mesh=None):
+    """Activate a logical->mesh rule table (and optionally pin the mesh)."""
+    prev_r = getattr(_STATE, "rules", None)
+    prev_m = getattr(_STATE, "mesh", None)
+    _STATE.rules = rules
+    _STATE.mesh = mesh
+    try:
+        yield
+    finally:
+        _STATE.rules = prev_r
+        _STATE.mesh = prev_m
+
+
+def active_rules() -> Optional[Dict[str, Any]]:
+    return getattr(_STATE, "rules", None)
+
+
+def logical_to_pspec(axes: Tuple[Optional[str], ...],
+                     rules: Optional[Dict[str, Any]] = None) -> PartitionSpec:
+    """Map a tuple of logical axis names to a PartitionSpec.
+
+    A mesh axis may appear at most once in the result: later logical axes
+    that resolve to an already-used mesh axis fall back to replication
+    (standard MaxText conflict rule).
+    """
+    rules = rules if rules is not None else (active_rules() or DEFAULT_RULES)
+    mesh_axes = _mesh_axes()
+    used = set()
+    out = []
+    for name in axes:
+        r = rules.get(name) if name is not None else None
+        if r is None:
+            out.append(None)
+            continue
+        cand = (r,) if isinstance(r, str) else tuple(r)
+        # Keep only axes that exist on the current mesh (if known) and are
+        # not yet used by an earlier dim.
+        keep = tuple(
+            a for a in cand
+            if a not in used and (not mesh_axes or a in mesh_axes)
+        )
+        used.update(keep)
+        if not keep:
+            out.append(None)
+        elif len(keep) == 1:
+            out.append(keep[0])
+        else:
+            out.append(keep)
+    while out and out[-1] is None:
+        out.pop()
+    return PartitionSpec(*out)
+
+
+def specs_to_pspecs(spec_tree, rules=None):
+    """Map a tree of logical-axis tuples to a tree of PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes: logical_to_pspec(axes, rules),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(a, str) or a is None for a in x),
+    )
+
+
+def shard(x, *axes):
+    """Constrain ``x`` to the PartitionSpec its logical ``axes`` resolve to.
+
+    No-op when no rules context is active (single-device tests, benches).
+    """
+    rules = active_rules()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, logical_to_pspec(axes, rules))

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the GSE-SEM hot spots (+ jnp oracles in ref.py).
+
+  gse_decode  -- segment decode -> f32 tiles (VPU)
+  gse_spmv    -- blocked-ELL SpMV with fused decode (paper Algorithm 2)
+  gse_matmul  -- dense matmul with GSE-SEM packed weights (LM serving)
+
+All validated in interpret mode against ref.py; ops.py holds the jit'd
+public wrappers (padding, scale LUTs, interpret-mode selection).
+"""
+from repro.kernels import ops, ref
+from repro.kernels.ops import ell_pack_gsecsr, gse_decode, gse_matmul, gse_spmv_ell
+
+__all__ = ["ops", "ref", "gse_decode", "gse_matmul", "gse_spmv_ell",
+           "ell_pack_gsecsr"]

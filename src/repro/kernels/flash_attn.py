@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: flash attention (online softmax, tiled in VMEM).
+
+The fix for the score-traffic wall identified in EXPERIMENTS.md §Perf
+cell C: scores (bq, bk) tiles and the running (m, l, acc) state live in
+VMEM scratch; the (S, T) score matrix never exists in HBM.
+
+Grid: (B*H, S/bq, T/bk) -- the kv axis is innermost and accumulates into
+scratch; output is written on the last kv step.  Causal masking uses
+global indices so arbitrary (bq, bk) tilings are correct.
+
+Forward-only (serving / prefill); training backward would pair this with
+a custom_vjp twin (standard flash-attention construction) -- the forward
+here is the pattern proof, interpret-validated against ref.flash_ref.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def _flash_body(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                scale: float, causal: bool, bq: int, bk: int, nk: int):
+    i_q = pl.program_id(1)
+    i_k = pl.program_id(2)
+
+    @pl.when(i_k == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)           # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)           # (bk, hd)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                   # (bq, bk)
+    if causal:
+        qi = i_q * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kj = i_k * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(kj <= qi, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])             # (bq, bk)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = (
+        acc_ref[...] * corr[:, None]
+        + jax.lax.dot_general(
+            p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    )
+    m_ref[...] = m_new
+
+    @pl.when(i_k == nk - 1)
+    def _fin():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "blocks", "interpret"),
+)
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           blocks=(128, 128), interpret: bool = True):
+    """q: (BH, S, hd); k, v: (BH, T, hd) -> (BH, S, hd).
+
+    S % bq == 0 and T % bk == 0 (pad upstream); hd MXU-aligned preferred.
+    """
+    bh, s_len, hd = q.shape
+    t_len = k.shape[1]
+    bq, bk = blocks
+    assert s_len % bq == 0 and t_len % bk == 0, (q.shape, k.shape, blocks)
+    nq, nk = s_len // bq, t_len // bk
+    scale = 1.0 / math.sqrt(hd)
+
+    return pl.pallas_call(
+        functools.partial(_flash_body, scale=scale, causal=causal,
+                          bq=bq, bk=bk, nk=nk),
+        out_shape=jax.ShapeDtypeStruct((bh, s_len, hd), q.dtype),
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, iq, ik: (b, ik, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, iq, ik: (b, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, iq, ik: (b, iq, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),     # running max m
+            pltpu.VMEM((bq,), jnp.float32),     # running sum l
+            pltpu.VMEM((bq, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: x @ W with W stored in GSE-SEM segments.
+
+The LM-serving hot spot (DESIGN.md §3.1): weights live in HBM as
+head/tail1/tail2 streams; each (BK, BN) tile is decoded to f32 *in VMEM*
+and fed straight to the MXU -- the dequantized matrix never exists in HBM.
+At tag=1 the weight stream reads 2 bytes/element instead of 4 (f32) or
+8 (f64 master): the memory roofline term for memory-bound decode drops
+proportionally.
+
+Grid: (M/BM, N/BN, K/BK), K innermost (sequential accumulation into the
+output tile).  MXU alignment: BM,BN,BK multiples of 128 on real hardware
+(tests use smaller interpret-mode tiles where noted).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.gse_decode import _select_scale
+
+__all__ = ["gse_matmul_pallas"]
+
+
+def _matmul_body(scales_ref, x_ref, head_ref, tail1_ref, tail2_ref, out_ref, *,
+                 ei_bit: int, tag: int, k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    h = head_ref[...].astype(jnp.uint32)
+    m_h = 15 - ei_bit
+    sgn = 1.0 - 2.0 * ((h >> 15) & 0x1).astype(jnp.float32)
+    exp_idx = ((h >> m_h) & ((1 << ei_bit) - 1)).astype(jnp.int32)
+    mant = (h & ((1 << m_h) - 1)).astype(jnp.float32)
+    if tag >= 2:
+        mant = mant * jnp.float32(65536.0) + tail1_ref[...].astype(jnp.float32)
+    if tag == 3:
+        mant = mant * jnp.float32(2.0**32) + tail2_ref[...].astype(jnp.float32)
+    w = sgn * mant * _select_scale(exp_idx, scales_ref, k)
+    out_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32), w, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("ei_bit", "tag", "blocks", "interpret"),
+)
+def gse_matmul_pallas(x, head, tail1, tail2, scales, *, ei_bit: int, tag: int,
+                      blocks=(8, 128, 128), interpret: bool = True):
+    """x: (M, K); head/tail1: (K, N) u16; tail2: (K, N) u32; scales (1, k)."""
+    m, kk = x.shape
+    kk2, n = head.shape
+    assert kk == kk2
+    bm, bn, bk = blocks
+    assert m % bm == 0 and n % bn == 0 and kk % bk == 0, (x.shape, head.shape, blocks)
+    nk = scales.shape[1]
+    grid = (m // bm, n // bn, kk // bk)
+    w_spec = pl.BlockSpec((bk, bn), lambda i, j, l: (l, j))
+    return pl.pallas_call(
+        functools.partial(_matmul_body, ei_bit=ei_bit, tag=tag, k=nk),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, nk), lambda i, j, l: (0, 0)),
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            w_spec, w_spec, w_spec,
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        interpret=interpret,
+    )(scales, x, head, tail1, tail2)

@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: blocked-ELL SpMV with fused GSE-SEM decode.
+
+The paper's SpMV (Algorithm 2) re-thought for TPU (DESIGN.md §2):
+
+  * rows padded to lane-aligned ELL width L -> dense (BM, BL) tiles;
+  * expIdx rides the top EI_BIT bits of colpak (paper III.C.1), leaving
+    all 15 non-sign head bits as mantissa;
+  * decode = int->f32 convert * LUT scale (no __fns bit scan);
+  * x is pinned in VMEM per block (single-chip kernel; the distributed
+    layer shards rows across chips so each shard's x-slice fits VMEM).
+
+Grid: (M/BM, L/BL); the L axis accumulates sequentially into the output
+rows.  Padded slots carry col=0, head=0 -> mantissa 0 -> contribute 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.gse_decode import _select_scale
+
+__all__ = ["gse_spmv_pallas"]
+
+
+def _spmv_body(scales_ref, colpak_ref, head_ref, tail1_ref, tail2_ref, x_ref,
+               out_ref, *, ei_bit: int, tag: int, k: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    cp = colpak_ref[...].astype(jnp.uint32)
+    shift = 32 - ei_bit
+    exp_idx = (cp >> shift).astype(jnp.int32)
+    col = (cp & ((1 << shift) - 1)).astype(jnp.int32)
+
+    h = head_ref[...].astype(jnp.uint32)
+    sgn = 1.0 - 2.0 * ((h >> 15) & 0x1).astype(jnp.float32)
+    mant = (h & 0x7FFF).astype(jnp.float32)
+    if tag >= 2:
+        mant = mant * jnp.float32(65536.0) + tail1_ref[...].astype(jnp.float32)
+    if tag == 3:
+        mant = mant * jnp.float32(2.0**32) + tail2_ref[...].astype(jnp.float32)
+    vals = sgn * mant * _select_scale(exp_idx, scales_ref, k)
+
+    xv = x_ref[0, :]                      # (N,) in VMEM
+    xg = xv[col.reshape(-1)].reshape(col.shape)
+    out_ref[...] += jnp.sum(vals * xg, axis=1, keepdims=True)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("ei_bit", "tag", "blocks", "interpret"),
+)
+def gse_spmv_pallas(colpak, head, tail1, tail2, x, scales, *, ei_bit: int,
+                    tag: int, blocks=(8, 128), interpret: bool = True):
+    """colpak/head/tail1/tail2: (M, L); x: (N,); scales: (1, k)."""
+    m, L = colpak.shape
+    bm, bl = blocks
+    assert m % bm == 0 and L % bl == 0, (colpak.shape, blocks)
+    n = x.shape[0]
+    nk = scales.shape[1]
+    grid = (m // bm, L // bl)
+    tile = pl.BlockSpec((bm, bl), lambda i, l: (i, l))
+    return pl.pallas_call(
+        functools.partial(_spmv_body, ei_bit=ei_bit, tag=tag, k=nk),
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, nk), lambda i, l: (0, 0)),
+            tile, tile, tile, tile,
+            pl.BlockSpec((1, n), lambda i, l: (0, 0)),  # x pinned in VMEM
+        ],
+        out_specs=pl.BlockSpec((bm, 1), lambda i, l: (i, 0)),
+        interpret=interpret,
+    )(scales, colpak, head, tail1, tail2, x.reshape(1, n))

@@ -1,0 +1,121 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles padding to tile multiples, scale-LUT precomputation, and
+interpret-mode selection (interpret=True on CPU, compiled on TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gse import GSEPacked
+from repro.kernels import ref
+from repro.kernels.gse_decode import decode_pallas
+from repro.kernels.gse_matmul import gse_matmul_pallas
+from repro.kernels.gse_spmv import gse_spmv_pallas
+from repro.sparse.csr import GSECSR
+
+__all__ = ["gse_decode", "gse_matmul", "gse_spmv_ell", "ell_pack_gsecsr"]
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad2(a, bm, bn):
+    m, n = a.shape
+    pm = (-m) % bm
+    pn = (-n) % bn
+    if pm or pn:
+        a = jnp.pad(a, ((0, pm), (0, pn)))
+    return a
+
+
+def gse_decode(packed: GSEPacked, tag: int = 1, block=(8, 128),
+               interpret: bool | None = None) -> jnp.ndarray:
+    """Decode a dense GSE-SEM tensor to f32 via the Pallas kernel."""
+    if interpret is None:
+        interpret = _interpret_default()
+    shape = packed.head.shape
+    head2 = packed.head.reshape(1, -1) if packed.head.ndim == 1 else packed.head
+    t1 = packed.tail1.reshape(head2.shape)
+    t2 = packed.tail2.reshape(head2.shape)
+    bm, bn = block
+    m0, n0 = head2.shape
+    head2, t1, t2 = _pad2(head2, bm, bn), _pad2(t1, bm, bn), _pad2(t2, bm, bn)
+    m_h = 15 - packed.ei_bit
+    bits_used = {1: m_h, 2: m_h + 16, 3: m_h + 48}[tag]
+    scales = ref.make_scales(packed.table, bits_used).reshape(1, -1)
+    out = decode_pallas(head2, t1, t2, scales, ei_bit=packed.ei_bit, tag=tag,
+                        block=block, interpret=interpret)
+    return out[:m0, :n0].reshape(shape)
+
+
+def gse_matmul(x: jnp.ndarray, packed: GSEPacked, tag: int = 1,
+               blocks=(8, 128, 128), interpret: bool | None = None):
+    """x @ decode(W) with fused in-VMEM dequantization.
+
+    x: (M, K) float; packed: GSE-SEM weights of logical shape (K, N).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    bm, bn, bk = blocks
+    kk, n = packed.head.shape
+    m = x.shape[0]
+    x2 = _pad2(x, bm, bk)
+    head = _pad2(packed.head, bk, bn)
+    t1 = _pad2(packed.tail1, bk, bn)
+    t2 = _pad2(packed.tail2, bk, bn)
+    m_h = 15 - packed.ei_bit
+    bits_used = {1: m_h, 2: m_h + 16, 3: m_h + 48}[tag]
+    scales = ref.make_scales(packed.table, bits_used).reshape(1, -1)
+    out = gse_matmul_pallas(x2, head, t1, t2, scales, ei_bit=packed.ei_bit,
+                            tag=tag, blocks=blocks, interpret=interpret)
+    return out[:m, :n]
+
+
+def ell_pack_gsecsr(a: GSECSR, lane: int = 128):
+    """GSE-SEM CSR -> padded ELL segment arrays for the SpMV kernel.
+
+    Returns (colpak, head, tail1, tail2) each (rows, L) with L lane-aligned.
+    Padded slots: colpak=0, head=0 (mantissa 0 -> decodes to +0.0).
+    """
+    rowptr = np.asarray(a.rowptr, np.int64)
+    m = a.shape[0]
+    per_row = np.diff(rowptr)
+    L = int(max(1, per_row.max()))
+    L = ((L + lane - 1) // lane) * lane
+    rows = np.repeat(np.arange(m), per_row)
+    slot = np.arange(rowptr[-1]) - np.repeat(rowptr[:-1], per_row)
+
+    def scatter(src, dtype):
+        out = np.zeros((m, L), dtype)
+        out[rows, slot] = np.asarray(src)
+        return jnp.asarray(out)
+
+    return (
+        scatter(a.colpak, np.uint32),
+        scatter(a.head, np.uint16),
+        scatter(a.tail1, np.uint16),
+        scatter(a.tail2, np.uint32),
+    )
+
+
+def gse_spmv_ell(ell, table, x: jnp.ndarray, ei_bit: int, tag: int = 1,
+                 blocks=(8, 128), interpret: bool | None = None):
+    """y = A @ x from ELL-packed GSE-SEM segments (Pallas kernel)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    colpak, head, t1, t2 = ell
+    bm, bl = blocks
+    m0 = colpak.shape[0]
+    colpak, head = _pad2(colpak, bm, bl), _pad2(head, bm, bl)
+    t1, t2 = _pad2(t1, bm, bl), _pad2(t2, bm, bl)
+    bits_used = {1: 15, 2: 31, 3: 63}[tag]
+    scales = ref.make_scales(table, bits_used).reshape(1, -1)
+    out = gse_spmv_pallas(colpak, head, t1, t2, x, scales, ei_bit=ei_bit,
+                          tag=tag, blocks=blocks, interpret=interpret)
+    return out[:m0, 0]

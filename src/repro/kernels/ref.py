@@ -1,0 +1,107 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are the ground truth the interpret-mode kernels are swept against.
+All decode math matches the kernels' f32 discipline: mantissa segments are
+combined in f32 (tag-2/3 mantissas round to 24 bits -- inherent to an f32
+output) and scales come from a per-tag power-of-two LUT.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gse import _pow2_exact
+
+__all__ = ["make_scales", "decode_ref", "spmv_ell_ref", "matmul_ref"]
+
+
+def make_scales(table: jnp.ndarray, bits_used: int, bias: int = 1023,
+                dtype=jnp.float32) -> jnp.ndarray:
+    """Per-exponent-index decode scales: 2^(E_sh - bits_used), exact."""
+    pow_ = table.astype(jnp.int32) - bias - bits_used
+    half = pow_ // 2
+    return _pow2_exact(half, dtype) * _pow2_exact(pow_ - half, dtype)
+
+
+def _split_head(head: jnp.ndarray, ei_bit: int):
+    h = head.astype(jnp.uint32)
+    sign = (h >> 15) & 0x1
+    m_h = 15 - ei_bit
+    exp_idx = ((h >> m_h) & ((1 << ei_bit) - 1)).astype(jnp.int32)
+    m_head = (h & ((1 << m_h) - 1)).astype(jnp.float32)
+    sgn = (1.0 - 2.0 * sign.astype(jnp.float32))
+    return sgn, exp_idx, m_head
+
+
+def _mant(m_head, tail1, tail2, tag):
+    if tag == 1:
+        return m_head
+    if tag == 2:
+        return m_head * jnp.float32(65536.0) + tail1.astype(jnp.float32)
+    return (
+        m_head * jnp.float32(2.0**48)
+        + tail1.astype(jnp.float32) * jnp.float32(2.0**32)
+        + tail2.astype(jnp.float32)
+    )
+
+
+def _bits_used(ei_bit: int, tag: int) -> int:
+    m_h = 15 - ei_bit
+    return {1: m_h, 2: m_h + 16, 3: m_h + 48}[tag]
+
+
+@partial(jax.jit, static_argnames=("ei_bit", "tag"))
+def decode_ref(head, tail1, tail2, table, ei_bit: int, tag: int):
+    """Oracle for the gse_decode kernel: packed segments -> f32 values."""
+    sgn, exp_idx, m_head = _split_head(head, ei_bit)
+    mant = _mant(m_head, tail1, tail2, tag)
+    scales = make_scales(table, _bits_used(ei_bit, tag))
+    return sgn * mant * scales[exp_idx]
+
+
+@partial(jax.jit, static_argnames=("ei_bit", "tag"))
+def spmv_ell_ref(colpak, head, tail1, tail2, table, x, ei_bit: int, tag: int):
+    """Oracle for gse_spmv: blocked-ELL y = A @ x with fused decode.
+
+    ELL layout: (rows, L) arrays; expIdx sits in the top bits of colpak
+    (paper III.C.1) so the head keeps 15 mantissa bits.
+    """
+    shift = 32 - ei_bit
+    exp_idx = (colpak.astype(jnp.uint32) >> shift).astype(jnp.int32)
+    col = (colpak.astype(jnp.uint32) & ((1 << shift) - 1)).astype(jnp.int32)
+    h = head.astype(jnp.uint32)
+    sgn = 1.0 - 2.0 * ((h >> 15) & 0x1).astype(jnp.float32)
+    m_head = (h & 0x7FFF).astype(jnp.float32)
+    mant = _mant(m_head, tail1, tail2, tag)
+    bits_used = {1: 15, 2: 31, 3: 63}[tag]
+    scales = make_scales(table, bits_used)
+    vals = sgn * mant * scales[exp_idx]
+    return jnp.sum(vals * x.astype(jnp.float32)[col], axis=1)
+
+
+@partial(jax.jit, static_argnames=("ei_bit", "tag"))
+def matmul_ref(x, head, tail1, tail2, table, ei_bit: int, tag: int):
+    """Oracle for gse_matmul: x @ decode(W); f32 accumulate."""
+    w = decode_ref(head, tail1, tail2, table, ei_bit, tag)
+    return jnp.dot(
+        x.astype(jnp.float32), w, preferred_element_type=jnp.float32
+    )
+
+
+@partial(jax.jit, static_argnames=("causal",))
+def flash_ref(q, k, v, causal: bool = True):
+    """Oracle for flash_attention_pallas: plain softmax attention."""
+    import math
+
+    hd = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    if causal:
+        i = jnp.arange(q.shape[1])[:, None]
+        j = jnp.arange(k.shape[1])[None, :]
+        s = jnp.where(j <= i, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

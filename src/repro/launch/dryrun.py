@@ -1,0 +1,361 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (assignment deliverable e).
+
+Lowers + compiles every (architecture x input-shape x mesh) cell with
+ShapeDtypeStruct inputs (no allocation), prints memory_analysis() and
+cost_analysis(), extracts collective wire bytes from the partitioned HLO,
+and caches per-cell roofline records in dryrun_results/*.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_4b \
+      --shape train_4k [--multi-pod] [--all] [--force]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro import configs
+from repro.distributed import sharding as SH
+from repro.launch import hlo as H
+from repro.launch import shapes as SHP
+from repro.launch.mesh import HW, make_production_mesh
+from repro.models import stepfns
+from repro.models import transformer as T
+from repro.optim import AdamW
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "dryrun_results")
+
+
+def _fit_pspec(ps: PartitionSpec, shape, mesh) -> PartitionSpec:
+    """Drop mesh axes that don't divide the corresponding dim.
+
+    jit in_shardings require exact divisibility (unlike internal
+    with_sharding_constraint, which pads); batch=1 decode shapes and odd
+    dims (e.g. grok's 8 experts on the 16-way axis) fall back toward
+    replication on that dim.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for i, entry in enumerate(tuple(ps)):
+        if entry is None or i >= len(shape):
+            out.append(None)
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        # progressively drop trailing axes until the product divides
+        while axes:
+            prod = 1
+            for a in axes:
+                prod *= sizes[a]
+            if shape[i] % prod == 0:
+                break
+            axes = axes[:-1]
+        out.append(None if not axes else
+                   (axes[0] if len(axes) == 1 else axes))
+    while out and out[-1] is None:
+        out.pop()
+    return PartitionSpec(*out)
+
+
+def _ns(mesh, spec_tree, rules, shapes_tree=None):
+    pspecs = SH.specs_to_pspecs(spec_tree, rules)
+    if shapes_tree is None:
+        return jax.tree.map(
+            lambda ps: NamedSharding(mesh, ps), pspecs,
+            is_leaf=lambda x: isinstance(x, PartitionSpec),
+        )
+    return jax.tree.map(
+        lambda ps, shp: NamedSharding(
+            mesh, _fit_pspec(ps, shp.shape, mesh)
+        ),
+        pspecs, shapes_tree,
+        is_leaf=lambda x: isinstance(x, PartitionSpec),
+    )
+
+
+def _param_count(shapes_tree) -> int:
+    return sum(
+        int(jnp.prod(jnp.asarray(l.shape)))
+        for l in jax.tree.leaves(shapes_tree)
+    )
+
+
+def _active_param_count(cfg, shapes_tree) -> float:
+    """MoE: experts contribute k/E of their params to the active count."""
+    total = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes_tree)[0]:
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        keys = "/".join(str(getattr(p, "key", getattr(p, "idx", ""))) for p in path)
+        if cfg.num_experts and ("w_gate" in keys or "w_up" in keys
+                                or "w_down" in keys) and "moe" in keys:
+            n = n * cfg.experts_per_token / cfg.num_experts
+        total += n
+    return total
+
+
+def model_flops(cfg, shape_spec, n_active: float) -> float:
+    """6*N*D (train) / 2*N*D (prefill) / 2*N*B (decode) -- embedding and
+    attention-quadratic terms excluded by convention (noted in report)."""
+    b, s = shape_spec["global_batch"], shape_spec["seq_len"]
+    kind = shape_spec["kind"]
+    if kind == "train":
+        return 6.0 * n_active * b * s
+    if kind == "prefill":
+        return 2.0 * n_active * b * s
+    return 2.0 * n_active * b  # decode: one token per request
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               rules_override: Dict = None, tag: str = "baseline",
+               cfg_overrides: Dict = None) -> Dict:
+    import dataclasses
+
+    cfg = configs.get_config(arch)
+    if cfg_overrides:
+        ov = dict(cfg_overrides)
+        if "compute_dtype" in ov:
+            ov["compute_dtype"] = getattr(jnp, ov["compute_dtype"])
+        if "param_dtype" in ov:
+            ov["param_dtype"] = getattr(jnp, ov["param_dtype"])
+        cfg = dataclasses.replace(cfg, **ov)
+    shape_spec = SHP.SHAPES[shape_name]
+    ok, why = SHP.applicable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = configs.get_rules(arch)
+    if rules_override:
+        rules.update(rules_override)
+    n_chips = 512 if multi_pod else 256
+
+    kind = shape_spec["kind"]
+    key = jax.random.key(0)
+    t0 = time.time()
+
+    with SH.axis_rules(rules, mesh):
+        # --- shapes (no allocation; specs are static -> side channel) ---
+        captured = {}
+
+        def _init_only_params(k):
+            p, s = T.init_params(cfg, k)
+            captured["specs"] = s
+            return p
+
+        pshapes = jax.eval_shape(_init_only_params, key)
+        pspecs_tree = captured["specs"]
+        params_sh = _ns(mesh, pspecs_tree, rules, pshapes)
+        batch_spec = SHP.input_specs(cfg, shape_name)
+        batch_sh = _ns(mesh, SHP.batch_logical_axes(batch_spec), rules,
+                       batch_spec)
+
+        if kind == "train":
+            opt = AdamW(total_steps=10000)
+            state_shapes = stepfns.TrainState(
+                params=pshapes,
+                opt_state=jax.eval_shape(opt.init, pshapes),
+                step=jax.ShapeDtypeStruct((), jnp.int32),
+            )
+            opt_sh = type(jax.eval_shape(opt.init, pshapes))(
+                mu=params_sh, nu=params_sh
+            )
+            state_sh = stepfns.TrainState(
+                params=params_sh, opt_state=opt_sh,
+                step=NamedSharding(mesh, PartitionSpec()),
+            )
+            step_fn = stepfns.make_train_step(cfg, opt)
+            with mesh:
+                lowered = jax.jit(
+                    step_fn,
+                    in_shardings=(state_sh, batch_sh),
+                    donate_argnums=(0,),
+                ).lower(state_shapes, batch_spec)
+        elif kind == "prefill":
+            prefill = stepfns.make_prefill_step(cfg)
+
+            def pf(params, batch):
+                return prefill(params, batch["tokens"],
+                               prefix_embeds=batch.get("prefix_embeds"),
+                               enc_embeds=batch.get("enc_embeds"))
+
+            with mesh:
+                lowered = jax.jit(
+                    pf, in_shardings=(params_sh, batch_sh)
+                ).lower(pshapes, batch_spec)
+        else:  # decode
+            s = shape_spec["seq_len"]
+            b = shape_spec["global_batch"]
+            dstate_shapes = jax.eval_shape(
+                lambda: T.decode_state_init(cfg, b, s)
+            )
+            dstate_sh = _ns(mesh, T.decode_state_specs(cfg), rules,
+                            dstate_shapes)
+            serve = stepfns.make_serve_step(cfg)
+            inp = SHP.input_specs(cfg, shape_name)
+
+            if cfg.family == "encdec":
+                def sv(params, state, tokens, pos, enc_out):
+                    return serve(params, state, tokens, pos, enc_out)
+                args = (pshapes, dstate_shapes, inp["tokens"], inp["pos"],
+                        inp["enc_out"])
+                shard_args = (params_sh, dstate_sh, batch_sh["tokens"],
+                              NamedSharding(mesh, PartitionSpec()),
+                              batch_sh["enc_out"])
+            else:
+                def sv(params, state, tokens, pos):
+                    return serve(params, state, tokens, pos)
+                args = (pshapes, dstate_shapes, inp["tokens"], inp["pos"])
+                shard_args = (params_sh, dstate_sh, batch_sh["tokens"],
+                              NamedSharding(mesh, PartitionSpec()))
+            with mesh:
+                lowered = jax.jit(
+                    sv, in_shardings=shard_args, donate_argnums=(1,)
+                ).lower(*args)
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    text = compiled.as_text()
+    # While-aware analysis (XLA cost_analysis counts scan bodies once).
+    ana = H.analyze(text)
+    flops_dev = ana["flops"]
+    bytes_dev = ana["bytes"]
+    coll_total = ana["coll_bytes"]
+    coll_by_kind = ana["coll_by_kind"]
+    coll_counts = ana["coll_counts"]
+
+    n_active = _active_param_count(cfg, pshapes)
+    n_total = _param_count(pshapes)
+    mf = model_flops(cfg, shape_spec, n_active)
+    terms = H.roofline_terms(flops_dev, bytes_dev, coll_total, HW)
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "tag": tag,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": n_chips,
+        "skipped": False,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "params_total": n_total,
+        "params_active": n_active,
+        "model_flops_global": mf,
+        "hlo_flops_per_dev": flops_dev,
+        "hlo_bytes_per_dev": bytes_dev,
+        "collective_bytes_per_dev": coll_total,
+        "collective_by_kind": coll_by_kind,
+        "collective_counts": coll_counts,
+        "model_over_hlo_flops": (
+            mf / (flops_dev * n_chips) if flops_dev else 0.0
+        ),
+        "xla_cost_analysis_flops_per_dev": float(cost.get("flops", 0.0)),
+        "xla_cost_analysis_bytes_per_dev": float(
+            cost.get("bytes accessed", 0.0)),
+        "top_dots": [[f, s[:120]] for f, s in ana["top_dots"][:8]],
+        "memory_analysis": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        },
+        **terms,
+    }
+    return rec
+
+
+def cell_path(arch, shape, multi_pod, tag="baseline"):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    mp = "mp" if multi_pod else "sp"
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape}__{mp}__{tag}.json")
+
+
+def run_cell(arch, shape, multi_pod, force=False, tag="baseline",
+             rules_override=None, cfg_overrides=None) -> Dict:
+    path = cell_path(arch, shape, multi_pod, tag)
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    try:
+        rec = lower_cell(arch, shape, multi_pod, rules_override, tag,
+                         cfg_overrides)
+    except Exception as e:  # record failures for debugging, don't hide them
+        rec = {
+            "arch": arch, "shape": shape, "tag": tag,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-3000:],
+        }
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--cfg-override", default=None,
+                    help='JSON dict of ModelConfig overrides, e.g. '
+                         '{"moe_dispatch": "grouped"}')
+    ap.add_argument("--rules-override", default=None,
+                    help="JSON dict of logical->mesh rule overrides")
+    args = ap.parse_args()
+    cfg_ov = json.loads(args.cfg_override) if args.cfg_override else None
+    rules_ov = json.loads(args.rules_override) if args.rules_override else None
+
+    if args.all:
+        todo = []
+        for arch, shape, ok, why in SHP.cells():
+            meshes = [False, True] if args.both_meshes else [args.multi_pod]
+            for mp in meshes:
+                todo.append((arch, shape, mp))
+    else:
+        assert args.arch and args.shape
+        meshes = [False, True] if args.both_meshes else [args.multi_pod]
+        todo = [(args.arch, args.shape, mp) for mp in meshes]
+
+    for arch, shape, mp in todo:
+        t0 = time.time()
+        rec = run_cell(arch, shape, mp, force=args.force, tag=args.tag,
+                       rules_override=rules_ov, cfg_overrides=cfg_ov)
+        status = (
+            "SKIP" if rec.get("skipped")
+            else ("ERR " if "error" in rec else "OK  ")
+        )
+        extra = rec.get("reason") or rec.get("error") or (
+            f"comp={rec.get('t_compute_s', 0):.4f}s "
+            f"mem={rec.get('t_memory_s', 0):.4f}s "
+            f"coll={rec.get('t_collective_s', 0):.4f}s "
+            f"bottleneck={rec.get('bottleneck')}"
+        )
+        print(f"{status} {arch:24s} {shape:12s} "
+              f"{'2x16x16' if mp else '16x16':8s} "
+              f"[{time.time()-t0:6.1f}s] {extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,441 @@
+"""HLO-text analysis: collective wire bytes + roofline terms.
+
+``compiled.cost_analysis()`` gives FLOPs and HBM bytes but NOT collective
+traffic; we parse the (SPMD-partitioned, per-device) HLO text and apply
+ring-algorithm wire formulas per op (documented in EXPERIMENTS.md):
+
+  all-gather          out_bytes * (n-1)/n        (out = gathered, local)
+  all-reduce          2 * out_bytes * (n-1)/n
+  reduce-scatter      out_bytes * (n-1)           (out = scattered shard)
+  all-to-all          out_bytes * (n-1)/n
+  collective-permute  out_bytes
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\(([^)]*)\)|(\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+# Computation headers sit at column 0 ("%name (args) -> type {" / "ENTRY ..");
+# instruction lines are indented.
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)"
+)
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _wire_bytes(line: str) -> Tuple[str, float]:
+    m = _COLL_RE.search(line)
+    if not m:
+        return "", 0.0
+    tuple_types, single_type, kind = m.group(1), m.group(2), m.group(3)
+    out_bytes = _shape_bytes(tuple_types if tuple_types else single_type)
+    gm = _GROUPS_RE.search(line)
+    if gm:
+        n = len([x for x in gm.group(1).split(",") if x.strip() != ""])
+    else:
+        gm2 = _GROUPS_V2_RE.search(line)
+        n = int(gm2.group(2)) if gm2 else 2
+    n = max(n, 2)
+    if kind == "all-gather":
+        wire = out_bytes * (n - 1) / n
+    elif kind == "all-reduce":
+        wire = 2 * out_bytes * (n - 1) / n
+    elif kind == "reduce-scatter":
+        wire = out_bytes * (n - 1)
+    elif kind == "all-to-all":
+        wire = out_bytes * (n - 1) / n
+    else:  # collective-permute
+        wire = out_bytes
+    return kind, wire
+
+
+def collective_bytes(hlo_text: str) -> Tuple[float, Dict[str, float],
+                                             Dict[str, int]]:
+    """Per-device wire bytes by collective kind (ring formulas above).
+
+    Computation-aware: collectives inside a ``while`` body (layer scans)
+    are multiplied by the loop trip count, recovered from the integer
+    bound in the loop condition computation (max s32 constant -- exact for
+    XLA's canonical scan lowering, documented heuristic otherwise).
+    """
+    comp_text = segment_computations(hlo_text)
+    multiplier = while_multipliers(comp_text)
+
+    by_kind: Dict[str, float] = {}
+    counts: Dict[str, int] = {}
+    for cname, lines in comp_text.items():
+        mult = multiplier.get(cname, 1.0)
+        for line in lines:
+            kind, wire = _wire_bytes(line)
+            if kind:
+                by_kind[kind] = by_kind.get(kind, 0.0) + wire * mult
+                counts[kind] = counts.get(kind, 0) + int(mult)
+    return sum(by_kind.values()), by_kind, counts
+
+
+def segment_computations(hlo_text: str) -> Dict[str, List[str]]:
+    """Split HLO text by computation (headers sit at column 0)."""
+    comp_text: Dict[str, List[str]] = {}
+    cur = "__top__"
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace():
+            hdr = _COMP_HDR_RE.match(line)
+            if hdr:
+                cur = hdr.group(1)
+    # second pass with state (avoid walrus confusion)
+        comp_text.setdefault(cur, []).append(line)
+    return comp_text
+
+
+def while_multipliers(comp_text: Dict[str, List[str]]) -> Dict[str, float]:
+    """body/cond computation -> product of enclosing while trip counts.
+
+    Trip counts come from XLA's ``known_trip_count`` backend config on the
+    while op (exact for scan lowerings); fallback: max s32 constant in the
+    loop condition.
+    """
+    whiles = []  # (parent, cond, body, trips)
+    for cname, lines in comp_text.items():
+        for line in lines:
+            if " while(" not in line:
+                continue
+            m = _WHILE_RE.search(line)
+            if not m:
+                continue
+            cond, body = m.group(1), m.group(2)
+            tm = _TRIP_RE.search(line)
+            if tm:
+                trips = int(tm.group(1))
+            else:
+                consts = []
+                for cl in comp_text.get(cond, []):
+                    consts += [int(c) for c in _CONST_RE.findall(cl)]
+                trips = max(consts) if consts else 1
+            whiles.append((cname, cond, body, max(trips, 1)))
+
+    mult = {name: 1.0 for name in comp_text}
+    for _ in range(4):  # nested whiles fixpoint
+        for parent, cond, body, trips in whiles:
+            mult[body] = mult.get(parent, 1.0) * trips
+            mult[cond] = mult[body]
+    return mult
+
+
+def while_trip_counts(hlo_text: str) -> List[int]:
+    """Best-effort scan trip counts (collectives inside while bodies execute
+    trip_count times; the parser multiplies them in)."""
+    return [int(m.group(1)) for m in
+            re.finditer(r"trip_count=(\d+)", hlo_text)]
+
+
+# ---------------------------------------------------------------------------
+# While-aware FLOPs / bytes analysis (XLA's HloCostAnalysis counts while
+# bodies ONCE -- wrong by num_layers for scanned stacks; we re-derive).
+# ---------------------------------------------------------------------------
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+    r"((?:\([^)]*\))|(?:[\w\[\],\{\}]+))\s+"
+    r"([\w\-]+)\(([^)]*(?:\([^)]*\)[^)]*)*)\)"
+)
+_DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w\.\-]+)")
+
+_ELEMWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "tanh", "rsqrt", "sqrt", "negate", "abs", "log",
+    "logistic", "select", "compare", "and", "or", "xor", "convert",
+    "floor", "cosine", "sine", "clamp",
+}
+
+
+def _dims(shape_str: str) -> List[List[int]]:
+    return [
+        [int(d) for d in m.group(2).split(",") if d]
+        for m in _SHAPE_RE.finditer(shape_str)
+        if m.group(1) in _DTYPE_BYTES
+    ]
+
+
+def analyze(hlo_text: str) -> Dict:
+    """While-aware per-device FLOPs, HBM-ish bytes, collective wire bytes.
+
+    FLOPs: exact for dot ops (2 * prod(out_dims) * K), 1 FLOP/elem for
+    elementwise arithmetic.  Bytes: operands + outputs per instruction
+    (fusion nodes count their boundary, internals excluded) -- the same
+    accounting HloCostAnalysis uses, but multiplied through while loops.
+    Returns dict(flops, bytes, coll_bytes, coll_by_kind, coll_counts,
+    top_dots).
+    """
+    # --- segment computations; build symbol table name -> bytes/shape ---
+    comp_lines = segment_computations(hlo_text)
+
+    sym_bytes: Dict[str, int] = {}
+    sym_shape: Dict[str, str] = {}
+    instrs: Dict[str, List[Tuple[str, str, str, str]]] = {}
+    fusion_bodies = set()
+    for cname, lines in comp_lines.items():
+        for line in lines:
+            for m in _CALLS_RE.finditer(line):
+                if "calls=" in m.group(0) or "to_apply=" in m.group(0):
+                    fusion_bodies.add(m.group(1))
+            im = _INSTR_RE.match(line)
+            if not im:
+                continue
+            name, typ, op, operands = im.groups()
+            sym_bytes[name] = _shape_bytes(typ)
+            sym_shape[name] = typ
+            instrs.setdefault(cname, []).append((name, typ, op, line))
+
+    mult = while_multipliers(comp_lines)
+
+    # Consumer map: expansion fusions (convert / GSE-SEM decode) whose
+    # every consumer is a dot never hit HBM on TPU -- the Pallas
+    # gse_matmul kernel decodes segments in VMEM and feeds the MXU
+    # directly (kernels/gse_matmul.py, interpret-validated).  Skip their
+    # output-write accounting.
+    consumers: Dict[str, set] = {}
+    for cname, items in instrs.items():
+        for name, typ, op, line in items:
+            for on in re.findall(r"%([\w\.\-]+)",
+                                 line.split("(", 1)[1] if "(" in line
+                                 else ""):
+                consumers.setdefault(on, set()).add(op)
+    vmem_resident = set()
+    for cname, items in instrs.items():
+        for name, typ, op, line in items:
+            if op != "fusion":
+                continue
+            ops_ = re.findall(r"%([\w\.\-]+)",
+                              line.split("(", 1)[1] if "(" in line else "")
+            in_b = sum(sym_bytes.get(o, 0) for o in ops_)
+            out_b = sym_bytes.get(name, 0)
+            cons = consumers.get(name, set())
+            if 0 < in_b < out_b and cons and cons <= {"dot"}:
+                vmem_resident.add(name)
+
+    _SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "while", "after-all", "custom-call",
+                   "reshape", "iota", "conditional", "call"}
+
+    # def map: instruction name -> (op, operand names) for chain walking.
+    def_map: Dict[str, Tuple[str, List[str]]] = {}
+    for cname, items in instrs.items():
+        for name, typ, op, line in items:
+            ops_ = re.findall(r"%([\w\.\-]+)",
+                              line.split("(", 1)[1] if "(" in line else "")
+            def_map[name] = (op, ops_)
+
+    def _native_bytes(opname: str) -> int:
+        """Bytes of a dot operand at its NATIVE storage dtype.
+
+        XLA:CPU legalizes bf16 math by materializing f32 copies (a
+        convert/kLoop-fusion feeding the dot); XLA:TPU feeds bf16 (or the
+        GSE-SEM u16 segments via the Pallas gse_matmul kernel, which
+        decodes in VMEM) straight to the MXU.  Charge the cheapest
+        single-hop source when the producer is a convert-like fusion whose
+        inputs are smaller than its output.
+        """
+        b = sym_bytes.get(opname, 0)
+        cur = opname
+        # Walk through pass-through ops to the producing computation.
+        for _ in range(6):
+            d = def_map.get(cur)
+            if not d:
+                return b
+            op, ops_ = d
+            if op in ("get-tuple-element", "bitcast", "reshape", "copy",
+                      "transpose") and ops_:
+                cur = ops_[0]
+                continue
+            break
+        d = def_map.get(cur)
+        if not d:
+            return b
+        op, ops_ = d
+        if op == "convert" and ops_:
+            src = sym_bytes.get(ops_[0], 0)
+            return min(b, src) if src else b
+        if op == "fusion":
+            in_b = sum(sym_bytes.get(o, 0) for o in ops_)
+            if 0 < in_b < b:  # expansion fusion (convert / decode): charge in
+                return in_b
+        return b
+
+    def _instr_bytes(op: str, name: str, typ: str, line: str) -> float:
+        """HBM bytes for one instruction.
+
+        Slice-family ops read/write only the slice (counting the full
+        operand would overcount scanned stacked weights by num_layers).
+        For everything else: output + operands, with each operand capped
+        at max(4x output, 1 MiB) -- fusions that internally slice a large
+        buffer would otherwise bill the whole buffer (documented
+        approximation; reduction fusions undercount at most 4x).
+        """
+        out_b = sym_bytes.get(name, 0)
+        if op in ("dynamic-slice", "slice", "gather", "transpose", "pad",
+                  "reverse", "copy", "concatenate"):
+            return 2.0 * out_b
+        if op == "broadcast":
+            return float(out_b)
+        opnames = re.findall(r"%([\w\.\-]+)",
+                             line.split("(", 1)[1] if "(" in line else "")
+        if op == "dynamic-update-slice":
+            upd = sym_bytes.get(opnames[1], out_b) if len(opnames) > 1 else out_b
+            return 2.0 * upd
+        if op == "fusion" and "dynamic-update-slice" in name:
+            # Loop-carried in-place cache update: XLA:CPU materializes the
+            # whole carried buffer per iteration, XLA:TPU aliases it.  Bill
+            # TPU semantics: 2x the true update slice (the smallest operand
+            # of the fused DUS).
+            cands = [sym_bytes.get(o, 0) for o in opnames
+                     if 0 < sym_bytes.get(o, 0) < max(out_b // 8, 1 << 30)]
+            upd = min(cands) if cands else out_b
+            return 2.0 * upd
+        if op == "scatter":
+            upd = sym_bytes.get(opnames[2], out_b) if len(opnames) > 2 else out_b
+            return 2.0 * upd + out_b * 0  # read-modify-write of touched rows
+        if op == "dot":
+            b = float(out_b)
+            for on in opnames:
+                b += _native_bytes(on)
+            return b
+        if op in ("reduce", "sort", "convolution"):
+            b = float(out_b)
+            for on in opnames:
+                b += sym_bytes.get(on, 0)
+            return b
+        cap = max(4.0 * out_b, float(1 << 20))
+        b = float(out_b)
+        for on in opnames:
+            b += min(float(sym_bytes.get(on, 0)), cap)
+        return b
+    flops = 0.0
+    mem_bytes = 0.0
+    coll_total = 0.0
+    coll_by_kind: Dict[str, float] = {}
+    coll_counts: Dict[str, int] = {}
+    dots: List[Tuple[float, str]] = []
+
+    for cname, items in instrs.items():
+        if cname in fusion_bodies and cname not in mult:
+            continue
+        m_ = mult.get(cname, 1.0)
+        in_fusion_body = cname in fusion_bodies
+        for name, typ, op, line in items:
+            if in_fusion_body and op != "dot":
+                continue  # fusion internals: only dots contribute FLOPs
+            kind, wire = _wire_bytes(line)
+            if kind:
+                # Charge the wire at the operand's NATIVE dtype: XLA:CPU
+                # legalizes bf16 by inserting f32 converts before the
+                # collective; on TPU the collective moves bf16 directly.
+                opn = re.findall(r"%([\w\.\-]+)",
+                                 line.split("(", 1)[1] if "(" in line else "")
+                if opn:
+                    raw = sym_bytes.get(opn[0], 0)
+                    nat = _native_bytes(opn[0])
+                    if raw > 0 and 0 < nat < raw:
+                        wire *= nat / raw
+                coll_total += wire * m_
+                coll_by_kind[kind] = coll_by_kind.get(kind, 0.0) + wire * m_
+                coll_counts[kind] = coll_counts.get(kind, 0) + int(m_)
+            if op == "dot":
+                out_elems = 0
+                for dl in _dims(typ):
+                    e = 1
+                    for d in dl:
+                        e *= d
+                    out_elems += e
+                k = 1
+                dm = _DOT_DIMS_RE.search(line)
+                opnames = re.findall(r"%([\w\.\-]+)", line.split("(", 1)[1])
+                if dm and opnames:
+                    lhs_shape = sym_shape.get(opnames[0], "")
+                    ldims = _dims(lhs_shape)
+                    if ldims:
+                        for ci in [int(c) for c in dm.group(1).split(",") if c]:
+                            if ci < len(ldims[0]):
+                                k *= ldims[0][ci]
+                f = 2.0 * out_elems * k * m_
+                flops += f
+                dots.append((f, typ + " <- " + sym_shape.get(
+                    opnames[0] if opnames else "", "?")))
+            elif op in _ELEMWISE:
+                out_elems = 0
+                for dl in _dims(typ):
+                    e = 1
+                    for d in dl:
+                        e *= d
+                    out_elems += e
+                flops += out_elems * m_
+            if (not in_fusion_body) and op not in _SKIP_BYTES:
+                if name in vmem_resident:
+                    # charge only the segment reads; output stays in VMEM
+                    opn = re.findall(
+                        r"%([\w\.\-]+)",
+                        line.split("(", 1)[1] if "(" in line else "")
+                    mem_bytes += sum(sym_bytes.get(o, 0) for o in opn) * m_
+                else:
+                    mem_bytes += _instr_bytes(op, name, typ, line) * m_
+
+    dots.sort(reverse=True)
+    return {
+        "flops": flops,
+        "bytes": mem_bytes,
+        "coll_bytes": coll_total,
+        "coll_by_kind": coll_by_kind,
+        "coll_counts": coll_counts,
+        "top_dots": dots[:12],
+    }
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float, hw) -> Dict[str, float]:
+    t_comp = flops_per_dev / hw.PEAK_FLOPS_BF16
+    t_mem = bytes_per_dev / hw.HBM_BW
+    t_coll = coll_bytes_per_dev / hw.ICI_BW
+    terms = {
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+    }
+    dom = max(terms, key=terms.get)
+    terms["bottleneck"] = dom.replace("t_", "").replace("_s", "")
+    bound = max(t_comp, t_mem, t_coll)
+    terms["roofline_fraction"] = t_comp / bound if bound > 0 else 0.0
+    return terms

@@ -1,0 +1,121 @@
+"""Assigned input shapes x skip logic + ShapeDtypeStruct input specs.
+
+Shapes (assignment):
+  train_4k     seq_len=4096    global_batch=256   (train_step)
+  prefill_32k  seq_len=32768   global_batch=32    (prefill forward)
+  decode_32k   seq_len=32768   global_batch=128   (serve_step, 1 new token)
+  long_500k    seq_len=524288  global_batch=1     (serve_step; sub-quadratic
+                                                   archs only -- see skips)
+
+Skips (DESIGN.md §6): long_500k runs only for ssm/hybrid families; the 8
+pure-full-attention archs skip it.  Modality frontends are stubs --
+``input_specs`` supplies precomputed frame/patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+SHAPES: Dict[str, Dict] = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> Tuple[bool, str]:
+    if shape_name == "long_500k" and not cfg.supports_long_context():
+        return False, (
+            "full-attention arch: 500k dense-KV decode is quadratic-history;"
+            " skipped per assignment (sub-quadratic archs only)"
+        )
+    return True, ""
+
+
+def cells():
+    """All (arch, shape) pairs incl. skip annotations."""
+    from repro import configs
+
+    out = []
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get_config(arch)
+        for shape in SHAPES:
+            ok, why = applicable(cfg, shape)
+            out.append((arch, shape, ok, why))
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of the step fn.
+
+    Shape budget conventions (documented in EXPERIMENTS.md §Dry-run):
+      * encdec train/prefill: seq_len splits 50/50 encoder frames vs
+        decoder tokens (total positions == seq_len).
+      * vlm: 256 patch embeddings are part of the seq_len budget
+        (text tokens = seq_len - 256).
+    """
+    spec = SHAPES[shape_name]
+    b, s = spec["global_batch"], spec["seq_len"]
+    kind = spec["kind"]
+    f32 = jnp.float32
+    i32 = jnp.int32
+
+    if kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            s_enc, s_dec = s // 2, s // 2
+            batch = {
+                "tokens": jax.ShapeDtypeStruct((b, s_dec), i32),
+                "labels": jax.ShapeDtypeStruct((b, s_dec), i32),
+                "loss_mask": jax.ShapeDtypeStruct((b, s_dec), f32),
+                "enc_embeds": jax.ShapeDtypeStruct((b, s_enc, cfg.d_model),
+                                                   f32),
+            }
+        elif cfg.family == "vlm":
+            p = cfg.num_prefix_tokens
+            st = s - p
+            batch = {
+                "tokens": jax.ShapeDtypeStruct((b, st), i32),
+                "labels": jax.ShapeDtypeStruct((b, st), i32),
+                "loss_mask": jax.ShapeDtypeStruct((b, st), f32),
+                "prefix_embeds": jax.ShapeDtypeStruct((b, p, cfg.d_model),
+                                                      f32),
+            }
+        else:
+            batch = {
+                "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+                "loss_mask": jax.ShapeDtypeStruct((b, s), f32),
+            }
+        if kind == "prefill":
+            batch.pop("labels")
+            batch.pop("loss_mask")
+        return batch
+
+    # decode: one new token against a seq_len-deep cache
+    out = {
+        "tokens": jax.ShapeDtypeStruct((b,), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+    if cfg.family == "encdec":
+        out["enc_out"] = jax.ShapeDtypeStruct((b, s // 2, cfg.d_model), f32)
+    return out
+
+
+def batch_logical_axes(batch_spec: Dict) -> Dict:
+    """Logical axes for each batch input (-> in_shardings)."""
+    ax = {}
+    for k, v in batch_spec.items():
+        if k == "pos":
+            ax[k] = ()
+        elif k in ("tokens", "labels", "loss_mask"):
+            ax[k] = ("batch",) + (("seq",) if len(v.shape) == 2 else ())
+        elif k in ("prefix_embeds", "enc_embeds", "enc_out"):
+            ax[k] = ("batch", "seq", "act_embed")
+        else:
+            raise KeyError(k)
+    return ax

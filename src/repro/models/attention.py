@@ -1,0 +1,313 @@
+"""Attention: MHA/GQA/MQA with qk-norm, QKV bias, local windows, KV cache,
+cross-attention -- covering all attention flavours in the assigned archs.
+
+GQA uses the grouped einsum formulation (no materialized KV repeat):
+  q: (B, S, KV, G, hd)  k: (B, T, KV, hd)  ->  scores (B, KV, G, S, T)
+
+Decode uses a ring buffer for local-window layers (RecurrentGemma): the
+cache holds only ``window`` positions, which is what makes the 500k-token
+decode shape feasible (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import modules as M
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg: ModelConfig, dtype) -> Tuple[Params, Dict]:
+    """Fused projection layout: wq (d, H*hd) etc.
+
+    The fused width H*hd divides the 16-way model axis for ALL 10 assigned
+    archs (raw head counts like 40 or 10 do not) -- so TP shards the fused
+    dim evenly and GSPMD is free to pick (padded) internal shardings for
+    the per-head reshape (DESIGN.md §5).
+    """
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    p, spec = {}, {}
+    p["wq"], spec["wq"] = M.linear_weight_init(
+        ks[0], (d, h * hd), s, cfg, ("embed", "qkv"))
+    p["wk"], spec["wk"] = M.linear_weight_init(
+        ks[1], (d, kv * hd), s, cfg, ("embed", "qkv"))
+    p["wv"], spec["wv"] = M.linear_weight_init(
+        ks[2], (d, kv * hd), s, cfg, ("embed", "qkv"))
+    p["wo"], spec["wo"] = M.linear_weight_init(
+        ks[3], (h * hd, d), 1.0 / math.sqrt(h * hd), cfg, ("qkv", "embed"))
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+        spec["bq"] = ("qkv",)
+        spec["bk"] = ("qkv",)
+        spec["bv"] = ("qkv",)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+        spec["q_norm"] = ("head_dim",)
+        spec["k_norm"] = ("head_dim",)
+    return p, spec
+
+
+def cross_attn_init(key, cfg: ModelConfig, dtype) -> Tuple[Params, Dict]:
+    return attn_init(key, cfg, dtype)
+
+
+def _qk_normalize(p, q, k):
+    def rn(x, scale):
+        x32 = x.astype(jnp.float32)
+        var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+        return (x32 * jax.lax.rsqrt(var + 1e-6) * scale.astype(jnp.float32)
+                ).astype(x.dtype)
+
+    return rn(q, p["q_norm"]), rn(k, p["k_norm"])
+
+
+def _project_qkv(p, x, cfg: ModelConfig, dtype):
+    xc = x.astype(dtype)
+    b, s = x.shape[:2]
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q = jnp.dot(xc, M.take_weight(p["wq"], cfg, dtype, (None, "qkv")))
+    k = jnp.dot(xc, M.take_weight(p["wk"], cfg, dtype, (None, "qkv")))
+    v = jnp.dot(xc, M.take_weight(p["wv"], cfg, dtype, (None, "qkv")))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dtype)
+        k = k + p["bk"].astype(dtype)
+        v = v + p["bv"].astype(dtype)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q, k = _qk_normalize(p, q, k)
+    return q, k, v
+
+
+def _attend(q, k, v, mask, cfg: ModelConfig, dtype):
+    """q: (B,S,H,hd); k,v: (B,T,KV,hd); mask broadcastable (B,1,1,S,T)."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, hd)
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bskge,btke->bkgst", qg, k).astype(jnp.float32) * scale
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dtype)
+    out = jnp.einsum("bkgst,btke->bskge", probs, v)
+    return out.reshape(b, s, h, hd)
+
+
+def _attend_q_chunked(q, k, v, positions, cfg: ModelConfig, dtype,
+                      window: int, chunk: int):
+    """Query-chunked causal attention (O3 hillclimb lever).
+
+    Processes queries in chunks of ``chunk``: live score buffers shrink
+    from (B,H,S,T) to (B,H,chunk,T), and jax.checkpoint on the chunk body
+    keeps the backward pass at the same footprint (recompute-per-chunk)
+    instead of stashing full score matrices.
+    """
+    b, s, h, hd = q.shape
+    nc = s // chunk
+    qc = q.reshape(b, nc, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    pc = positions.reshape(b, nc, chunk).transpose(1, 0, 2)
+    jpos = positions[:, None, :]  # (B,1,T)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        q_i, p_i = xs                            # (B,chunk,H,hd), (B,chunk)
+        mask = jpos <= p_i[:, :, None]
+        if window:
+            mask &= jpos > p_i[:, :, None] - window
+        out_i = _attend(q_i, k, v, mask[:, None, None, :, :], cfg, dtype)
+        return carry, out_i
+
+    _, outs = jax.lax.scan(body, jnp.zeros((), dtype), (qc, pc))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+
+
+def attn_apply(
+    p: Params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    positions: jnp.ndarray,
+    window: int = 0,
+    use_rope: bool = True,
+) -> jnp.ndarray:
+    """Full-sequence (train / prefill) self-attention, causal."""
+    dtype = cfg.compute_dtype
+    q, k, v = _project_qkv(p, x, cfg, dtype)
+    if use_rope:
+        q = M.rope(q, positions, cfg.rope_theta)
+        k = M.rope(k, positions, cfg.rope_theta)
+    s = x.shape[1]
+    if (cfg.attn_impl == "chunked" and s > cfg.attn_chunk
+            and s % cfg.attn_chunk == 0):
+        out = _attend_q_chunked(q, k, v, positions, cfg, dtype, window,
+                                cfg.attn_chunk)
+    else:
+        i = positions[:, :, None]  # (B,S,1)
+        j = positions[:, None, :]  # (B,1,S)
+        mask = j <= i
+        if window:
+            mask &= j > i - window
+        mask = mask[:, None, None, :, :]  # (B,1,1,S,T)
+        out = _attend(q, k, v, mask, cfg, dtype)
+    b2, s2 = out.shape[:2]
+    wo = M.take_weight(p["wo"], cfg, dtype, ("qkv", None))
+    return jnp.dot(out.reshape(b2, s2, -1), wo)
+
+
+def encoder_attn_apply(p, x, cfg: ModelConfig, positions) -> jnp.ndarray:
+    """Bidirectional (encoder) self-attention."""
+    dtype = cfg.compute_dtype
+    q, k, v = _project_qkv(p, x, cfg, dtype)
+    b, s = x.shape[:2]
+    mask = jnp.ones((b, 1, 1, s, s), bool)
+    out = _attend(q, k, v, mask, cfg, dtype)
+    b2, s2 = out.shape[:2]
+    wo = M.take_weight(p["wo"], cfg, dtype, ("qkv", None))
+    return jnp.dot(out.reshape(b2, s2, -1), wo)
+
+
+def cross_attn_apply(p, x, enc_kv, cfg: ModelConfig) -> jnp.ndarray:
+    """Decoder cross-attention; ``enc_kv = (k, v)`` precomputed once."""
+    dtype = cfg.compute_dtype
+    xc = x.astype(dtype)
+    q = jnp.dot(xc, M.take_weight(p["wq"], cfg, dtype, (None, "qkv")))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dtype)
+    q = q.reshape(x.shape[0], x.shape[1], cfg.num_heads, cfg.hd)
+    k, v = enc_kv
+    b, s = x.shape[:2]
+    t = k.shape[1]
+    mask = jnp.ones((b, 1, 1, s, t), bool)
+    out = _attend(q, k, v, mask, cfg, dtype)
+    b2, s2 = out.shape[:2]
+    wo = M.take_weight(p["wo"], cfg, dtype, ("qkv", None))
+    return jnp.dot(out.reshape(b2, s2, -1), wo)
+
+
+def cross_kv(p, enc_out, cfg: ModelConfig):
+    dtype = cfg.compute_dtype
+    xc = enc_out.astype(dtype)
+    k = jnp.dot(xc, M.take_weight(p["wk"], cfg, dtype, (None, "qkv")))
+    v = jnp.dot(xc, M.take_weight(p["wv"], cfg, dtype, (None, "qkv")))
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(dtype)
+        v = v + p["bv"].astype(dtype)
+    b, s = enc_out.shape[:2]
+    k = k.reshape(b, s, cfg.num_kv_heads, cfg.hd)
+    v = v.reshape(b, s, cfg.num_kv_heads, cfg.hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+# ---------------------------------------------------------------------------
+
+# 8-bit GSE-SEM cache entry: sign(1) | expIdx(3) | mantissa(4).  The shared
+# exponent table is a compile-time constant covering the activation range
+# (unbiased exponents; paper III.B with k=8, one-byte SEM).  One stored
+# copy at 1 byte/value -- 2x below bf16, 4x below f32 -- the paper's
+# segmented-precision idea applied to the KV stream.
+_KV_TABLE = (5, 3, 1, -1, -3, -5, -7, -9)
+_KV_MBITS = 4
+
+
+def _kv_pack_u8(x: jnp.ndarray) -> jnp.ndarray:
+    a = jnp.abs(x.astype(jnp.float32))
+    sign = (x < 0).astype(jnp.uint8)
+    best_idx = jnp.zeros(x.shape, jnp.uint8)
+    best_mant = jnp.zeros(x.shape, jnp.uint8)
+    found = jnp.zeros(x.shape, bool)
+    for j, e in reversed(list(enumerate(_KV_TABLE))):
+        # ascending exponents: the first fit is the TIGHTEST binade.
+        mant = a * jnp.float32(2.0 ** (_KV_MBITS - e))
+        fits = (mant < 15.5) & ~found
+        best_idx = jnp.where(fits, jnp.uint8(j), best_idx)
+        best_mant = jnp.where(
+            fits,
+            jnp.clip(jnp.round(mant), 0, 15).astype(jnp.uint8),
+            best_mant,
+        )
+        found = found | fits
+    # Values above the largest binade saturate to max magnitude.
+    best_mant = jnp.where(found, best_mant, jnp.uint8(15))
+    return (sign << 7) | (best_idx << 4) | best_mant
+
+
+def _kv_decode_u8(u: jnp.ndarray, dtype) -> jnp.ndarray:
+    sgn = 1.0 - 2.0 * ((u >> 7) & 0x1).astype(jnp.float32)
+    idx = ((u >> 4) & 0x7).astype(jnp.int32)
+    mant = (u & 0xF).astype(jnp.float32)
+    scales = jnp.asarray(
+        [2.0 ** (e - _KV_MBITS) for e in _KV_TABLE], jnp.float32
+    )
+    return (sgn * mant * scales[idx]).astype(dtype)
+
+
+def cache_init(cfg: ModelConfig, batch: int, max_len: int, window: int = 0,
+               dtype=None) -> Dict:
+    """Per-layer cache. Local-window layers use a ring of size ``window``."""
+    dtype = dtype or cfg.compute_dtype
+    if cfg.kv_cache_gse:
+        dtype = jnp.uint8
+    size = min(window, max_len) if window else max_len
+    kv, hd = cfg.num_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, size, kv, hd), dtype),
+        "v": jnp.zeros((batch, size, kv, hd), dtype),
+    }
+
+
+def decode_attn_apply(
+    p: Params,
+    x: jnp.ndarray,           # (B, 1, D)
+    cache: Dict,
+    pos: jnp.ndarray,         # () int32 -- current position
+    cfg: ModelConfig,
+    window: int = 0,
+    use_rope: bool = True,
+) -> Tuple[jnp.ndarray, Dict]:
+    dtype = cfg.compute_dtype
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, cfg, dtype)
+    if use_rope:
+        q = M.rope(q, positions, cfg.rope_theta)
+        k_new = M.rope(k_new, positions, cfg.rope_theta)
+    size = cache["k"].shape[1]
+    slot = pos % size if window else jnp.minimum(pos, size - 1)
+    if cfg.kv_cache_gse:
+        k_new = _kv_pack_u8(k_new)
+        v_new = _kv_pack_u8(v_new)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+    new_cache = {"k": k, "v": v}
+    if cfg.kv_cache_gse:
+        k = _kv_decode_u8(k, dtype)
+        v = _kv_decode_u8(v, dtype)
+    # Valid positions: ring semantics for windows, prefix otherwise.
+    idx = jnp.arange(size)
+    if window:
+        valid = (idx <= slot) | (pos >= size)  # full ring once wrapped
+        true_pos = jnp.where(idx <= slot, pos - (slot - idx),
+                             pos - (slot + size - idx))
+        valid &= true_pos >= 0
+    else:
+        valid = idx <= pos
+    mask = valid[None, None, None, None, :]
+    out = _attend(q, k, v, mask, cfg, dtype)
+    b2, s2 = out.shape[:2]
+    wo = M.take_weight(p["wo"], cfg, dtype, ("qkv", None))
+    y = jnp.dot(out.reshape(b2, s2, -1), wo)
+    return y, new_cache

@@ -1,0 +1,104 @@
+"""Model configuration: one dataclass covers all 10 assigned architectures."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | hybrid | ssm | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0               # per-expert FFN width (0 -> use d_ff)
+    capacity_factor: float = 1.25
+
+    # attention flavour
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    mlp_act: str = "swiglu"         # swiglu | gelu (2-matmul)
+
+    # hybrid (RecurrentGemma / Griffin): layer i is local-attn if
+    # i % hybrid_period == hybrid_period - 1, else RG-LRU.
+    hybrid_period: int = 0
+    local_window: int = 0
+    lru_width: int = 0
+
+    # SSM (RWKV-6)
+    rwkv_head_dim: int = 64
+
+    # encoder-decoder (Seamless)
+    encoder_layers: int = 0
+
+    # modality frontend stub: number of prefix embeddings supplied
+    frontend: Optional[str] = None  # None | "vision_stub" | "audio_stub"
+    num_prefix_tokens: int = 0      # vlm: patch embeddings prepended
+
+    # numerics / execution
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    scan_layers: bool = True
+    remat: str = "none"             # none | full
+    tie_embeddings: bool = False
+
+    # GSE-SEM integration (the paper's technique, LM-scale)
+    gse_serve: bool = False         # serve weights from GSE-SEM segments
+    gse_tag: int = 2                # serving precision tag
+    gse_k: int = 8
+
+    # ---- perf hillclimb levers (EXPERIMENTS.md §Perf); baselines keep
+    # the defaults ----
+    kv_cache_gse: bool = False      # store decode KV cache as 8-bit GSE-SEM
+    moe_dispatch: str = "sort"      # sort (global) | grouped (shard-local)
+    moe_groups: int = 32            # token groups for grouped dispatch
+    cast_before_gather: bool = False  # FSDP all-gathers in bf16, not f32
+    attn_impl: str = "naive"        # naive | chunked (online softmax)
+    attn_chunk: int = 1024
+
+    def kv_groups(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a multiple of 16 so the embedding/unembedding
+        tables shard evenly over the 16-way model axis (logits are sliced
+        back to the true vocab before loss/sampling)."""
+        return ((self.vocab_size + 15) // 16) * 16
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def expert_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    def attn_layer_ids(self) -> Tuple[int, ...]:
+        if self.family != "hybrid":
+            return tuple(range(self.num_layers))
+        p = self.hybrid_period
+        return tuple(i for i in range(self.num_layers) if i % p == p - 1)
+
+    def supports_long_context(self) -> bool:
+        """sub-quadratic archs: SSM / hybrid (bounded local-attn window)."""
+        return self.family in ("ssm", "hybrid")
+
+    def has_decode(self) -> bool:
+        return True  # all 10 assigned archs have a decoder

@@ -1,0 +1,231 @@
+"""Shared model building blocks (pure-JAX, functional params).
+
+Every init returns ``(params, specs)`` where ``specs`` mirrors the params
+tree with tuples of *logical axis names* (resolved to PartitionSpecs by
+``repro.distributed.sharding``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+
+Params = Dict[str, Any]
+Specs = Dict[str, Any]
+
+
+def _normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+def linear_weight_init(key, shape, scale, cfg, axes):
+    """Dense f32/bf16 weight -- or GSE-SEM segments when cfg.gse_serve.
+
+    GSE-SEM layout (paper III.B, dense-tensor variant): per-tensor shared
+    exponent table (k entries, biased+1), head u16 (sign | expIdx |
+    mantissa), tail1 u16; tail2 u32 only when the serving tag is 3.  One
+    stored copy; the serving tag picks how many segment streams the
+    matmul reads (2/4/8 bytes per weight).
+    """
+    if not getattr(cfg, "gse_serve", False):
+        return _normal(key, shape, scale, cfg.param_dtype), axes
+    from repro.core import gse as G
+
+    # Same sampling recipe as _normal (default-dtype normal, then cast) so
+    # dense and GSE-packed inits see identical values under any x64 mode.
+    vals = (scale * jax.random.normal(key, shape)).astype(jnp.float32)
+    table = G.extract_shared_exponents_jnp(vals, cfg.gse_k)
+    head, tail1 = G.pack32_jnp(vals, table, cfg.gse_k)
+    w = {"head": head, "tail1": tail1, "table": table}
+    spec = {"head": axes, "tail1": axes, "table": (None,)}
+    if cfg.gse_tag >= 3:
+        w["tail2"] = jnp.zeros(shape, jnp.uint32)
+        spec["tail2"] = axes
+    return w, spec
+
+
+def take_weight(w, cfg, dtype, gathered_axes):
+    """Materialize a weight for compute: decode GSE-SEM segments and/or
+    cast + pin the FSDP-gathered layout (cast/decode happens BEFORE the
+    all-gather so the wire moves the small representation)."""
+    if isinstance(w, dict) and "head" in w:
+        ei = max(1, int(np.ceil(np.log2(cfg.gse_k))))
+        m_h = 15 - ei
+        h = w["head"].astype(jnp.uint32)
+        sgn = (1.0 - 2.0 * ((h >> 15) & 0x1).astype(jnp.float32))
+        idx = ((h >> m_h) & ((1 << ei) - 1)).astype(jnp.int32)
+        mant = (h & ((1 << m_h) - 1)).astype(jnp.float32)
+        bits = m_h
+        if cfg.gse_tag >= 2:
+            mant = mant * jnp.float32(65536.0) + w["tail1"].astype(jnp.float32)
+            bits += 16
+        if cfg.gse_tag >= 3 and "tail2" in w:
+            mant = mant * jnp.float32(2.0**32) + w["tail2"].astype(jnp.float32)
+            bits += 32
+        from repro.kernels.ref import make_scales
+
+        scales = make_scales(w["table"], bits, bias=127)
+        out = (sgn * mant * scales[idx]).astype(dtype)
+        if cfg.cast_before_gather:
+            out = shard(out, *gathered_axes)
+        return out
+    return gather_cast(w, dtype, gathered_axes, cfg.cast_before_gather)
+
+
+import numpy as np  # noqa: E402  (used by take_weight)
+
+
+def gather_cast(w: jnp.ndarray, dtype, axes, on: bool) -> jnp.ndarray:
+    """Cast an FSDP-sharded master weight to compute dtype and (optionally)
+    pin the *gathered* layout.
+
+    With ``on=True`` the with_sharding_constraint sits AFTER the cast, so
+    GSPMD's FSDP all-gather moves bf16 (2 bytes) instead of the f32 master
+    (4 bytes): halves the gather wire bytes AND the HBM read
+    (EXPERIMENTS.md §Perf hypothesis O2).
+    """
+    wc = w.astype(dtype)
+    if on:
+        wc = shard(wc, *axes)
+    return wc
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> Tuple[Params, Specs]:
+    return {"scale": jnp.ones((d,), dtype)}, {"scale": ("embed",)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d: int, dtype) -> Tuple[Params, Specs]:
+    p = {"table": _normal(key, (vocab, d), 1.0 / math.sqrt(d), dtype)}
+    return p, {"table": ("vocab", "embed")}
+
+
+def embed(p: Params, tokens: jnp.ndarray, dtype) -> jnp.ndarray:
+    return p["table"].astype(dtype)[tokens]
+
+
+def unembed_init(key, vocab: int, d: int, dtype,
+                 cfg=None) -> Tuple[Params, Specs]:
+    class _Dense:
+        gse_serve = False
+        param_dtype = dtype
+
+    w, s = linear_weight_init(key, (d, vocab), 1.0 / math.sqrt(d),
+                              cfg or _Dense(), ("embed", "vocab"))
+    return {"w": w}, {"w": s}
+
+
+def unembed(p: Params, x: jnp.ndarray, dtype, cfg=None,
+            gather_bf16: bool = False) -> jnp.ndarray:
+    # Logits in f32: the vocab matmul feeds softmax-xent directly.
+    class _Plain:
+        gse_serve = False
+        cast_before_gather = gather_bf16
+        gse_k = 8
+        gse_tag = 2
+
+    w = take_weight(p["w"], cfg or _Plain(), dtype, (None, "vocab"))
+    return jnp.dot(x.astype(dtype), w,
+                   preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd) rotated pairwise; positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def sinusoidal(positions: jnp.ndarray, d: int) -> jnp.ndarray:
+    half = d // 2
+    freqs = jnp.exp(
+        -math.log(10000.0) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU-2mat)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, ff: int, act: str, dtype,
+             cfg=None) -> Tuple[Params, Specs]:
+    ks = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(ff)
+
+    class _Dense:  # fallback when no cfg passed (plain dense init)
+        gse_serve = False
+        param_dtype = dtype
+
+    c = cfg or _Dense()
+    p, s = {}, {}
+    if act == "swiglu":
+        p["w_gate"], s["w_gate"] = linear_weight_init(
+            ks[0], (d, ff), s_in, c, ("embed", "mlp"))
+        p["w_up"], s["w_up"] = linear_weight_init(
+            ks[1], (d, ff), s_in, c, ("embed", "mlp"))
+        p["w_down"], s["w_down"] = linear_weight_init(
+            ks[2], (ff, d), s_out, c, ("mlp", "embed"))
+    else:
+        p["w_up"], s["w_up"] = linear_weight_init(
+            ks[0], (d, ff), s_in, c, ("embed", "mlp"))
+        p["w_down"], s["w_down"] = linear_weight_init(
+            ks[1], (ff, d), s_out, c, ("mlp", "embed"))
+    return p, s
+
+
+def mlp(p: Params, x: jnp.ndarray, act: str, dtype,
+        cfg=None, gather_bf16: bool = False) -> jnp.ndarray:
+    xc = x.astype(dtype)
+
+    class _Plain:
+        gse_serve = False
+        cast_before_gather = gather_bf16
+        gse_k = 8
+        gse_tag = 2
+
+    c = cfg or _Plain()
+    if act == "swiglu":
+        g = jnp.dot(xc, take_weight(p["w_gate"], c, dtype, (None, "mlp")))
+        u = jnp.dot(xc, take_weight(p["w_up"], c, dtype, (None, "mlp")))
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(
+            jnp.dot(xc, take_weight(p["w_up"], c, dtype, (None, "mlp")))
+        )
+    return jnp.dot(h, take_weight(p["w_down"], c, dtype, ("mlp", None)))

@@ -1,0 +1,241 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+Two dispatch strategies (the roofline hillclimb lever, DESIGN.md §9):
+
+  * ``sort``  (default): tokens are sorted by expert assignment and packed
+    into an (E, C, d) buffer -- compute is ``E*C = cf * k/E-active`` FLOPs,
+    i.e. proportional to *active* experts, like MaxText's dropless path.
+    Over-capacity tokens are dropped (standard GShard/Switch semantics).
+  * ``dense`` (naive baseline): every expert computes every token, masked
+    after the fact.  E/k x more FLOPs -- kept as the anti-baseline the
+    roofline table exposes.
+
+EP sharding: the (E, ...) leading dims of both the token buffer and the
+expert weight stacks carry the ``experts`` logical axis.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import modules as M
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def moe_init(key, cfg: ModelConfig, dtype) -> Tuple[Params, Dict]:
+    d, e, ff = cfg.d_model, cfg.num_experts, cfg.expert_ff
+    ks = jax.random.split(key, 4)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(ff)
+    p = {
+        "router": M._normal(ks[0], (d, e), s_in, jnp.float32),
+        "w_gate": M._normal(ks[1], (e, d, ff), s_in, dtype),
+        "w_up": M._normal(ks[2], (e, d, ff), s_in, dtype),
+        "w_down": M._normal(ks[3], (e, ff, d), s_out, dtype),
+    }
+    spec = {
+        "router": ("embed", "experts_router"),
+        "w_gate": ("experts", "embed", "expert_mlp"),
+        "w_up": ("experts", "embed", "expert_mlp"),
+        "w_down": ("experts", "expert_mlp", "embed"),
+    }
+    return p, spec
+
+
+def _capacity(cfg: ModelConfig, num_tokens: int) -> int:
+    c = int(
+        math.ceil(
+            cfg.capacity_factor * num_tokens * cfg.experts_per_token
+            / cfg.num_experts
+        )
+    )
+    return max(8, ((c + 7) // 8) * 8)  # lane-friendly
+
+
+def moe_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+              dispatch: str | None = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (y, aux_loss)."""
+    if dispatch is None:
+        dispatch = cfg.moe_dispatch
+    if dispatch == "grouped":
+        return _moe_grouped(p, x, cfg)
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    dtype = cfg.compute_dtype
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = jnp.dot(xt.astype(jnp.float32), p["router"])  # (T, E) f32
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)        # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Switch-style load-balance auxiliary loss.
+    me = jnp.mean(probs, axis=0)                            # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_ids, e, dtype=jnp.float32), axis=1),
+        axis=0,
+    )
+    aux = e * jnp.sum(me * ce)
+
+    if dispatch == "dense":
+        # Anti-baseline: all experts on all tokens.
+        xc = xt.astype(dtype)
+        g = jnp.einsum("td,edf->etf", xc, p["w_gate"].astype(dtype))
+        u = jnp.einsum("td,edf->etf", xc, p["w_up"].astype(dtype))
+        h = jax.nn.silu(g) * u
+        y_all = jnp.einsum("etf,efd->etd", h, p["w_down"].astype(dtype))
+        gates_full = jnp.zeros((t, e), jnp.float32)
+        gates_full = gates_full.at[
+            jnp.arange(t)[:, None], expert_ids
+        ].set(gate_vals)
+        y = jnp.einsum("etd,te->td", y_all.astype(jnp.float32), gates_full)
+        return y.reshape(b, s, d).astype(x.dtype), aux
+
+    # ---- sort-based capacity dispatch ----
+    cap = _capacity(cfg, t)
+    flat_expert = expert_ids.reshape(-1)                    # (T*k,)
+    flat_token = jnp.repeat(jnp.arange(t), k)
+    flat_gate = gate_vals.reshape(-1)
+
+    order = jnp.argsort(flat_expert)                        # stable
+    se, stok, sg = flat_expert[order], flat_token[order], flat_gate[order]
+    counts = jnp.bincount(se, length=e)
+    starts = jnp.cumsum(counts) - counts                    # (E,)
+    pos_in_e = jnp.arange(t * k) - starts[se]
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, se * cap + pos_in_e, e * cap)    # drop -> spill row
+
+    buf = jnp.zeros((e * cap + 1, d), dtype)
+    buf = buf.at[slot].set(xt[stok].astype(dtype), mode="drop")
+    xe = buf[: e * cap].reshape(e, cap, d)
+    xe = shard(xe, "experts", "capacity", "act_embed")
+
+    gb = cfg.cast_before_gather
+    wg = M.gather_cast(p["w_gate"], dtype, ("experts", None, "expert_mlp"), gb)
+    wu = M.gather_cast(p["w_up"], dtype, ("experts", None, "expert_mlp"), gb)
+    wd = M.gather_cast(p["w_down"], dtype, ("experts", "expert_mlp", None), gb)
+    g = jnp.einsum("ecd,edf->ecf", xe, wg)
+    u = jnp.einsum("ecd,edf->ecf", xe, wu)
+    h = jax.nn.silu(g) * u
+    ye = jnp.einsum("ecf,efd->ecd", h, wd)
+    ye = shard(ye, "experts", "capacity", "act_embed")
+
+    ye_flat = jnp.concatenate(
+        [ye.reshape(e * cap, d), jnp.zeros((1, d), dtype)], axis=0
+    )
+    contrib = ye_flat[slot].astype(jnp.float32) * (
+        sg * keep.astype(jnp.float32)
+    )[:, None]
+    y = jnp.zeros((t, d), jnp.float32).at[stok].add(contrib)
+    return y.reshape(b, s, d).astype(x.dtype), aux
+
+
+def _moe_grouped(p: Params, x: jnp.ndarray,
+                 cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Shard-local dispatch: tokens reshaped into G groups pinned to the
+    data-parallel shards; sort/scatter/gather happen WITHIN a group (no
+    cross-shard sort -> the global-argsort collectives of the ``sort``
+    baseline disappear).  The only cross-device traffic left is the
+    EP boundary where the model-sharded expert outputs meet the
+    token-sharded combine (partial-sum all-reduce of (G, Tg, d)).
+
+    Over-capacity tokens drop per-group (same GShard semantics; capacity
+    is per group so worst-case imbalance behaves like per-shard MoE in
+    production systems).
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    dtype = cfg.compute_dtype
+    t = b * s
+    g = min(cfg.moe_groups, t)
+    while t % g:
+        g -= 1
+    tg = t // g
+
+    xg = x.reshape(g, tg, d)
+    xg = shard(xg, "capacity", None, "act_embed")  # groups on (pod, data)
+
+    logits = jnp.einsum(
+        "gtd,de->gte", xg.astype(jnp.float32), p["router"]
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)          # (G, Tg, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    cap = _capacity(cfg, tg)
+    fe = expert_ids.reshape(g, tg * k)                        # (G, Tgk)
+    ftok = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(tg), k)[None, :], (g, tg * k)
+    )
+    fgate = gate_vals.reshape(g, tg * k)
+
+    order = jnp.argsort(fe, axis=1)                           # local sort
+    se = jnp.take_along_axis(fe, order, axis=1)
+    stok = jnp.take_along_axis(ftok, order, axis=1)
+    sg = jnp.take_along_axis(fgate, order, axis=1)
+
+    # Per-group expert counts from the SORTED ids (no (G,Tgk,E) one-hot):
+    # starts[e] = first index of expert e in the sorted row.
+    bounds = jax.vmap(
+        lambda row: jnp.searchsorted(row, jnp.arange(e + 1))
+    )(se)                                                     # (G, E+1)
+    starts = bounds[:, :-1]
+    counts = bounds[:, 1:] - bounds[:, :-1]
+
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.sum(counts, axis=0).astype(jnp.float32) / t      # (E,)
+    aux = e * jnp.sum(me * ce)
+    pos_in_e = jnp.arange(tg * k)[None, :] - jnp.take_along_axis(
+        starts, se, axis=1
+    )
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, se * cap + pos_in_e, e * cap)      # (G, Tgk)
+
+    # SCATTER-FREE dispatch (A2, EXPERIMENTS §Perf): after the sort the
+    # tokens of expert ee occupy sorted rows [starts[ee], starts[ee]+cnt);
+    # buffer slot (ee, c) is therefore a GATHER at starts[ee]+c.  XLA SPMD
+    # partitions batched gathers cleanly where the equivalent scatter
+    # forces replication of the (G, E*C, d) buffer.
+    xsel = jnp.take_along_axis(
+        xg.astype(dtype), stok[..., None], axis=1
+    )                                                         # (G, Tgk, d)
+    cpos = jnp.arange(cap)[None, None, :]                     # (1,1,C)
+    src = jnp.clip(starts[:, :, None] + cpos, 0, tg * k - 1)  # (G,E,C)
+    valid = cpos < counts[:, :, None]
+    xe = jnp.take_along_axis(
+        xsel, src.reshape(g, e * cap)[..., None], axis=1
+    ).reshape(g, e, cap, d)
+    xe = jnp.where(valid[..., None], xe, 0)
+    xe = shard(xe, "capacity", "experts", None, "act_embed")
+
+    gb = cfg.cast_before_gather
+    wg = M.gather_cast(p["w_gate"], dtype, ("experts", None, "expert_mlp"), gb)
+    wu = M.gather_cast(p["w_up"], dtype, ("experts", None, "expert_mlp"), gb)
+    wd = M.gather_cast(p["w_down"], dtype, ("experts", "expert_mlp", None), gb)
+    gmm = jnp.einsum("gecd,edf->gecf", xe, wg)
+    umm = jnp.einsum("gecd,edf->gecf", xe, wu)
+    h = jax.nn.silu(gmm) * umm
+    ye = jnp.einsum("gecf,efd->gecd", h, wd)
+    ye = shard(ye, "capacity", "experts", None, "act_embed")
+
+    # Combine, also scatter-free: gather each sorted row's expert output,
+    # un-sort with the inverse permutation, reduce the k copies per token.
+    ye_flat = jnp.concatenate(
+        [ye.reshape(g, e * cap, d), jnp.zeros((g, 1, d), dtype)], axis=1
+    )
+    contrib = jnp.take_along_axis(ye_flat, slot[..., None], axis=1)
+    contrib = contrib.astype(jnp.float32) * (
+        sg * keep.astype(jnp.float32)
+    )[..., None]                                              # (G,Tgk,d)
+    inv_order = jnp.argsort(order, axis=1)                    # local unsort
+    contrib = jnp.take_along_axis(contrib, inv_order[..., None], axis=1)
+    y = jnp.sum(contrib.reshape(g, tg, k, d), axis=2)
+    y = shard(y, "capacity", None, "act_embed")
+    return y.reshape(b, s, d).astype(x.dtype), aux

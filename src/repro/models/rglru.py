@@ -1,0 +1,126 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block = linear-in -> temporal conv1d(4) -> RG-LRU recurrence -> gated out.
+Recurrence (per channel):
+
+    r_t = sigmoid(W_a x_t + b_a)            recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            input gate
+    a_t = exp(-c * softplus(L) * r_t)       data-dependent decay, c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` over the affine maps
+(h -> a*h + b composes associatively), giving O(log T) depth -- the
+sub-quadratic property that makes the 500k decode shape feasible; decode
+is an O(1) state update.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import modules as M
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+_C = 8.0
+_CONV_W = 4
+
+
+def rglru_init(key, cfg: ModelConfig, dtype) -> Tuple[Params, Dict]:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 7)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "w_in": M._normal(ks[0], (d, w), s, dtype),
+        "w_gate_branch": M._normal(ks[1], (d, w), s, dtype),
+        "conv": M._normal(ks[2], (_CONV_W, w), 0.1, dtype),
+        "wa": M._normal(ks[3], (w, w), 1.0 / math.sqrt(w), dtype),
+        "wx": M._normal(ks[4], (w, w), 1.0 / math.sqrt(w), dtype),
+        "lam": jnp.asarray(
+            jax.random.uniform(ks[5], (w,), jnp.float32, 2.0, 5.0)
+        ),
+        "w_out": M._normal(ks[6], (w, d), 1.0 / math.sqrt(w), dtype),
+    }
+    spec = {
+        "w_in": ("embed", "lru"),
+        "w_gate_branch": ("embed", "lru"),
+        "conv": ("conv_w", "lru"),
+        "wa": ("lru", "lru_in"),
+        "wx": ("lru", "lru_in"),
+        "lam": ("lru",),
+        "w_out": ("lru", "embed"),
+    }
+    return p, spec
+
+
+def _conv1d(p, x, state=None):
+    """Causal depthwise conv, width 4. state: (B, 3, W) trailing inputs."""
+    w = p["conv"].astype(x.dtype)  # (4, W)
+    if state is None:
+        pads = jnp.zeros((x.shape[0], _CONV_W - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pads, x], axis=1)
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i] for i in range(_CONV_W)
+    )
+    new_state = xp[:, -(_CONV_W - 1):, :]
+    return out, new_state
+
+
+def _gates(p, u):
+    r = jax.nn.sigmoid(u.astype(jnp.float32) @ p["wa"].astype(jnp.float32))
+    i = jax.nn.sigmoid(u.astype(jnp.float32) @ p["wx"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r          # (B,S,W) f32
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * u.astype(jnp.float32))
+    return a, gated
+
+
+def rglru_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Full-sequence apply (train / prefill). x: (B, S, D)."""
+    dtype = cfg.compute_dtype
+    u = jnp.dot(x.astype(dtype), p["w_in"].astype(dtype))
+    gate = jax.nn.gelu(
+        jnp.dot(x.astype(dtype), p["w_gate_branch"].astype(dtype))
+    )
+    u, _ = _conv1d(p, u)
+    a, b = _gates(p, u)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h.astype(dtype) * gate)
+    return jnp.dot(y, p["w_out"].astype(dtype))
+
+
+def rglru_state_init(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, _CONV_W - 1, w), dtype),
+    }
+
+
+def rglru_step(p: Params, x: jnp.ndarray, state: Dict,
+               cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict]:
+    """Single-token decode. x: (B, 1, D) -> (B, 1, D), O(1) state."""
+    dtype = cfg.compute_dtype
+    u = jnp.dot(x.astype(dtype), p["w_in"].astype(dtype))
+    gate = jax.nn.gelu(
+        jnp.dot(x.astype(dtype), p["w_gate_branch"].astype(dtype))
+    )
+    u, conv_state = _conv1d(p, u, state["conv"])
+    a, b = _gates(p, u)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    y = (h[:, None, :].astype(dtype) * gate)
+    out = jnp.dot(y, p["w_out"].astype(dtype))
+    return out, {"h": h, "conv": conv_state}

@@ -1,0 +1,141 @@
+"""Train / serve step factories.
+
+The LM loss is computed in sequence chunks (scan + checkpoint) so the
+(B, S, V) logits tensor never materializes -- at vocab 256k and S=4k this
+is the difference between ~65 MB and ~2 GB per device of live activations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+def lm_loss(cfg: ModelConfig, params: Params, hidden: jnp.ndarray,
+            labels: jnp.ndarray, mask: jnp.ndarray,
+            chunk: Optional[int] = None) -> jnp.ndarray:
+    """Mean masked cross-entropy, chunked over the sequence axis."""
+    b, s, d = hidden.shape
+    if chunk is None:
+        chunk = s
+        for c in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+            if s % c == 0 and c <= s:
+                chunk = c
+                break
+    nch = s // chunk
+    h = hidden.reshape(b, nch, chunk, d).transpose(1, 0, 2, 3)
+    l = labels.reshape(b, nch, chunk).transpose(1, 0, 2)
+    m = mask.reshape(b, nch, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        h_c, l_c, m_c = xs
+        logits = T.logits_from_hidden(cfg, params, h_c)      # (B, c, V) f32
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, l_c[..., None], axis=-1)[..., 0]
+        loss = jnp.sum((logz - ll) * m_c)
+        return carry + loss, None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (h, l, m))
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return total / denom
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TrainState:
+    params: Params
+    opt_state: Any
+    step: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.params, self.opt_state, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+
+def make_loss_fn(cfg: ModelConfig) -> Callable:
+    def loss_fn(params, batch):
+        h, aux = T.forward(
+            cfg, params, batch["tokens"],
+            prefix_embeds=batch.get("prefix_embeds"),
+            enc_embeds=batch.get("enc_embeds"),
+        )
+        if "prefix_embeds" in batch and batch["prefix_embeds"] is not None:
+            # prefix positions carry no LM loss; hidden includes them.
+            p = batch["prefix_embeds"].shape[1]
+            h = h[:, p:, :]
+        loss = lm_loss(cfg, params, h, batch["labels"], batch["loss_mask"])
+        total = loss + AUX_LOSS_WEIGHT * aux
+        return total, {"loss": loss, "aux_loss": aux}
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, optimizer,
+                    grad_transform: Optional[Callable] = None) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``grad_transform(grads) -> grads`` is the hook where the distributed
+    layer installs GSE-SEM gradient compression (DESIGN.md §3.3).
+    """
+    loss_fn = make_loss_fn(cfg)
+
+    def train_step(state: TrainState, batch):
+        (total, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params, batch
+        )
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        updates, opt_state = optimizer.update(
+            grads, state.opt_state, state.params, state.step
+        )
+        params = jax.tree.map(lambda p, u: p + u, state.params, updates)
+        new_state = TrainState(params=params, opt_state=opt_state,
+                               step=state.step + 1)
+        gnorm = jnp.sqrt(
+            sum(jnp.vdot(g, g).real for g in jax.tree.leaves(grads))
+        )
+        metrics = dict(metrics, total_loss=total, grad_norm=gnorm)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    """serve_step(params, state, tokens, pos[, enc_out]) -> (next, state).
+
+    One new token per request with a filled KV cache -- the exact
+    computation the decode_* dry-run shapes lower.
+    """
+
+    def serve_step(params, state, tokens, pos, enc_out=None):
+        logits, state = T.decode_step(cfg, params, state, tokens, pos,
+                                      enc_out=enc_out)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, state
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    """Full-sequence forward returning last-position logits (prefill)."""
+
+    def prefill(params, tokens, prefix_embeds=None, enc_embeds=None):
+        h, _ = T.forward(cfg, params, tokens, prefix_embeds=prefix_embeds,
+                         enc_embeds=enc_embeds)
+        return T.logits_from_hidden(cfg, params, h[:, -1:, :])[:, 0, :]
+
+    return prefill

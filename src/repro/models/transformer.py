@@ -1,0 +1,450 @@
+"""Model assembly for all 10 assigned architectures.
+
+Families:
+  dense   -- pre-norm decoder-only (qwen1.5-32b, qwen3-4b, granite-34b,
+             granite-3-2b; also the LM backbone of internvl2 [vlm])
+  moe     -- dense skeleton with MoE FFN (qwen3-moe-235b, grok-1-314b)
+  hybrid  -- RecurrentGemma: RG-LRU blocks with every ``hybrid_period``-th
+             layer a local-window MQA (Python-loop layers, heterogeneous)
+  ssm     -- RWKV-6: time-mix + channel-mix (attention-free)
+  encdec  -- Seamless-M4T: bidirectional encoder (frontend stub supplies
+             frame embeddings) + causal decoder with cross-attention
+
+Homogeneous stacks scan over layers (keeps the dry-run HLO small and lets
+the XLA scheduler overlap per-layer collectives with compute); the hybrid
+family uses a Python loop over its 26 heterogeneous layers.
+
+Activation sharding constraints are inserted at block boundaries through
+``repro.distributed.sharding.shard`` (no-op outside a rules context).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import attention as A
+from repro.models import modules as M
+from repro.models import moe as MOE
+from repro.models import rglru as R
+from repro.models import rwkv as W
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg: ModelConfig, kind: str, dtype):
+    ks = jax.random.split(key, 8)
+    p, s = {}, {}
+    p["norm1"], s["norm1"] = M.rmsnorm_init(cfg.d_model, dtype)
+    if kind in ("attn", "enc_attn", "local_attn"):
+        p["attn"], s["attn"] = A.attn_init(ks[0], cfg, dtype)
+        p["norm2"], s["norm2"] = M.rmsnorm_init(cfg.d_model, dtype)
+        p["mlp"], s["mlp"] = M.mlp_init(ks[1], cfg.d_model, cfg.d_ff,
+                                        cfg.mlp_act, dtype, cfg=cfg)
+    elif kind == "dec_attn":  # decoder layer with cross-attention
+        p["attn"], s["attn"] = A.attn_init(ks[0], cfg, dtype)
+        p["norm_x"], s["norm_x"] = M.rmsnorm_init(cfg.d_model, dtype)
+        p["xattn"], s["xattn"] = A.cross_attn_init(ks[2], cfg, dtype)
+        p["norm2"], s["norm2"] = M.rmsnorm_init(cfg.d_model, dtype)
+        p["mlp"], s["mlp"] = M.mlp_init(ks[1], cfg.d_model, cfg.d_ff,
+                                        cfg.mlp_act, dtype, cfg=cfg)
+    elif kind == "moe":
+        p["attn"], s["attn"] = A.attn_init(ks[0], cfg, dtype)
+        p["norm2"], s["norm2"] = M.rmsnorm_init(cfg.d_model, dtype)
+        p["moe"], s["moe"] = MOE.moe_init(ks[1], cfg, dtype)
+    elif kind == "rglru":
+        p["rglru"], s["rglru"] = R.rglru_init(ks[0], cfg, dtype)
+        p["norm2"], s["norm2"] = M.rmsnorm_init(cfg.d_model, dtype)
+        p["mlp"], s["mlp"] = M.mlp_init(ks[1], cfg.d_model, cfg.d_ff,
+                                        cfg.mlp_act, dtype, cfg=cfg)
+    elif kind == "rwkv":
+        p["time"], s["time"] = W.rwkv_time_init(ks[0], cfg, dtype)
+        p["norm2"], s["norm2"] = M.rmsnorm_init(cfg.d_model, dtype)
+        p["chan"], s["chan"] = W.rwkv_channel_init(ks[1], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    return p, s
+
+
+def _layer_kinds(cfg: ModelConfig) -> Tuple[str, ...]:
+    if cfg.family == "hybrid":
+        attn_ids = set(cfg.attn_layer_ids())
+        return tuple(
+            "local_attn" if i in attn_ids else "rglru"
+            for i in range(cfg.num_layers)
+        )
+    if cfg.family == "ssm":
+        return ("rwkv",) * cfg.num_layers
+    if cfg.family == "moe":
+        return ("moe",) * cfg.num_layers
+    return ("attn",) * cfg.num_layers
+
+
+def _stackable(cfg: ModelConfig) -> bool:
+    kinds = _layer_kinds(cfg)
+    return cfg.scan_layers and len(set(kinds)) == 1
+
+
+def init_params(cfg: ModelConfig, key) -> Tuple[Params, Dict]:
+    dtype = cfg.param_dtype
+    ks = jax.random.split(key, 8)
+    params: Params = {}
+    specs: Dict = {}
+
+    # Tables are built at padded_vocab so they shard evenly over the
+    # 16-way model axis; logits are sliced back to the true vocab.
+    params["embed"], specs["embed"] = M.embed_init(
+        ks[0], cfg.padded_vocab, cfg.d_model, dtype
+    )
+    params["final_norm"], specs["final_norm"] = M.rmsnorm_init(
+        cfg.d_model, dtype
+    )
+    if not cfg.tie_embeddings:
+        params["unembed"], specs["unembed"] = M.unembed_init(
+            ks[1], cfg.padded_vocab, cfg.d_model, dtype, cfg=cfg
+        )
+
+    if cfg.family == "encdec":
+        enc_keys = jax.random.split(ks[2], cfg.encoder_layers)
+        dec_keys = jax.random.split(ks[3], cfg.num_layers)
+        params["encoder"] = jax.vmap(
+            lambda k: _layer_init(k, cfg, "enc_attn", dtype)[0]
+        )(enc_keys)
+        _, s1 = _layer_init(ks[2], cfg, "enc_attn", dtype)
+        specs["encoder"] = jax.tree.map(
+            lambda ax: ("layers",) + ax, s1, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        params["decoder"] = jax.vmap(
+            lambda k: _layer_init(k, cfg, "dec_attn", dtype)[0]
+        )(dec_keys)
+        _, s2 = _layer_init(ks[3], cfg, "dec_attn", dtype)
+        specs["decoder"] = jax.tree.map(
+            lambda ax: ("layers",) + ax, s2, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        return params, specs
+
+    kinds = _layer_kinds(cfg)
+    if _stackable(cfg):
+        layer_keys = jax.random.split(ks[2], cfg.num_layers)
+        params["layers"] = jax.vmap(
+            lambda k: _layer_init(k, cfg, kinds[0], dtype)[0]
+        )(layer_keys)
+        _, s1 = _layer_init(ks[2], cfg, kinds[0], dtype)
+        specs["layers"] = jax.tree.map(
+            lambda ax: ("layers",) + ax, s1, is_leaf=lambda x: isinstance(x, tuple)
+        )
+    else:
+        layer_keys = jax.random.split(ks[2], cfg.num_layers)
+        ps, ss = [], []
+        for i, kind in enumerate(kinds):
+            p, s = _layer_init(layer_keys[i], cfg, kind, dtype)
+            ps.append(p)
+            ss.append(s)
+        params["layers"] = ps
+        specs["layers"] = ss
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _block_apply(cfg: ModelConfig, p, x, positions, kind: str, enc_kv=None):
+    """Returns (y, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = M.rmsnorm(p["norm1"], x)
+    if kind == "attn":
+        y = A.attn_apply(p["attn"], h, cfg, positions)
+    elif kind == "enc_attn":
+        y = A.encoder_attn_apply(p["attn"], h, cfg, positions)
+    elif kind == "local_attn":
+        y = A.attn_apply(p["attn"], h, cfg, positions,
+                         window=cfg.local_window)
+    elif kind == "dec_attn":
+        y = A.attn_apply(p["attn"], h, cfg, positions)
+    elif kind == "moe":
+        y = A.attn_apply(p["attn"], h, cfg, positions)
+    elif kind == "rglru":
+        y = R.rglru_apply(p["rglru"], h, cfg)
+    elif kind == "rwkv":
+        y, _ = W.rwkv_time_apply(p["time"], h, cfg)
+    else:
+        raise ValueError(kind)
+    x = x + y.astype(x.dtype)
+    x = shard(x, "batch", "seq", "act_embed")
+
+    if kind == "dec_attn":
+        hx = M.rmsnorm(p["norm_x"], x)
+        x = x + A.cross_attn_apply(p["xattn"], hx, enc_kv, cfg).astype(x.dtype)
+
+    h2 = M.rmsnorm(p["norm2"], x)
+    if kind == "moe":
+        y2, aux = MOE.moe_apply(p["moe"], h2, cfg)
+    elif kind == "rwkv":
+        y2, _ = W.rwkv_channel_apply(p["chan"], h2, cfg)
+    else:
+        y2 = M.mlp(p["mlp"], h2, cfg.mlp_act, cfg.compute_dtype, cfg=cfg)
+    x = x + y2.astype(x.dtype)
+    x = shard(x, "batch", "seq", "act_embed")
+    return x, aux
+
+
+def _maybe_remat(cfg, fn):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        # Save matmul outputs; recompute only cheap elementwise in bwd:
+        # ~-30% recompute FLOPs/traffic vs "full" for ~2x live activations.
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return fn
+
+
+def _run_stack(cfg: ModelConfig, layers, x, positions, kinds, enc_kv=None):
+    if _stackable(cfg) and cfg.family != "encdec":
+        body_fn = _maybe_remat(
+            cfg,
+            lambda carry, lp: (
+                lambda r: ((r[0], carry[1] + r[1]), None)
+            )(_block_apply(cfg, lp, carry[0], positions, kinds[0])),
+        )
+        (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                                   layers)
+        return x, aux
+    aux = jnp.zeros((), jnp.float32)
+    for p, kind in zip(layers, kinds):
+        fn = _maybe_remat(
+            cfg, lambda xx, pp=p, kk=kind: _block_apply(cfg, pp, xx, positions,
+                                                        kk, enc_kv)
+        )
+        x, a = fn(x)
+        aux = aux + a
+    return x, aux
+
+
+def _scan_encdec(cfg: ModelConfig, layers, x, positions, kind, enc_kv=None):
+    def body(carry, lp):
+        y, _ = _block_apply(cfg, lp, carry, positions, kind, enc_kv)
+        return y, None
+
+    body = _maybe_remat(cfg, body)
+    x, _ = jax.lax.scan(body, x, layers)
+    return x
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jnp.ndarray,                       # (B, S_text)
+    prefix_embeds: Optional[jnp.ndarray] = None,   # vlm: (B, P, D)
+    enc_embeds: Optional[jnp.ndarray] = None,      # encdec: (B, S_enc, D)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (final_hidden (B,S,D), aux_loss)."""
+    dtype = cfg.compute_dtype
+    x = M.embed(params["embed"], tokens, dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(dtype), x], axis=1)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = shard(x, "batch", "seq", "act_embed")
+
+    if cfg.family == "encdec":
+        assert enc_embeds is not None, "encdec needs encoder-side embeddings"
+        e = enc_embeds.astype(dtype)
+        be, se = e.shape[:2]
+        e = e + M.sinusoidal(
+            jnp.broadcast_to(jnp.arange(se, dtype=jnp.int32), (be, se)),
+            cfg.d_model,
+        ).astype(dtype)
+        e = shard(e, "batch", "seq", "act_embed")
+        enc_pos = jnp.broadcast_to(jnp.arange(se, dtype=jnp.int32), (be, se))
+        enc_out = _scan_encdec(cfg, params["encoder"], e, enc_pos, "enc_attn")
+
+        # Cross K/V computed per layer inside the scan: carry enc_out.
+        def dec_body(carry, lp):
+            xx = carry
+            kv = A.cross_kv(lp["xattn"], enc_out, cfg)
+            y, _ = _block_apply(cfg, lp, xx, positions, "dec_attn", kv)
+            return y, None
+
+        x, _ = jax.lax.scan(_maybe_remat(cfg, dec_body), x, params["decoder"])
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        kinds = _layer_kinds(cfg)
+        x, aux = _run_stack(cfg, params["layers"], x, positions, kinds)
+
+    x = M.rmsnorm(params["final_norm"], x)
+    return x, aux
+
+
+def logits_from_hidden(cfg: ModelConfig, params: Params,
+                       h: jnp.ndarray) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        w = params["embed"]["table"].astype(cfg.compute_dtype)
+        logits = jnp.dot(h.astype(cfg.compute_dtype), w.T,
+                         preferred_element_type=jnp.float32)
+    else:
+        logits = M.unembed(params["unembed"], h, cfg.compute_dtype,
+                           cfg=cfg)
+    if cfg.padded_vocab != cfg.vocab_size:
+        logits = logits[..., : cfg.vocab_size]
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def decode_state_init(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    """Stacked (scan-compatible) per-layer decode state."""
+    kinds = _layer_kinds(cfg)
+
+    def one(kind):
+        if kind in ("attn", "moe", "dec_attn"):
+            return A.cache_init(cfg, batch, max_len)
+        if kind == "local_attn":
+            return A.cache_init(cfg, batch, max_len, window=cfg.local_window)
+        if kind == "rglru":
+            return R.rglru_state_init(cfg, batch, cfg.compute_dtype)
+        if kind == "rwkv":
+            return W.rwkv_state_init(cfg, batch)
+        raise ValueError(kind)
+
+    if cfg.family == "encdec":
+        caches = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[A.cache_init(cfg, batch, max_len) for _ in range(cfg.num_layers)],
+        )
+        return {"self": caches}
+    if _stackable(cfg):
+        return {
+            "layers": jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[one(kinds[0]) for _ in range(cfg.num_layers)],
+            )
+        }
+    return {"layers": [one(k) for k in kinds]}
+
+
+def decode_state_specs(cfg: ModelConfig) -> Dict:
+    """Logical-axis specs mirroring ``decode_state_init`` (for shardings)."""
+    kinds = _layer_kinds(cfg)
+    attn_spec = {
+        "k": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+        "v": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+    }
+
+    def one(kind, stacked=True):
+        lead = ("layers",) if stacked else ()
+        if kind in ("attn", "moe", "dec_attn", "local_attn"):
+            return {
+                "k": lead + ("batch", "kv_seq", "kv_heads", "head_dim"),
+                "v": lead + ("batch", "kv_seq", "kv_heads", "head_dim"),
+            }
+        if kind == "rglru":
+            return {
+                "h": lead + ("batch", "lru"),
+                "conv": lead + ("batch", "conv_w", "lru"),
+            }
+        if kind == "rwkv":
+            return {
+                "S": lead + ("batch", "rwkv_heads", "head_dim", "head_dim2"),
+                "last_t": lead + ("batch", "act_embed"),
+                "last_c": lead + ("batch", "act_embed"),
+            }
+        raise ValueError(kind)
+
+    if cfg.family == "encdec":
+        return {"self": attn_spec}
+    if _stackable(cfg):
+        return {"layers": one(kinds[0])}
+    return {"layers": [one(k, stacked=False) for k in kinds]}
+
+
+def _block_decode(cfg, p, x, cache, pos, kind, enc_kv=None):
+    h = M.rmsnorm(p["norm1"], x)
+    if kind in ("attn", "moe", "dec_attn"):
+        y, cache2 = A.decode_attn_apply(p["attn"], h, cache, pos, cfg)
+    elif kind == "local_attn":
+        y, cache2 = A.decode_attn_apply(p["attn"], h, cache, pos, cfg,
+                                        window=cfg.local_window)
+    elif kind == "rglru":
+        y, cache2 = R.rglru_step(p["rglru"], h, cache, cfg)
+    elif kind == "rwkv":
+        y, st = W.rwkv_time_apply(
+            p["time"], h, cfg, state={"S": cache["S"], "last": cache["last_t"]}
+        )
+        cache2 = dict(cache, S=st["S"], last_t=st["last"])
+    else:
+        raise ValueError(kind)
+    x = x + y.astype(x.dtype)
+
+    if kind == "dec_attn":
+        hx = M.rmsnorm(p["norm_x"], x)
+        x = x + A.cross_attn_apply(p["xattn"], hx, enc_kv, cfg).astype(x.dtype)
+
+    h2 = M.rmsnorm(p["norm2"], x)
+    if kind == "moe":
+        y2, _ = MOE.moe_apply(p["moe"], h2, cfg)
+    elif kind == "rwkv":
+        y2, last_c = W.rwkv_channel_apply(p["chan"], h2, cfg,
+                                          prev=cache["last_c"])
+        cache2 = dict(cache2, last_c=last_c)
+    else:
+        y2 = M.mlp(p["mlp"], h2, cfg.mlp_act, cfg.compute_dtype, cfg=cfg)
+    x = x + y2.astype(x.dtype)
+    return x, cache2
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Params,
+    state: Dict,
+    tokens: jnp.ndarray,          # (B,) current tokens
+    pos: jnp.ndarray,             # () int32 position
+    enc_out: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Dict]:
+    """One decode step: returns (logits (B, V), new state)."""
+    dtype = cfg.compute_dtype
+    x = M.embed(params["embed"], tokens[:, None], dtype)   # (B,1,D)
+    x = shard(x, "batch", None, "act_embed")
+    kinds = _layer_kinds(cfg)
+
+    if cfg.family == "encdec":
+        def body(carry, xs):
+            lp, cache = xs
+            kv = A.cross_kv(lp["xattn"], enc_out, cfg)
+            y, c2 = _block_decode(cfg, lp, carry, cache, pos, "dec_attn", kv)
+            return y, c2
+
+        x, new_cache = jax.lax.scan(body, x, (params["decoder"],
+                                              state["self"]))
+        state = {"self": new_cache}
+    elif _stackable(cfg):
+        def body(carry, xs):
+            lp, cache = xs
+            y, c2 = _block_decode(cfg, lp, carry, cache, pos, kinds[0])
+            return y, c2
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"],
+                                              state["layers"]))
+        state = {"layers": new_cache}
+    else:
+        new_caches = []
+        for p, kind, cache in zip(params["layers"], kinds, state["layers"]):
+            x, c2 = _block_decode(cfg, p, x, cache, pos, kind)
+            new_caches.append(c2)
+        state = {"layers": new_caches}
+
+    h = M.rmsnorm(params["final_norm"], x)
+    logits = logits_from_hidden(cfg, params, h)[:, 0, :]
+    return logits, state

@@ -1,0 +1,4 @@
+"""Optimizers."""
+from repro.optim.adamw import AdamW, AdamWState
+
+__all__ = ["AdamW", "AdamWState"]

@@ -1,0 +1,74 @@
+"""AdamW + cosine schedule + global-norm clipping (pure JAX, pytree-based)."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+    def schedule(self, step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum((step + 1.0) / max(self.warmup_steps, 1), 1.0)
+        prog = jnp.clip(
+            (step - self.warmup_steps)
+            / max(self.total_steps - self.warmup_steps, 1),
+            0.0, 1.0,
+        )
+        cos = 0.5 * (1 + jnp.cos(math.pi * prog))
+        frac = self.min_lr_frac + (1 - self.min_lr_frac) * cos
+        return self.lr * warm * frac
+
+    def init(self, params) -> AdamWState:
+        z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamWState(
+            mu=jax.tree.map(z, params), nu=jax.tree.map(z, params)
+        )
+
+    def update(self, grads, state: AdamWState, params,
+               step) -> Tuple[Any, AdamWState]:
+        gnorm = jnp.sqrt(
+            sum(jnp.vdot(g, g).real for g in jax.tree.leaves(grads))
+        )
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-12))
+        grads = jax.tree.map(lambda g: (g * scale).astype(jnp.float32), grads)
+
+        mu = jax.tree.map(
+            lambda m, g: self.b1 * m + (1 - self.b1) * g, state.mu, grads
+        )
+        nu = jax.tree.map(
+            lambda v, g: self.b2 * v + (1 - self.b2) * g * g, state.nu, grads
+        )
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1 - self.b1 ** t
+        bc2 = 1 - self.b2 ** t
+        lr = self.schedule(step)
+
+        def upd(m, v, p):
+            mh = m / bc1
+            vh = v / bc2
+            u = -lr * (mh / (jnp.sqrt(vh) + self.eps)
+                       + self.weight_decay * p.astype(jnp.float32))
+            return u.astype(p.dtype)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, AdamWState(mu=mu, nu=nu)

@@ -1,0 +1,1 @@
+"""quant subpackage."""

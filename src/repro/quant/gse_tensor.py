@@ -1,0 +1,74 @@
+"""GSE-SEM quantization of LM weights (the paper's format at LM scale).
+
+``quantize_tree`` packs every 2-D+ float leaf of a params tree into
+``GSEPacked`` segments (per-tensor shared-exponent table, paper III.B);
+``QuantLinear`` materializes the requested precision tag on the fly --
+one stored copy, three serving precisions, exactly the storage/compute
+decoupling the paper builds for sparse matrices.
+
+Bytes per element: tag1 = 2, tag2 = 4, tag3 = 8 (vs f32 4 / bf16 2 with
+fixed exponent bits).  At tag1 the 15-bit-mantissa head is ~16x more
+precise than bf16's 8-bit significand for exponent-clustered weights
+(LM weight tensors are strongly clustered -- see bench lm_gse_serving).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gse
+from repro.kernels import ref as kref
+
+__all__ = ["quantize_tree", "dequantize_tree", "gse_linear", "tree_bytes"]
+
+
+def quantize_tree(params: Any, k: int = 8, min_size: int = 4096) -> Any:
+    """Pack float leaves (>= min_size elems) to GSEPacked; keep the rest."""
+
+    def q(leaf):
+        if (
+            hasattr(leaf, "dtype")
+            and jnp.issubdtype(leaf.dtype, jnp.floating)
+            and leaf.size >= min_size
+        ):
+            return gse.pack(np.asarray(leaf, np.float64), k)
+        return leaf
+
+    return jax.tree.map(q, params)
+
+
+def dequantize_tree(packed: Any, tag: int = 2, dtype=jnp.bfloat16) -> Any:
+    def dq(leaf):
+        if isinstance(leaf, gse.GSEPacked):
+            return gse.decode_jnp(leaf, tag, jnp.float32).astype(dtype)
+        return leaf
+
+    return jax.tree.map(
+        dq, packed, is_leaf=lambda x: isinstance(x, gse.GSEPacked)
+    )
+
+
+def gse_linear(x: jnp.ndarray, w: Any, tag: int = 2,
+               dtype=jnp.bfloat16) -> jnp.ndarray:
+    """x @ W for dense or GSEPacked W (jnp decode path; the Pallas kernel
+    ``repro.kernels.ops.gse_matmul`` is the TPU-fused equivalent)."""
+    if isinstance(w, gse.GSEPacked):
+        wd = gse.decode_jnp(w, tag, jnp.float32).astype(dtype)
+        return jnp.dot(x.astype(dtype), wd)
+    return jnp.dot(x.astype(dtype), w.astype(dtype))
+
+
+def tree_bytes(tree: Any, tag: int = 2) -> int:
+    """Bytes the parameter stream reads at serving precision ``tag``."""
+    total = 0
+    for leaf in jax.tree.leaves(
+        tree, is_leaf=lambda x: isinstance(x, gse.GSEPacked)
+    ):
+        if isinstance(leaf, gse.GSEPacked):
+            total += leaf.nbytes(tag)
+        elif hasattr(leaf, "nbytes"):
+            total += leaf.nbytes
+    return total

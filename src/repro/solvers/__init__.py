@@ -1,0 +1,18 @@
+"""Iterative solvers with stepped mixed precision (paper Section III.D)."""
+from repro.solvers.cg import CGResult, solve_cg
+from repro.solvers.gmres import GMRESResult, solve_gmres
+from repro.solvers.operators import (
+    make_dense_operator,
+    make_fixed_operator,
+    make_gse_operator,
+)
+
+__all__ = [
+    "CGResult",
+    "solve_cg",
+    "GMRESResult",
+    "solve_gmres",
+    "make_dense_operator",
+    "make_fixed_operator",
+    "make_gse_operator",
+]

@@ -1,0 +1,52 @@
+"""Linear-operator factories with precision-tag dispatch (paper Alg. 3).
+
+An *operator* is ``apply(x, tag) -> A @ x`` where ``tag`` is a traced int32
+in {1,2,3}.  GSE-SEM operators dispatch via ``lax.switch`` to the three
+SpMV precisions; fixed-format baselines ignore the tag.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.sparse.csr import CSR, GSECSR
+from repro.sparse.spmv import spmv, spmv_gse
+
+__all__ = ["make_gse_operator", "make_fixed_operator", "make_dense_operator"]
+
+
+def make_gse_operator(a: GSECSR, acc_dtype=jnp.float64) -> Callable:
+    """Three-precision operator over one stored copy (the paper's A1/A2/A3)."""
+
+    def apply(x, tag):
+        return jax.lax.switch(
+            jnp.clip(tag - 1, 0, 2),
+            [
+                lambda v: spmv_gse(a, v, tag=1, acc_dtype=acc_dtype),
+                lambda v: spmv_gse(a, v, tag=2, acc_dtype=acc_dtype),
+                lambda v: spmv_gse(a, v, tag=3, acc_dtype=acc_dtype),
+            ],
+            x,
+        )
+
+    return apply
+
+
+def make_fixed_operator(a: CSR, store_dtype=jnp.float64, acc_dtype=jnp.float64):
+    """FP64/FP32/BF16/FP16 baseline: storage precision fixed, acc high."""
+
+    def apply(x, tag):
+        del tag
+        return spmv(a, x, store_dtype=store_dtype, acc_dtype=acc_dtype)
+
+    return apply
+
+
+def make_dense_operator(mat: jnp.ndarray):
+    def apply(x, tag):
+        del tag
+        return mat @ x
+
+    return apply

@@ -1,0 +1,19 @@
+"""Sparse substrate: CSR/ELL containers, generators, SpMV operators."""
+from repro.sparse import csr, generators, spmv
+from repro.sparse.csr import CSR, GSECSR, from_coo, pack_csr, to_ell
+from repro.sparse.spmv import spmv as spmv_csr
+from repro.sparse.spmv import spmv_ell, spmv_gse
+
+__all__ = [
+    "csr",
+    "generators",
+    "spmv",
+    "CSR",
+    "GSECSR",
+    "from_coo",
+    "pack_csr",
+    "to_ell",
+    "spmv_csr",
+    "spmv_ell",
+    "spmv_gse",
+]

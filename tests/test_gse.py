@@ -1,0 +1,233 @@
+"""Unit + property tests for the GSE-SEM core format (paper section III.B)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gse
+
+
+def _rand_clustered(n, seed=0, exps=(0, -1, 3), spread=2):
+    """Values whose exponents cluster around a few points (paper Fig. 1)."""
+    rng = np.random.default_rng(seed)
+    base = rng.choice(exps, size=n)
+    jitter = rng.integers(-spread, spread + 1, size=n)
+    mant = rng.uniform(1.0, 2.0, size=n)
+    sign = rng.choice([-1.0, 1.0], size=n)
+    return sign * mant * np.exp2(base + jitter)
+
+
+# ---------------------------------------------------------------------------
+# Table extraction
+# ---------------------------------------------------------------------------
+
+def test_table_contains_max_exponent():
+    vals = np.array([1.0, 2.0, 4.0, 1e300, 0.5, 0.5, 0.5])
+    table = gse.extract_shared_exponents(vals, 4)
+    bits = np.float64(1e300).view(np.uint64)
+    e_max = int((bits >> np.uint64(52)) & np.uint64(0x7FF))
+    assert e_max + 1 in table.tolist()
+
+
+def test_table_shape_and_dtype():
+    for k in (2, 4, 8, 16, 64):
+        t = gse.extract_shared_exponents(_rand_clustered(1000), k)
+        assert t.shape == (k,) and t.dtype == np.int32
+        assert (np.diff(t) <= 0).all()  # descending
+
+
+def test_table_all_zeros_input():
+    t = gse.extract_shared_exponents(np.zeros(10), 8)
+    assert t.shape == (8,)
+
+
+# ---------------------------------------------------------------------------
+# Round-trip precision ladder
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [2, 4, 8, 16, 64])
+def test_roundtrip_precision_ladder(k):
+    vals = _rand_clustered(4096, seed=k)
+    p = gse.pack(vals, k)
+    errs = []
+    for tag in (1, 2, 3):
+        dec = gse.decode(p, tag)
+        rel = np.abs(dec - vals) / np.abs(vals)
+        errs.append(rel.max())
+    # Monotone: more tail segments => strictly better or equal.
+    assert errs[0] >= errs[1] >= errs[2]
+    # head+tail1 covers >= 28 mantissa bits for near exponents.
+    assert errs[1] < 2 ** -(15 - p.ei_bit + 16 - 1 - 8)
+    # full precision: exact for values within 8 exponent steps of a table hit
+    assert errs[2] < 2 ** -(p.width - 1 - 8)
+
+
+def test_exact_match_exponents_head_error_bound():
+    # All values share one exponent -> minDiff == 1 -> head has M_H-1
+    # effective mantissa bits after the explicit leading 1.
+    rng = np.random.default_rng(0)
+    vals = rng.uniform(1.0, 2.0, size=2000)  # exponent 0 for all
+    p = gse.pack(vals, 8)
+    dec = gse.decode(p, 1)
+    m_h = 15 - p.ei_bit
+    rel = np.abs(dec - vals) / np.abs(vals)
+    assert rel.max() < 2 ** -(m_h - 1)  # truncation error < 1 ulp of M_H-1 bits
+
+
+def test_full_tag_exact_when_no_shift_loss():
+    # Values exactly representable: mantissa fits in W bits after shift<=8.
+    vals = np.array([1.0, 1.5, -2.25, 0.75, 1024.0, -0.015625])
+    p = gse.pack(vals, 8)
+    np.testing.assert_array_equal(gse.decode(p, 3), vals)
+
+
+def test_zero_and_sign_handling():
+    vals = np.array([0.0, -0.0, 1.0, -1.0, 2.5, -2.5])
+    p = gse.pack(vals, 4)
+    dec = gse.decode(p, 3)
+    assert dec[0] == 0 and dec[1] == 0
+    np.testing.assert_array_equal(dec[2:], vals[2:])
+
+
+def test_small_values_flush_to_zero_at_head():
+    # A value many binades below every shared exponent flushes to 0 at tag=1
+    # (paper Algorithm 2 line 16) but is recovered by the tails.
+    vals = np.array([1.0] * 64 + [2.0] * 64 + [2.0 ** -40])
+    p = gse.pack(vals, 2)
+    assert gse.decode(p, 1)[-1] == 0.0
+    assert gse.decode(p, 3)[-1] == pytest.approx(2.0 ** -40, rel=1e-3)
+
+
+def test_pack_with_stale_table_saturates():
+    table = gse.extract_shared_exponents(np.array([1.0, 2.0]), 2)
+    p = gse.pack_with_table(np.array([1e30, -1e30, 1.0]), table, 2)
+    dec = gse.decode(p, 3)
+    # Saturated to the max magnitude representable under the table, sign kept.
+    assert dec[0] > 0 and dec[1] < 0 and abs(dec[2] - 1.0) < 1e-15
+    assert np.isfinite(dec).all()
+    assert dec[0] <= 4.0  # max entry is exp(2.0)+1 -> values < 2^2
+
+
+def test_subnormal_input():
+    vals = np.array([5e-324, 1e-310, 1.0])
+    p = gse.pack(vals, 4)
+    dec = gse.decode(p, 3)
+    assert dec[2] == 1.0
+    assert dec[0] >= 0 and np.isfinite(dec).all()
+
+
+# ---------------------------------------------------------------------------
+# jnp decode == numpy decode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tag", [1, 2, 3])
+def test_decode_jnp_matches_numpy(tag):
+    vals = _rand_clustered(2048, seed=7)
+    p = gse.pack(vals, 8)
+    ref = gse.decode(p, tag)
+    out64 = np.asarray(gse.decode_jnp(p, tag, jnp.float64))
+    np.testing.assert_allclose(out64, ref, rtol=0, atol=0)
+    out32 = np.asarray(gse.decode_jnp(p, tag, jnp.float32))
+    np.testing.assert_allclose(out32, ref, rtol=2e-7, atol=1e-30)
+
+
+# ---------------------------------------------------------------------------
+# f32-source jittable pack/decode (gradient compression path)
+# ---------------------------------------------------------------------------
+
+def test_pack32_roundtrip():
+    vals = _rand_clustered(4096, seed=3).astype(np.float32)
+    table = gse.extract_shared_exponents_jnp(jnp.asarray(vals), 8)
+    head, tail1 = gse.pack32_jnp(jnp.asarray(vals), table, 8)
+    dec2 = np.asarray(gse.decode32_jnp(table, head, tail1, 8, 2))
+    rel = np.abs(dec2 - vals) / np.maximum(np.abs(vals), 1e-30)
+    # W=28 >= 24-bit f32 significand + shift slack: near-exact for hits.
+    assert np.median(rel) < 2 ** -22
+    dec1 = np.asarray(gse.decode32_jnp(table, head, tail1, 8, 1))
+    rel1 = np.abs(dec1 - vals) / np.maximum(np.abs(vals), 1e-30)
+    assert np.median(rel1) < 2 ** -9
+
+
+def test_pack32_handles_zeros_and_signs():
+    vals = jnp.asarray(np.array([0.0, -1.5, 3.25, -0.0], np.float32))
+    table = gse.extract_shared_exponents_jnp(vals, 4)
+    head, tail1 = gse.pack32_jnp(vals, table, 4)
+    dec = np.asarray(gse.decode32_jnp(table, head, tail1, 4, 2))
+    assert dec[0] == 0 and dec[3] == 0
+    np.testing.assert_allclose(dec[1:3], [-1.5, 3.25], rtol=1e-6)
+
+
+def test_fake_quant_straight_through_gradient():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(128,)), jnp.float32)
+    g = jax.grad(lambda v: jnp.sum(gse.gse_fake_quant(v, 8, 1) ** 2))(x)
+    # STE: gradient flows as if identity -> grad = 2*fq(x) (not zero).
+    assert np.abs(np.asarray(g)).max() > 0
+    fq = gse.gse_fake_quant(x, 8, 2)
+    np.testing.assert_allclose(np.asarray(fq), np.asarray(x), rtol=1e-5, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# Property tests (hypothesis): format invariants
+# ---------------------------------------------------------------------------
+
+finite_floats = st.floats(
+    allow_nan=False,
+    allow_infinity=False,
+    allow_subnormal=False,
+    min_value=-1e100,
+    max_value=1e100,
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    st.lists(finite_floats, min_size=1, max_size=200),
+    st.sampled_from([2, 4, 8, 16]),
+)
+def test_prop_decode_monotone_precision(vals, k):
+    arr = np.asarray(vals, np.float64)
+    p = gse.pack(arr, k)
+    d1, d2, d3 = (gse.decode(p, t) for t in (1, 2, 3))
+    e1 = np.abs(d1 - arr)
+    e2 = np.abs(d2 - arr)
+    e3 = np.abs(d3 - arr)
+    assert (e2 <= e1 + 1e-300).all()
+    assert (e3 <= e2 + 1e-300).all()
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(finite_floats, min_size=1, max_size=200))
+def test_prop_full_precision_bounded_relative_error(vals):
+    arr = np.asarray(vals, np.float64)
+    p = gse.pack(arr, 8)
+    dec = gse.decode(p, 3)
+    nz = arr != 0
+    if nz.any():
+        rel = np.abs(dec[nz] - arr[nz]) / np.abs(arr[nz])
+        # Worst case: value sits just below a table entry 2^52 away... but the
+        # max-exponent entry guarantees minDiff <= (e_max+1 - e_min). Values
+        # >= max/2^40 keep >= width-41 bits. We assert the universal bound:
+        # decode never overshoots and never flips sign.
+        assert (np.sign(dec[nz]) == np.sign(arr[nz])).sum() >= (
+            (rel < 1.0).sum()
+        )
+        assert (np.abs(dec[nz]) <= np.abs(arr[nz]) * (1 + 1e-12)).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(finite_floats, min_size=1, max_size=100))
+def test_prop_decode_jnp_equals_numpy(vals):
+    arr = np.asarray(vals, np.float64)
+    p = gse.pack(arr, 8)
+    for tag in (1, 2, 3):
+        np.testing.assert_array_equal(
+            np.asarray(gse.decode_jnp(p, tag, jnp.float64)), gse.decode(p, tag)
+        )
+
+
+def test_exponent_stats_clustered():
+    stats = gse.exponent_stats(_rand_clustered(20000))
+    assert stats["entropy_exponent"] < stats["entropy_value"]
+    assert stats["top64"] >= stats["top8"] >= stats["top1"]
+    assert stats["top64"] > 0.99

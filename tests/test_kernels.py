@@ -1,0 +1,241 @@
+"""Pallas kernel sweeps: interpret-mode kernels vs pure-jnp ref oracles.
+
+Per the kernel contract: sweep shapes/dtypes/tags and assert_allclose
+against ref.py.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gse
+from repro.kernels import ops, ref
+from repro.sparse import generators as G
+from repro.sparse.csr import pack_csr
+
+
+def _packed(shape, k=8, seed=0):
+    rng = np.random.default_rng(seed)
+    base = rng.choice([-2, 0, 1], size=shape)
+    vals = rng.uniform(1.0, 2.0, shape) * np.exp2(base)
+    vals *= rng.choice([-1.0, 1.0], size=shape)
+    return gse.pack(vals, k), vals
+
+
+# ---------------------------------------------------------------------------
+# gse_decode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(8, 128), (16, 256), (24, 384), (64, 128)])
+@pytest.mark.parametrize("tag", [1, 2, 3])
+def test_decode_kernel_vs_ref(shape, tag):
+    p, _ = _packed(shape, seed=hash(shape) % 1000)
+    out = ops.gse_decode(p, tag=tag)
+    want = ref.decode_ref(p.head, p.tail1, p.tail2, p.table, p.ei_bit, tag)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=0,
+                               atol=0)
+
+
+@pytest.mark.parametrize("k", [2, 4, 8, 16])
+def test_decode_kernel_k_sweep(k):
+    p, vals = _packed((16, 128), k=k, seed=k)
+    out = np.asarray(ops.gse_decode(p, tag=3))
+    rel = np.abs(out - vals) / np.abs(vals)
+    assert rel.max() < 1e-6  # f32 decode of near-exact mantissas
+
+
+def test_decode_kernel_unaligned_shape_pads():
+    p, vals = _packed((10, 130), seed=5)
+    out = np.asarray(ops.gse_decode(p, tag=3))
+    assert out.shape == (10, 130)
+    rel = np.abs(out - vals) / np.abs(vals)
+    assert rel.max() < 1e-6
+
+
+def test_decode_kernel_1d_input():
+    p, vals = _packed((512,), seed=6)
+    out = np.asarray(ops.gse_decode(p, tag=2))
+    assert out.shape == (512,)
+
+
+# ---------------------------------------------------------------------------
+# gse_matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mkn", [(8, 128, 128), (16, 256, 128), (8, 128, 256),
+                                 (32, 384, 256)])
+@pytest.mark.parametrize("tag", [1, 2, 3])
+def test_matmul_kernel_vs_ref(mkn, tag):
+    m, k_dim, n = mkn
+    rng = np.random.default_rng(m + n)
+    x = jnp.asarray(rng.normal(size=(m, k_dim)), jnp.float32)
+    p, _ = _packed((k_dim, n), seed=n)
+    out = ops.gse_matmul(x, p, tag=tag)
+    want = ref.matmul_ref(x, p.head, p.tail1, p.tail2, p.table, p.ei_bit, tag)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_matmul_kernel_accuracy_vs_true_values():
+    m, k_dim, n = 8, 256, 128
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(m, k_dim)), jnp.float32)
+    p, vals = _packed((k_dim, n), seed=1)
+    out3 = np.asarray(ops.gse_matmul(x, p, tag=3))
+    exact = np.asarray(x, np.float64) @ vals
+    assert np.abs(out3 - exact).max() / np.abs(exact).max() < 1e-5
+    out1 = np.asarray(ops.gse_matmul(x, p, tag=1))
+    r1 = np.abs(out1 - exact).max() / np.abs(exact).max()
+    assert 1e-6 < r1 < 1e-2  # head-only: quantized but useful
+
+
+@pytest.mark.parametrize("xdtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_kernel_input_dtypes(xdtype):
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(8, 128)), xdtype)
+    p, _ = _packed((128, 128), seed=3)
+    out = ops.gse_matmul(x, p, tag=1)
+    want = ref.matmul_ref(x, p.head, p.tail1, p.tail2, p.table, p.ei_bit, 1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5,
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# gse_spmv (blocked ELL)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gen,seed", [
+    (lambda: G.poisson2d(16), 0),
+    (lambda: G.convection_diffusion_2d(16), 1),
+    (lambda: G.random_spd(600, seed=2), 2),
+    (lambda: G.circuit_like(500, seed=3), 3),
+])
+@pytest.mark.parametrize("tag", [1, 2, 3])
+def test_spmv_kernel_vs_ref(gen, seed, tag):
+    a = gen()
+    g = pack_csr(a, k=8)
+    ell = ops.ell_pack_gsecsr(g, lane=128)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=a.shape[1]), jnp.float32)
+    out = ops.gse_spmv_ell(ell, g.table, x, g.ei_bit, tag=tag)
+    want = ref.spmv_ell_ref(*ell, g.table, x, g.ei_bit, tag)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5,
+                               atol=1e-4)
+
+
+def test_spmv_kernel_matches_segment_sum_spmv():
+    """Kernel agrees with the production jnp SpMV (f32 accumulate)."""
+    import repro.sparse.spmv as S
+
+    a = G.random_spd(400, seed=5)
+    g = pack_csr(a, k=8)
+    ell = ops.ell_pack_gsecsr(g, lane=128)
+    x64 = np.random.default_rng(5).normal(size=a.shape[1])
+    x = jnp.asarray(x64, jnp.float32)
+    out = np.asarray(ops.gse_spmv_ell(ell, g.table, x, g.ei_bit, tag=3))
+    want = np.asarray(S.spmv_gse(g, jnp.asarray(x64), tag=3))
+    np.testing.assert_allclose(out, want, rtol=5e-5, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# Property-based sweeps (hypothesis)
+# ---------------------------------------------------------------------------
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    rows=st.integers(1, 4).map(lambda m: m * 8),
+    cols=st.integers(1, 3).map(lambda n: n * 128),
+    k=st.sampled_from([2, 4, 8, 16]),
+    tag=st.sampled_from([1, 2, 3]),
+)
+def test_prop_decode_kernel_matches_ref(rows, cols, k, tag):
+    p, _ = _packed((rows, cols), k=k, seed=rows * cols + k)
+    out = ops.gse_decode(p, tag=tag)
+    want = ref.decode_ref(p.head, p.tail1, p.tail2, p.table, p.ei_bit, tag)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    m=st.integers(1, 2).map(lambda m: m * 8),
+    kdim=st.integers(1, 2).map(lambda n: n * 128),
+    n=st.integers(1, 2).map(lambda n: n * 128),
+    tag=st.sampled_from([1, 2, 3]),
+)
+def test_prop_matmul_kernel_matches_ref(m, kdim, n, tag):
+    rng = np.random.default_rng(m * kdim + n)
+    x = jnp.asarray(rng.normal(size=(m, kdim)), jnp.float32)
+    p, _ = _packed((kdim, n), seed=n + tag)
+    out = ops.gse_matmul(x, p, tag=tag)
+    want = ref.matmul_ref(x, p.head, p.tail1, p.tail2, p.table, p.ei_bit,
+                          tag)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_kernel_block_shape_sweep():
+    """Different BlockSpec tilings must not change results."""
+    p, _ = _packed((32, 512), seed=99)
+    ref_out = np.asarray(ops.gse_decode(p, tag=2, block=(8, 128)))
+    for block in [(16, 128), (8, 256), (32, 512)]:
+        out = np.asarray(ops.gse_decode(p, tag=2, block=block))
+        np.testing.assert_array_equal(out, ref_out)
+
+
+def test_matmul_kernel_block_sweep():
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(16, 256)), jnp.float32)
+    p, _ = _packed((256, 256), seed=7)
+    ref_out = np.asarray(ops.gse_matmul(x, p, tag=1, blocks=(8, 128, 128)))
+    for blocks in [(16, 128, 128), (8, 256, 128), (8, 128, 256),
+                   (16, 256, 256)]:
+        out = np.asarray(ops.gse_matmul(x, p, tag=1, blocks=blocks))
+        # different BK splits change f32 accumulation order (~ulps)
+        np.testing.assert_allclose(out, ref_out, rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (online softmax, VMEM-tiled)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.flash_attn import flash_attention_pallas  # noqa: E402
+
+
+@pytest.mark.parametrize("shape", [(2, 128, 64), (4, 256, 128), (1, 512, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_vs_ref(shape, causal):
+    bh, s, hd = shape
+    rng = np.random.default_rng(s + hd)
+    q = jnp.asarray(rng.normal(size=(bh, s, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(bh, s, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(bh, s, hd)), jnp.float32)
+    out = flash_attention_pallas(q, k, v, causal=causal, blocks=(128, 128))
+    want = ref.flash_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_block_sweep():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(2, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 256, 64)), jnp.float32)
+    want = ref.flash_ref(q, k, v, causal=True)
+    for blocks in [(128, 128), (64, 128), (128, 64), (256, 256), (64, 64)]:
+        out = flash_attention_pallas(q, k, v, causal=True, blocks=blocks)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(2, 128, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(2, 128, 64)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(2, 128, 64)), jnp.bfloat16)
+    out = flash_attention_pallas(q, k, v, causal=True)
+    want = ref.flash_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        rtol=2e-2, atol=2e-2)

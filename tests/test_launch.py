@@ -1,0 +1,271 @@
+"""Launch-layer tests: HLO analyzer, mesh, shapes, fault-tolerant restart.
+
+The 512-device dry-run itself runs via ``python -m repro.launch.dryrun``
+(results in dryrun_results/); here we test the machinery at small scale --
+including an 8-device subprocess that exercises the same sharding path.
+"""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo as H
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+ENV.pop("XLA_FLAGS", None)
+
+
+# ---------------------------------------------------------------------------
+# HLO analyzer
+# ---------------------------------------------------------------------------
+
+def test_analyze_scan_equals_unroll():
+    def f_scan(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    def f_unroll(x, w):
+        for _ in range(10):
+            x = jnp.tanh(x @ w)
+        return x
+
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    a_s = H.analyze(jax.jit(f_scan).lower(x, w).compile().as_text())
+    a_u = H.analyze(jax.jit(f_unroll).lower(x, w).compile().as_text())
+    expected = 2 * 128 * 256 * 256 * 10
+    assert a_s["flops"] == pytest.approx(expected, rel=0.05)
+    assert a_u["flops"] == pytest.approx(expected, rel=0.05)
+    assert a_s["bytes"] == pytest.approx(a_u["bytes"], rel=0.25)
+
+
+def test_collective_wire_formulas():
+    text = textwrap.dedent("""\
+    ENTRY %main (p: f32[64,64]) -> f32[64,64] {
+      %p = f32[64,64]{1,0} parameter(0)
+      %ag = f32[64,64]{1,0} all-gather(%p), channel_id=1, replica_groups={{0,1,2,3}}, dimensions={0}
+      %ar = f32[64,64]{1,0} all-reduce(%ag), channel_id=2, replica_groups={{0,1,2,3}}, to_apply=%add
+      ROOT %cp = f32[64,64]{1,0} collective-permute(%ar), channel_id=3, source_target_pairs={{0,1}}
+    }
+    """)
+    total, by_kind, counts = H.collective_bytes(text)
+    b = 64 * 64 * 4
+    assert by_kind["all-gather"] == pytest.approx(b * 3 / 4)
+    assert by_kind["all-reduce"] == pytest.approx(2 * b * 3 / 4)
+    assert by_kind["collective-permute"] == pytest.approx(b)
+    assert counts["all-gather"] == 1
+
+
+def test_mesh_shapes():
+    # make_mesh with 512 fake devices only works in the dryrun subprocess;
+    # here just validate the requested shapes/axes.
+    import inspect
+
+    from repro.launch import mesh
+
+    src = inspect.getsource(mesh.make_production_mesh)
+    assert "(2, 16, 16)" in src and "(16, 16)" in src
+    assert '"pod", "data", "model"' in src
+
+
+def test_shapes_and_skips():
+    from repro import configs
+    from repro.launch import shapes as SHP
+
+    cells = SHP.cells()
+    assert len(cells) == 40  # 10 archs x 4 shapes
+    skipped = [(a, s) for a, s, ok, _ in cells if not ok]
+    assert len(skipped) == 8  # long_500k for the 8 full-attention archs
+    assert all(s == "long_500k" for _, s in skipped)
+    runnable = [(a, s) for a, s, ok, _ in cells if ok]
+    assert ("rwkv6_1p6b", "long_500k") in runnable
+    assert ("recurrentgemma_2b", "long_500k") in runnable
+
+    cfg = configs.get_config("qwen3_4b")
+    spec = SHP.input_specs(cfg, "train_4k")
+    assert spec["tokens"].shape == (256, 4096)
+    cfg_e = configs.get_config("seamless_m4t_large_v2")
+    spec_e = SHP.input_specs(cfg_e, "prefill_32k")
+    assert spec_e["enc_embeds"].shape == (32, 16384, 1024)
+    assert spec_e["tokens"].shape == (32, 16384)
+
+
+# ---------------------------------------------------------------------------
+# 8-device subprocess: the dryrun sharding path at mini scale
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_mini_mesh_lower_compile():
+    code = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec
+    from repro import configs
+    from repro.distributed import sharding as SH
+    from repro.launch.dryrun import _ns
+    from repro.launch import hlo as H
+    from repro.models import stepfns, transformer as T
+    from repro.optim import AdamW
+
+    cfg = configs.get_config("granite_3_2b", smoke=True)
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    rules = configs.get_rules("granite_3_2b")
+    with SH.axis_rules(rules, mesh):
+        captured = {}
+        def ip(k):
+            p, s = T.init_params(cfg, k); captured["s"] = s; return p
+        pshapes = jax.eval_shape(ip, jax.random.key(0))
+        params_sh = _ns(mesh, captured["s"], rules, pshapes)
+        opt = AdamW(total_steps=100)
+        state_shapes = stepfns.TrainState(
+            params=pshapes, opt_state=jax.eval_shape(opt.init, pshapes),
+            step=jax.ShapeDtypeStruct((), jnp.int32))
+        opt_sh = type(jax.eval_shape(opt.init, pshapes))(mu=params_sh, nu=params_sh)
+        state_sh = stepfns.TrainState(params=params_sh, opt_state=opt_sh,
+                                      step=NamedSharding(mesh, PartitionSpec()))
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((4, 32), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((4, 32), jnp.int32),
+            "loss_mask": jax.ShapeDtypeStruct((4, 32), jnp.float32),
+        }
+        batch_sh = _ns(mesh, {k: ("batch", "seq") for k in batch}, rules, batch)
+        step = stepfns.make_train_step(cfg, opt)
+        with mesh:
+            compiled = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                               donate_argnums=(0,)).lower(state_shapes, batch).compile()
+    text = compiled.as_text()
+    total, kinds, counts = H.collective_bytes(text)
+    assert total > 0, "sharded train step must contain collectives"
+    assert "all-reduce" in kinds or "reduce-scatter" in kinds
+    mem = compiled.memory_analysis()
+    assert mem.argument_size_in_bytes > 0
+    print("MINI_OK", int(total))
+    """)
+    r = subprocess.run([sys.executable, "-c", code], env=ENV,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "MINI_OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance: failure mid-run -> restart resumes from checkpoint
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_train_failure_restart_resume_exact():
+    with tempfile.TemporaryDirectory() as d:
+        base = [sys.executable, "-m", "repro.launch.train",
+                "--arch", "granite_3_2b", "--smoke", "--steps", "14",
+                "--batch", "2", "--seq", "32",
+                "--ckpt-dir", d, "--ckpt-every", "5"]
+        r1 = subprocess.run(base + ["--simulate-failure-at", "9"],
+                            env=ENV, capture_output=True, text=True,
+                            timeout=900)
+        assert r1.returncode == 17, r1.stderr[-2000:]  # simulated crash
+        r2 = subprocess.run(base, env=ENV, capture_output=True, text=True,
+                            timeout=900)
+        assert r2.returncode == 0, r2.stderr[-2000:]
+        assert "resumed from step" in r2.stdout
+        # a full uninterrupted run must produce the same final loss
+        with tempfile.TemporaryDirectory() as d2:
+            r3 = subprocess.run(
+                [sys.executable, "-m", "repro.launch.train",
+                 "--arch", "granite_3_2b", "--smoke", "--steps", "14",
+                 "--batch", "2", "--seq", "32",
+                 "--ckpt-dir", d2, "--ckpt-every", "50"],
+                env=ENV, capture_output=True, text=True, timeout=900)
+        last2 = [l for l in r2.stdout.splitlines() if l.startswith("step")][-1]
+        last3 = [l for l in r3.stdout.splitlines() if l.startswith("step")][-1]
+        loss2 = float(last2.split("loss")[1].split()[0])
+        loss3 = float(last3.split("loss")[1].split()[0])
+        assert loss2 == pytest.approx(loss3, rel=1e-4), (last2, last3)
+
+
+@pytest.mark.slow
+def test_elastic_restore_different_mesh():
+    """Checkpoint saved under one mesh restores re-sharded onto another
+    (elastic restart: pod count changes, training continues)."""
+    code = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import tempfile
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.checkpoint import ckpt
+
+    mesh_a = jax.make_mesh((2, 4), ("data", "model"))
+    mesh_b = jax.make_mesh((4, 2), ("data", "model"))
+    w = jnp.arange(64 * 32, dtype=jnp.float32).reshape(64, 32)
+    tree = {"w": jax.device_put(w, NamedSharding(mesh_a, P("data", "model")))}
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, tree, step=1)
+        target = {"w": NamedSharding(mesh_b, P("data", "model"))}
+        restored, step, _ = ckpt.restore(d, 1, tree, target_sharding=target)
+    assert restored["w"].sharding.mesh.devices.shape == (4, 2)
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(w))
+    print("ELASTIC_OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], env=ENV,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "ELASTIC_OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_compressed_psum_wire_u16():
+    """shard_map GSE-SEM all-reduce: u16 payloads on the wire, result
+    tracks the exact f32 psum (tag-2: ~f32-grade for clustered grads)."""
+    code = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.wire import compressed_psum
+
+    mesh = jax.make_mesh((8,), ("pod",))
+    n = 8 * 1024
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(8, n)).astype(np.float32))
+
+    def body(gs):
+        return compressed_psum(gs[0], "pod")
+
+    out = jax.jit(jax.shard_map(
+        body, mesh=mesh, in_specs=P("pod"), out_specs=P(None),
+        check_vma=False,
+    ))(g)
+    exact = np.asarray(g).sum(0)
+    rel = np.abs(np.asarray(out) - exact) / np.maximum(np.abs(exact), 1e-3)
+    assert np.median(rel) < 1e-4, np.median(rel)
+
+    # the wire really moves u16: collectives in HLO carry u16 operands
+    txt = jax.jit(jax.shard_map(
+        body, mesh=mesh, in_specs=P("pod"), out_specs=P(None),
+        check_vma=False,
+    )).lower(g).compile().as_text()
+    import re
+    coll = [l for l in txt.splitlines()
+            if re.search(r"= \\S+ (all-to-all|all-gather)\\(", l)]
+    assert any("u16" in l for l in coll), coll[:5]
+    # no f32 all-to-all/all-gather of the payload size
+    big_f32 = [l for l in coll if "f32[8,1024]" in l]
+    assert not big_f32, big_f32
+    print("WIRE_OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], env=ENV,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, (r.stderr[-3000:], r.stdout[-500:])
+    assert "WIRE_OK" in r.stdout

@@ -1,0 +1,97 @@
+"""Tests for the stepped-precision controller (paper Section III.D)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import precision as P
+
+
+def _feed(params, residuals):
+    st = P.init(params)
+    tags = []
+    for r in residuals:
+        st = P.record(st, jnp.asarray(r, jnp.float64))
+        st = P.update_tag(st, params)
+        tags.append(int(st.tag))
+    return st, tags
+
+
+def test_no_switch_before_l():
+    params = P.MonitorParams(t=10, l=100, m=10)
+    # Perfectly flat residual would trigger C3 -- but not before l.
+    _, tags = _feed(params, [1.0] * 99)
+    assert all(t == 1 for t in tags)
+
+
+def test_c3_fires_on_flat_residual():
+    params = P.MonitorParams(t=10, l=20, m=10)
+    st, tags = _feed(params, [1.0] * 40)
+    assert tags[-1] >= 2  # flat -> nDec == 0 -> step up
+
+
+def test_no_switch_on_healthy_convergence():
+    params = P.MonitorParams(t=10, l=20, m=10, rsd_limit=10.0, reldec_limit=0.01)
+    # Residual falling 5%/iter: nDec==t-1, relDec large -> no condition fires.
+    resid = [0.95 ** i for i in range(60)]
+    _, tags = _feed(params, resid)
+    assert all(t == 1 for t in tags)
+
+
+def test_c2_fires_on_slow_decrease():
+    params = P.MonitorParams(t=10, l=20, m=10, rsd_limit=10.0, reldec_limit=0.4)
+    # Residual falling but only ~1e-4 per window -> relDec < 0.4.
+    resid = [1.0 - 1e-5 * i for i in range(60)]
+    _, tags = _feed(params, resid)
+    assert tags[-1] >= 2
+
+
+def test_c1_fires_on_oscillation():
+    params = P.MonitorParams(t=10, l=20, m=10, rsd_limit=0.05, reldec_limit=0.0)
+    rng = np.random.default_rng(0)
+    resid = list(1.0 + 0.5 * rng.standard_normal(60) ** 2)
+    _, tags = _feed(params, resid)
+    assert tags[-1] >= 2
+
+
+def test_tag_caps_at_max():
+    params = P.MonitorParams(t=4, l=4, m=4, max_tag=3)
+    _, tags = _feed(params, [1.0] * 200)
+    assert tags[-1] == 3
+
+
+def test_metrics_values():
+    params = P.MonitorParams(t=4)
+    st = P.init(params)
+    for r in [4.0, 3.0, 2.0, 1.0]:
+        st = P.record(st, jnp.asarray(r, jnp.float64))
+    rsd, ndec, reldec = P.metrics(st)
+    assert int(ndec) == 3
+    assert float(reldec) == (4.0 - 1.0) / 4.0
+    w = np.array([4, 3, 2, 1.0])
+    assert np.isclose(float(rsd), w.std() / w.mean())
+
+
+def test_ring_buffer_ordering_after_wrap():
+    params = P.MonitorParams(t=4)
+    st = P.init(params)
+    for r in [9.0, 8.0, 7.0, 4.0, 3.0, 2.0, 1.0]:  # wraps
+        st = P.record(st, jnp.asarray(r, jnp.float64))
+    _, ndec, reldec = P.metrics(st)
+    assert int(ndec) == 3
+    assert float(reldec) == (4.0 - 1.0) / 4.0
+
+
+def test_jittable_inside_while_loop():
+    params = P.MonitorParams(t=8, l=8, m=8)
+
+    def body(carry):
+        i, st = carry
+        st = P.record(st, jnp.asarray(1.0, jnp.float64))
+        st = P.update_tag(st, params)
+        return i + 1, st
+
+    def cond(carry):
+        return carry[0] < 50
+
+    _, st = jax.lax.while_loop(cond, body, (jnp.int32(0), P.init(params)))
+    assert int(st.tag) >= 2

@@ -1,0 +1,45 @@
+"""Two-float arithmetic vs native f64 (TPU FP64-surrogate validation)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import twofloat as tf
+
+
+def test_two_sum_exact():
+    a = jnp.asarray(1.0, jnp.float32)
+    b = jnp.asarray(1e-8, jnp.float32)
+    s, e = tf.two_sum(a, b)
+    assert float(jnp.float64(s) + jnp.float64(e)) == 1.0 + 1e-8
+
+
+def test_two_prod_exact_f32():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.uniform(0.5, 2.0, 256), jnp.float32)
+    b = jnp.asarray(rng.uniform(0.5, 2.0, 256), jnp.float32)
+    p, e = tf.two_prod(a, b)
+    exact = np.asarray(a, np.float64) * np.asarray(b, np.float64)
+    got = np.asarray(p, np.float64) + np.asarray(e, np.float64)
+    np.testing.assert_array_equal(got, exact)
+
+
+def test_df_dot_beats_naive_f32():
+    rng = np.random.default_rng(1)
+    n = 50000
+    a = rng.uniform(-1, 1, n)
+    b = rng.uniform(-1, 1, n)
+    exact = np.dot(a, b)  # f64 reference
+    a32, b32 = jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32)
+    naive = float(jnp.dot(a32, b32))
+    hi, lo = tf.df_dot(a32, b32)
+    comp = float(jnp.float64(hi) + jnp.float64(lo))
+    assert abs(comp - exact) <= abs(naive - exact)
+    assert abs(comp - exact) / abs(exact) < 1e-6
+
+
+def test_df_add_mul_roundtrip():
+    ahi, alo = tf.df_from(jnp.asarray(1.0, jnp.float32))
+    bhi, blo = tf.df_from(jnp.asarray(3.0, jnp.float32))
+    shi, slo = tf.df_add(ahi, alo, bhi, blo)
+    assert float(tf.df_to(shi, slo)) == 4.0
+    phi, plo = tf.df_mul(ahi, alo, bhi, blo)
+    assert float(tf.df_to(phi, plo)) == 3.0

@@ -3,6 +3,11 @@
 FP64 / FP32 / FP16 / BF16 vs GSE-SEM tags 1..3.  The paper's headline:
 GSE-SEM head (16-bit) has FAR smaller error than FP16/BF16 at the same
 width, at comparable bandwidth savings.
+
+Bandwidth is reported from the containers' ``bytes_touched`` accounting
+(measured-model, not a constant): per-nnz matrix-stream bytes are 6/8/12
+for GSE-SEM tags 1/2/3 vs 12 for FP64 CSR, and modeled GB/s divides the
+per-call byte count by the measured wall time.
 """
 from __future__ import annotations
 
@@ -15,30 +20,49 @@ from repro.sparse.csr import pack_csr
 from repro.sparse.spmv import spmv, spmv_gse
 
 
-def run() -> dict:
+def run(quick: bool = False) -> dict:
+    """Sweep formats over the SpMV suite.  ``quick`` trims matrices and
+    timing iterations for the CI smoke mode (``run.py --quick``)."""
     out = {}
     suite = G.spmv_suite(small=True)
+    if quick:
+        suite = dict(list(suite.items())[:2])
+    iters = 3 if quick else 10
     for name, a in suite.items():
         x = jnp.ones((a.shape[1],), jnp.float64)
         ref = np.asarray(spmv(a, x))
         g = pack_csr(a, k=8)
         flops = 2.0 * a.nnz
         rows = {}
-        for label, fn in {
-            "fp64": lambda: spmv(a, x),
-            "fp32": lambda: spmv(a, x, store_dtype=jnp.float32),
-            "fp16": lambda: spmv(a, x, store_dtype=jnp.float16),
-            "bf16": lambda: spmv(a, x, store_dtype=jnp.bfloat16),
-            "gse_h": lambda: spmv_gse(g, x, tag=1),
-            "gse_ht1": lambda: spmv_gse(g, x, tag=2),
-            "gse_full": lambda: spmv_gse(g, x, tag=3),
-        }.items():
+        cases = {
+            "fp64": (lambda: spmv(a, x), jnp.float64, None),
+            "fp32": (lambda: spmv(a, x, store_dtype=jnp.float32),
+                     jnp.float32, None),
+            "fp16": (lambda: spmv(a, x, store_dtype=jnp.float16),
+                     jnp.float16, None),
+            "bf16": (lambda: spmv(a, x, store_dtype=jnp.bfloat16),
+                     jnp.bfloat16, None),
+            "gse_h": (lambda: spmv_gse(g, x, tag=1), None, 1),
+            "gse_ht1": (lambda: spmv_gse(g, x, tag=2), None, 2),
+            "gse_full": (lambda: spmv_gse(g, x, tag=3), None, 3),
+        }
+        for label, (fn, store_dtype, tag) in cases.items():
             y = np.asarray(fn())
             err = float(np.abs(y - ref).max())
-            us = time_fn(fn, iters=10)
-            rows[label] = dict(err=err, us=us, gflops=flops / us / 1e3)
+            us = time_fn(fn, iters=iters)
+            if tag is None:
+                bpn = int(a.bytes_per_nnz(store_dtype))
+                btot = int(a.bytes_touched(store_dtype))
+            else:
+                bpn = int(g.bytes_per_nnz(tag))
+                btot = int(g.bytes_touched(tag))
+            gbps = btot / us / 1e3  # bytes per us -> GB/s
+            rows[label] = dict(err=err, us=us, gflops=flops / us / 1e3,
+                               bytes_per_nnz=bpn, bytes_touched=btot,
+                               model_gbps=gbps)
             emit(f"fig6/{name}/{label}", us,
-                 f"maxAbsErr={err:.3e} gflops={flops/us/1e3:.2f}")
+                 f"maxAbsErr={err:.3e} gflops={flops/us/1e3:.2f} "
+                 f"B/nnz={bpn} modelGBps={gbps:.2f}")
         out[name] = rows
         better = (rows["gse_h"]["err"] <= rows["fp16"]["err"] + 1e-300 and
                   rows["gse_h"]["err"] <= rows["bf16"]["err"] + 1e-300)

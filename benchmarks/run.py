@@ -9,12 +9,39 @@ Prints ``name,us_per_call,derived`` CSV rows.
   fig89  -- Figs 8/9 solver wall time + GSE-SEM* projection (Eq. 7)
   lm     -- beyond-paper: GSE-SEM LM weight serving ladder
   roofline -- dry-run roofline table (deliverable g)
+
+``--quick`` runs a trimmed fig6 SpMV sweep and writes ``BENCH_spmv.json``
+(format/tag x time x modeled GB/s from the ``bytes_touched`` accounting)
+at the repo root -- the perf-trajectory artifact CI regresses against.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
 import traceback
+
+_REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+if str(_REPO_ROOT) not in sys.path:  # allow `python benchmarks/run.py`
+    sys.path.insert(0, str(_REPO_ROOT))
+
+
+def run_quick(out_path: pathlib.Path | None = None) -> dict:
+    """CI smoke mode: trimmed SpMV format sweep -> BENCH_spmv.json."""
+    from benchmarks import fig6_spmv_formats
+
+    results = fig6_spmv_formats.run(quick=True)
+    payload = {
+        "bench": "spmv_formats_quick",
+        "schema": "matrix -> format -> {us, err, gflops, bytes_per_nnz, "
+                  "bytes_touched, model_gbps}",
+        "results": results,
+    }
+    path = out_path or (_REPO_ROOT / "BENCH_spmv.json")
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {path}", file=sys.stderr)
+    return payload
 
 
 def main() -> None:
@@ -22,7 +49,17 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig1,fig45,fig6,tab34,"
                          "fig89,lm,roofline")
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke mode: trimmed SpMV sweep, emit "
+                         "BENCH_spmv.json and exit")
     args = ap.parse_args()
+    if args.quick and args.only:
+        ap.error("--quick and --only are mutually exclusive")
+
+    print("name,us_per_call,derived")
+    if args.quick:
+        run_quick()
+        return
     want = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (fig1_entropy, fig45_k_sweep, fig6_spmv_formats,
@@ -38,7 +75,6 @@ def main() -> None:
         "lm": lm_gse_serving.run,
         "roofline": roofline.run,
     }
-    print("name,us_per_call,derived")
     failed = []
     for name, fn in suites.items():
         if want and name not in want:

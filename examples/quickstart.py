@@ -32,25 +32,46 @@ def main():
     # --- 2. one stored sparse matrix, three SpMV precisions --------------
     a = G.random_spd(2000, seed=1)
     g = pack_csr(a, k=8)
-    print(f"\nCSR packed: {a.nnz} nnz; bytes/nnz at tags 1/2/3 = "
-          f"{g.nbytes(1)/a.nnz:.1f}/{g.nbytes(2)/a.nnz:.1f}/"
-          f"{g.nbytes(3)/a.nnz:.1f} (+4 colidx)")
+    print(f"\nCSR packed: {a.nnz} nnz")
+    # Per-call byte accounting: what a tag-t SpMV actually streams from
+    # HBM (values + packed colidx + rowptr/table).  The tag-specialized
+    # kernels provably touch nothing else (DESIGN.md §2.4).
+    print("  modeled SpMV bytes/nnz: "
+          + " ".join(f"tag{t}={g.bytes_per_nnz(t)}" for t in (1, 2, 3))
+          + f"  (fp64 CSR={a.bytes_per_nnz(jnp.float64)})")
+    print("  modeled SpMV MB/call:   "
+          + " ".join(f"tag{t}={g.bytes_touched(t)/1e6:.2f}"
+                     for t in (1, 2, 3)))
 
     # --- 3. stepped mixed-precision CG (the paper's algorithm) -----------
+    # Passing the GSECSR directly (instead of make_gse_operator(g))
+    # selects the fused iteration path: one decoded-value pass per step
+    # with the dots/axpys folded around the SpMV -- bit-identical
+    # trajectory, fewer kernel launches (DESIGN.md §4).
     x_true = rng.normal(size=a.shape[1])
     from repro.sparse.spmv import spmv
 
     b = spmv(a, jnp.asarray(x_true))
     res = solve_cg(
-        make_gse_operator(g), b, tol=1e-8, maxiter=3000,
+        g, b, tol=1e-8, maxiter=3000,
         params=MonitorParams(t=40, l=60, m=30),
     )
-    print(f"\nstepped CG: converged={bool(res.converged)} "
+    print(f"\nstepped CG (fused): converged={bool(res.converged)} "
           f"iters={int(res.iters)} final tag={int(res.tag)} "
           f"relres={float(res.relres):.2e} "
           f"switches at {res.switch_iters.tolist()}")
     err = np.abs(np.asarray(res.x) - x_true).max()
     print(f"solution max abs error vs truth: {err:.2e}")
+
+    # The generic-operator path produces the same trajectory:
+    res2 = solve_cg(
+        make_gse_operator(g), b, tol=1e-8, maxiter=3000,
+        params=MonitorParams(t=40, l=60, m=30),
+    )
+    agrees = (int(res2.iters) == int(res.iters)
+              and float(res2.relres) == float(res.relres))
+    print(f"unfused path agrees: {agrees} (iters={int(res2.iters)}, "
+          f"relres={float(res2.relres):.2e})")
 
 
 if __name__ == "__main__":

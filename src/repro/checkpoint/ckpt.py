@@ -22,11 +22,36 @@ import struct
 import threading
 from typing import Any, Dict, Optional
 
+import zlib
+
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:  # optional dep: fall back to zlib where the wheel is absent
+    import zstandard as zstd
+except ImportError:  # pragma: no cover - depends on environment
+    zstd = None
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(raw: bytes) -> bytes:
+    if zstd is not None:
+        return zstd.ZstdCompressor(level=3).compress(raw)
+    return zlib.compress(raw, 6)
+
+
+def _decompress(comp: bytes) -> bytes:
+    if comp[:4] == _ZSTD_MAGIC:
+        if zstd is None:
+            raise ImportError(
+                "checkpoint is zstd-compressed but zstandard is not installed"
+            )
+        return zstd.ZstdDecompressor().decompress(comp)
+    return zlib.decompress(comp)
+
 
 _EXEC = cf.ThreadPoolExecutor(max_workers=1)
 _PENDING: Dict[str, cf.Future] = {}
@@ -64,7 +89,7 @@ def save(path: str, tree: Any, step: int, extra: Optional[Dict] = None
         "arrays": {k: _pack_array(v) for k, v in flat.items()},
     }
     raw = msgpack.packb(payload, use_bin_type=True)
-    comp = zstd.ZstdCompressor(level=3).compress(raw)
+    comp = _compress(raw)
     digest = hashlib.sha256(comp).hexdigest()
 
     final = os.path.join(path, f"step_{step:08d}")
@@ -133,9 +158,7 @@ def restore(path: str, step: int, like: Any,
         comp = f.read()
     if hashlib.sha256(comp).hexdigest() != meta["sha256"]:
         raise IOError(f"checkpoint {d} failed integrity check")
-    payload = msgpack.unpackb(
-        zstd.ZstdDecompressor().decompress(comp), raw=False
-    )
+    payload = msgpack.unpackb(_decompress(comp), raw=False)
     arrays = {k: _unpack_array(v) for k, v in payload["arrays"].items()}
 
     flat_like = jax.tree_util.tree_flatten_with_path(like)

@@ -96,6 +96,11 @@ class GSEPacked:
         per = {1: 2, 2: 4, 3: 8}[tag]
         return n * per + self.table.size * 4
 
+    def bytes_touched(self, tag: int) -> int:
+        """Modeled HBM bytes a tag-``tag`` decode/matmul streams for this
+        operand: exactly the stored segments the tag reads (``nbytes``)."""
+        return self.nbytes(tag)
+
     def tree_flatten(self):
         return (self.table, self.head, self.tail1, self.tail2), (
             self.ei_bit,

@@ -9,6 +9,28 @@ The paper's SpMV (Algorithm 2) re-thought for TPU (DESIGN.md §2):
   * x is pinned in VMEM per block (single-chip kernel; the distributed
     layer shards rows across chips so each shard's x-slice fits VMEM).
 
+Tag specialization (DESIGN.md §2.4): the whole point of GSE-SEM is that a
+memory-bound SpMV touches only the bytes the current precision needs --
+2/4/8 value bytes per nnz for tags 1/2/3.  One generic kernel that streams
+all four segment arrays would make tag-1 pay tag-3 bandwidth, so each tag
+gets its own kernel body whose ``pallas_call`` operand list contains ONLY
+the segments that tag reads:
+
+    tag 1   scales, colpak, head, x                   (6  B/nnz streamed)
+    tag 2   scales, colpak, head, tail1, x            (8  B/nnz)
+    tag 3   scales, colpak, head, tail1, tail2, x     (12 B/nnz)
+
+Callers pass ``tail1=None`` / ``tail2=None`` for tags that do not read
+them; the unused arrays never enter the jaxpr, never get a BlockSpec, and
+never get DMA'd into VMEM.
+
+Output layout (DESIGN.md §2.3): the kernel accumulates per-lane partial
+sums into a lane-aligned (BM, 128) VMEM tile -- a (BM, BL) product tile is
+reduced only across its BL/128 sublane groups, so every vector store fills
+all 128 lanes instead of 1/128 of them.  A cheap reduction epilogue
+(``acc.sum(axis=1)``) collapses the 128 partials per row after the grid
+finishes.
+
 Grid: (M/BM, L/BL); the L axis accumulates sequentially into the output
 rows.  Padded slots carry col=0, head=0 -> mantissa 0 -> contribute 0.
 """
@@ -22,11 +44,21 @@ from jax.experimental import pallas as pl
 
 from repro.kernels.gse_decode import _select_scale
 
-__all__ = ["gse_spmv_pallas"]
+__all__ = ["gse_spmv_pallas", "gse_spmv_call", "spmv_operand_names", "LANE"]
+
+LANE = 128  # TPU vector-lane count; output accumulator minor dim
 
 
-def _spmv_body(scales_ref, colpak_ref, head_ref, tail1_ref, tail2_ref, x_ref,
-               out_ref, *, ei_bit: int, tag: int, k: int):
+def spmv_operand_names(tag: int) -> tuple:
+    """The pallas_call operand list the tag-specialized kernel streams."""
+    base = ("scales", "colpak", "head")
+    tails = {1: (), 2: ("tail1",), 3: ("tail1", "tail2")}[tag]
+    return base + tails + ("x",)
+
+
+def _accumulate(scales_ref, colpak_ref, head_ref, tail1_ref, tail2_ref,
+                x_ref, out_ref, *, ei_bit: int, tag: int, k: int):
+    """Shared tile math; tail refs are ``None`` for the tags that skip them."""
     @pl.when(pl.program_id(1) == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
@@ -47,32 +79,78 @@ def _spmv_body(scales_ref, colpak_ref, head_ref, tail1_ref, tail2_ref, x_ref,
 
     xv = x_ref[0, :]                      # (N,) in VMEM
     xg = xv[col.reshape(-1)].reshape(col.shape)
-    out_ref[...] += jnp.sum(vals * xg, axis=1, keepdims=True)
+    prod = vals * xg                      # (BM, BL)
+    bm, bl = prod.shape
+    # Lane-aligned partial sums: reduce only across the BL/LANE sublane
+    # groups so the store fills all LANE lanes (DESIGN.md §2.3).
+    out_ref[...] += jnp.sum(prod.reshape(bm, bl // LANE, LANE), axis=1)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("ei_bit", "tag", "blocks", "interpret"),
-)
-def gse_spmv_pallas(colpak, head, tail1, tail2, x, scales, *, ei_bit: int,
-                    tag: int, blocks=(8, 128), interpret: bool = True):
-    """colpak/head/tail1/tail2: (M, L); x: (N,); scales: (1, k)."""
+def _spmv_body_tag1(scales_ref, colpak_ref, head_ref, x_ref, out_ref, *,
+                    ei_bit: int, k: int):
+    _accumulate(scales_ref, colpak_ref, head_ref, None, None, x_ref, out_ref,
+                ei_bit=ei_bit, tag=1, k=k)
+
+
+def _spmv_body_tag2(scales_ref, colpak_ref, head_ref, tail1_ref, x_ref,
+                    out_ref, *, ei_bit: int, k: int):
+    _accumulate(scales_ref, colpak_ref, head_ref, tail1_ref, None, x_ref,
+                out_ref, ei_bit=ei_bit, tag=2, k=k)
+
+
+def _spmv_body_tag3(scales_ref, colpak_ref, head_ref, tail1_ref, tail2_ref,
+                    x_ref, out_ref, *, ei_bit: int, k: int):
+    _accumulate(scales_ref, colpak_ref, head_ref, tail1_ref, tail2_ref, x_ref,
+                out_ref, ei_bit=ei_bit, tag=3, k=k)
+
+
+_BODIES = {1: _spmv_body_tag1, 2: _spmv_body_tag2, 3: _spmv_body_tag3}
+
+
+def gse_spmv_call(colpak, head, tail1, tail2, x, scales, *, ei_bit: int,
+                  tag: int, blocks=(8, 128), interpret: bool = True):
+    """Unjitted tag-specialized SpMV (exported for jaxpr inspection).
+
+    colpak/head (+tails the tag reads): (M, L); x: (N,); scales: (1, k).
+    ``tail1``/``tail2`` may be ``None`` when ``tag`` does not read them;
+    arrays passed for unread segments are ignored (not streamed).
+    Returns y = A @ x as a (M,) f32 vector.
+    """
     m, L = colpak.shape
     bm, bl = blocks
     assert m % bm == 0 and L % bl == 0, (colpak.shape, blocks)
+    assert bl % LANE == 0, f"BL must be lane-aligned (multiple of {LANE})"
     n = x.shape[0]
     nk = scales.shape[1]
     grid = (m // bm, L // bl)
     tile = pl.BlockSpec((bm, bl), lambda i, l: (i, l))
-    return pl.pallas_call(
-        functools.partial(_spmv_body, ei_bit=ei_bit, tag=tag, k=nk),
-        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
+
+    operands = [scales, colpak, head]
+    in_specs = [pl.BlockSpec((1, nk), lambda i, l: (0, 0)), tile, tile]
+    if tag >= 2:
+        assert tail1 is not None, "tag>=2 reads tail1"
+        operands.append(tail1)
+        in_specs.append(tile)
+    if tag == 3:
+        assert tail2 is not None, "tag==3 reads tail2"
+        operands.append(tail2)
+        in_specs.append(tile)
+    operands.append(x.reshape(1, n))
+    in_specs.append(pl.BlockSpec((1, n), lambda i, l: (0, 0)))  # x pinned
+
+    acc = pl.pallas_call(
+        functools.partial(_BODIES[tag], ei_bit=ei_bit, k=nk),
+        out_shape=jax.ShapeDtypeStruct((m, LANE), jnp.float32),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, nk), lambda i, l: (0, 0)),
-            tile, tile, tile, tile,
-            pl.BlockSpec((1, n), lambda i, l: (0, 0)),  # x pinned in VMEM
-        ],
-        out_specs=pl.BlockSpec((bm, 1), lambda i, l: (i, 0)),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, LANE), lambda i, l: (i, 0)),
         interpret=interpret,
-    )(scales, colpak, head, tail1, tail2, x.reshape(1, n))
+    )(*operands)
+    # Reduction epilogue: collapse the LANE per-row partials.
+    return jnp.sum(acc, axis=1)
+
+
+gse_spmv_pallas = functools.partial(
+    jax.jit,
+    static_argnames=("ei_bit", "tag", "blocks", "interpret"),
+)(gse_spmv_call)

@@ -18,7 +18,8 @@ from repro.kernels.gse_matmul import gse_matmul_pallas
 from repro.kernels.gse_spmv import gse_spmv_pallas
 from repro.sparse.csr import GSECSR
 
-__all__ = ["gse_decode", "gse_matmul", "gse_spmv_ell", "ell_pack_gsecsr"]
+__all__ = ["gse_decode", "gse_matmul", "gse_spmv_ell", "ell_pack_gsecsr",
+           "spmv_kernel_for"]
 
 
 def _interpret_default() -> bool:
@@ -104,18 +105,59 @@ def ell_pack_gsecsr(a: GSECSR, lane: int = 128):
     )
 
 
+@functools.lru_cache(maxsize=None)
+def spmv_kernel_for(tag: int, ei_bit: int, blocks=(8, 128),
+                    interpret: bool = True):
+    """Tag-specialized SpMV dispatch: one cached ``pallas_call`` wrapper per
+    ``(tag, ei_bit, blocks)`` (DESIGN.md §2.4).
+
+    The returned callable takes exactly the operands that ``tag`` streams --
+    ``(colpak, head, x, scales)`` for tag 1, ``+ tail1`` for tag 2,
+    ``+ tail2`` for tag 3 -- so the tag-1/-2 kernels provably never touch
+    the tail arrays (6/8/12 bytes per nnz of HBM traffic for tags 1/2/3).
+    """
+    if tag == 1:
+        def call(colpak, head, x, scales):
+            return gse_spmv_pallas(colpak, head, None, None, x, scales,
+                                   ei_bit=ei_bit, tag=1, blocks=blocks,
+                                   interpret=interpret)
+    elif tag == 2:
+        def call(colpak, head, tail1, x, scales):
+            return gse_spmv_pallas(colpak, head, tail1, None, x, scales,
+                                   ei_bit=ei_bit, tag=2, blocks=blocks,
+                                   interpret=interpret)
+    elif tag == 3:
+        def call(colpak, head, tail1, tail2, x, scales):
+            return gse_spmv_pallas(colpak, head, tail1, tail2, x, scales,
+                                   ei_bit=ei_bit, tag=3, blocks=blocks,
+                                   interpret=interpret)
+    else:
+        raise ValueError(f"tag must be 1, 2 or 3, got {tag}")
+    return call
+
+
 def gse_spmv_ell(ell, table, x: jnp.ndarray, ei_bit: int, tag: int = 1,
                  blocks=(8, 128), interpret: bool | None = None):
-    """y = A @ x from ELL-packed GSE-SEM segments (Pallas kernel)."""
+    """y = A @ x from ELL-packed GSE-SEM segments (Pallas kernel).
+
+    Dispatches to the tag-specialized kernel (``spmv_kernel_for``): only the
+    segment arrays ``tag`` reads are padded, passed, and streamed.  Modeled
+    HBM traffic is bandwidth-proportional -- ``GSECSR.bytes_touched(tag)``
+    gives the per-call byte count (6/8/12 bytes per nnz for tags 1/2/3
+    vs 12 for FP64 CSR).
+    """
     if interpret is None:
         interpret = _interpret_default()
     colpak, head, t1, t2 = ell
     bm, bl = blocks
     m0 = colpak.shape[0]
-    colpak, head = _pad2(colpak, bm, bl), _pad2(head, bm, bl)
-    t1, t2 = _pad2(t1, bm, bl), _pad2(t2, bm, bl)
     bits_used = {1: 15, 2: 31, 3: 63}[tag]
     scales = ref.make_scales(table, bits_used).reshape(1, -1)
-    out = gse_spmv_pallas(colpak, head, t1, t2, x, scales, ei_bit=ei_bit,
-                          tag=tag, blocks=blocks, interpret=interpret)
-    return out[:m0, 0]
+    kernel = spmv_kernel_for(tag, ei_bit, blocks, interpret)
+    operands = [_pad2(colpak, bm, bl), _pad2(head, bm, bl)]
+    if tag >= 2:
+        operands.append(_pad2(t1, bm, bl))
+    if tag == 3:
+        operands.append(_pad2(t2, bm, bl))
+    out = kernel(*operands, x, scales)
+    return out[:m0]

@@ -1,5 +1,6 @@
 """Iterative solvers with stepped mixed precision (paper Section III.D)."""
 from repro.solvers.cg import CGResult, solve_cg
+from repro.solvers.fused_cg import fused_cg_step, gse_matvec
 from repro.solvers.gmres import GMRESResult, solve_gmres
 from repro.solvers.operators import (
     make_dense_operator,
@@ -10,6 +11,8 @@ from repro.solvers.operators import (
 __all__ = [
     "CGResult",
     "solve_cg",
+    "fused_cg_step",
+    "gse_matvec",
     "GMRESResult",
     "solve_gmres",
     "make_dense_operator",

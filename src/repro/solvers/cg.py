@@ -5,17 +5,26 @@ tag each iteration, and the residual monitor (core.precision) steps the tag
 up when convergence stalls.  Faithful to the paper: the switch happens
 in-place (no restart, no residual recomputation at the switch), matching
 Algorithm 3.
+
+Two equivalent hot paths (bit-identical trajectories):
+
+  * generic: ``apply_a(x, tag)`` is any callable (fixed-precision
+    baselines, dense operators, preconditioned wrappers);
+  * fused:   pass a ``GSECSR`` directly as the operator and each iteration
+    runs ``solvers.fused_cg.fused_cg_step`` -- one decoded-value pass with
+    the dots/axpys folded around the SpMV (DESIGN.md §4).
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable, NamedTuple
+from typing import Callable, NamedTuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import precision as P
+from repro.sparse.csr import GSECSR
 
 __all__ = ["CGResult", "solve_cg"]
 
@@ -64,11 +73,7 @@ def _solve_cg(apply_a, b, x0, tol, maxiter, params: P.MonitorParams,
         rs_new = jnp.vdot(r, r)
         mon = P.record(s["mon"], jnp.sqrt(jnp.abs(rs_new)) / bnorm)
         mon2 = P.update_tag(mon, params)
-        stepped = mon2.tag > mon.tag
-        switches = s["switches"]
-        switches = switches.at[jnp.clip(mon.tag - 1, 0, 1)].set(
-            jnp.where(stepped, s["it"] + 1, switches[jnp.clip(mon.tag - 1, 0, 1)])
-        )
+        switches = _record_switch(s["switches"], mon, mon2, s["it"])
         beta = rs_new / jnp.where(s["rs"] == 0, 1.0, s["rs"])
         p = r + beta * s["p"]
         return dict(
@@ -86,8 +91,77 @@ def _solve_cg(apply_a, b, x0, tol, maxiter, params: P.MonitorParams,
     )
 
 
+def _record_switch(switches, mon, mon2, it):
+    """Log the iteration of a tag step-up into its slot (0: ->2, 1: ->3).
+
+    The slot write happens ONLY when a step actually occurred; writing
+    unconditionally would re-target slot 1 with a self-assignment on every
+    post-switch tag-3 iteration (and corrupt it if the slot indexing ever
+    drifts from the tag clip).
+    """
+    stepped = mon2.tag > mon.tag
+    slot = jnp.clip(mon.tag - 1, 0, 1)
+    return jnp.where(stepped, switches.at[slot].set(it + 1), switches)
+
+
+@partial(jax.jit, static_argnames=("maxiter", "params", "init_tag"))
+def _solve_cg_fused(a, b, x0, tol, maxiter, params: P.MonitorParams,
+                    init_tag: int = 1):
+    """Fused-path CG over a ``GSECSR`` operand (DESIGN.md §4).
+
+    Same trajectory as ``_solve_cg`` with the GSE operator -- each
+    iteration is one ``fused_cg_step``: the values are decoded once at the
+    monitor's current tag and the dots/axpys/residual norm ride the same
+    sweep as the SpMV.
+    """
+    from repro.solvers.fused_cg import fused_cg_step, gse_matvec
+
+    dtype = b.dtype
+    bnorm = jnp.linalg.norm(b)
+    bnorm = jnp.where(bnorm == 0, 1.0, bnorm)
+
+    mon = P.init(params, dtype=dtype, tag=init_tag)
+    r0 = b - gse_matvec(a, x0, mon.tag)
+    state = dict(
+        x=x0,
+        r=r0,
+        p=r0,
+        rs=jnp.vdot(r0, r0),
+        it=jnp.int32(0),
+        mon=mon,
+        switches=jnp.full((2,), -1, jnp.int32),
+    )
+
+    def relres(s):
+        return jnp.sqrt(jnp.abs(s["rs"])) / bnorm
+
+    def cond(s):
+        return (relres(s) > tol) & (s["it"] < maxiter)
+
+    def body(s):
+        x, r, p, rs_new = fused_cg_step(
+            a, s["x"], s["r"], s["p"], s["rs"], s["mon"].tag
+        )
+        mon = P.record(s["mon"], jnp.sqrt(jnp.abs(rs_new)) / bnorm)
+        mon2 = P.update_tag(mon, params)
+        switches = _record_switch(s["switches"], mon, mon2, s["it"])
+        return dict(
+            x=x, r=r, p=p, rs=rs_new, it=s["it"] + 1, mon=mon2, switches=switches
+        )
+
+    out = jax.lax.while_loop(cond, body, state)
+    return CGResult(
+        x=out["x"],
+        iters=out["it"],
+        relres=relres(out),
+        tag=out["mon"].tag,
+        switch_iters=out["switches"],
+        converged=relres(out) <= tol,
+    )
+
+
 def solve_cg(
-    apply_a: Callable,
+    apply_a: Union[Callable, GSECSR],
     b: jnp.ndarray,
     x0: jnp.ndarray | None = None,
     tol: float = 1e-6,
@@ -97,6 +171,12 @@ def solve_cg(
 ) -> CGResult:
     """CG for SPD systems.  ``apply_a(x, tag)`` is the (possibly multi-
     precision) operator; fixed-precision baselines ignore ``tag``.
+
+    Passing a ``GSECSR`` directly as ``apply_a`` selects the fused
+    iteration path (``fused_cg_step``): one decoded-value pass per
+    iteration with the vector ops folded around the SpMV.  Trajectories
+    are bit-identical to ``solve_cg(make_gse_operator(a), ...)``; only the
+    kernel-launch structure differs.
 
     ``final_correction`` (beyond-paper safeguard): the recursive residual of
     a stepped run converges against the *perturbed* low-precision operator;
@@ -109,14 +189,24 @@ def solve_cg(
     if params is None:
         params = P.MonitorParams.for_cg()
     tol_ = jnp.asarray(tol, b.dtype)
-    res = _solve_cg(apply_a, b, x0, tol_, maxiter, params)
+    fused = isinstance(apply_a, GSECSR)
+    solve = _solve_cg_fused if fused else _solve_cg
+    res = solve(apply_a, b, x0, tol_, maxiter, params)
     if not final_correction:
         return res
+    if fused:
+        from repro.solvers.fused_cg import gse_matvec
+
+        def apply3(v):
+            return gse_matvec(apply_a, v, jnp.int32(3))
+    else:
+        def apply3(v):
+            return apply_a(v, jnp.int32(3))
     bnorm = jnp.linalg.norm(b)
     bnorm = jnp.where(bnorm == 0, 1.0, bnorm)
-    true_rel = jnp.linalg.norm(b - apply_a(res.x, jnp.int32(3))) / bnorm
+    true_rel = jnp.linalg.norm(b - apply3(res.x)) / bnorm
     if bool(res.converged) and float(true_rel) > tol:
-        res2 = _solve_cg(
+        res2 = solve(
             apply_a, b, res.x, tol_, maxiter - int(res.iters), params,
             init_tag=3,
         )

@@ -1,0 +1,89 @@
+"""Fused stepped-CG iteration over a GSE-SEM CSR operand (DESIGN.md §4).
+
+One CG iteration is a SpMV plus five vector ops (two dots, two axpys, one
+xpby).  Run unfused, each op is its own pass over the vectors and the SpMV
+re-decodes the GSE-SEM values; on a bandwidth-bound machine those extra
+passes (and kernel launches) erase part of the format's byte savings.
+
+``fused_cg_step`` folds the whole iteration around a single decoded-value
+pass:
+
+  * the GSE-SEM values are decoded ONCE per iteration, at the precision the
+    monitor's current tag selects (``lax.switch`` over three tag-specialized
+    branches, so the tag-1/-2 branches never touch the tail segments);
+  * ``p . Ap`` is formed in the same sweep that produces ``Ap``;
+  * the x/r axpys, the new residual norm ``r'.r'``, and the search-direction
+    update ride the same fused jaxpr -- one kernel program per iteration
+    instead of six.
+
+The arithmetic is EXACTLY the sequence of the unfused ``solve_cg`` body
+(same ops, same order, same ``acc_dtype``), so fused and unfused runs
+produce bit-identical iterate trajectories -- asserted by
+tests/test_spmv_pipeline.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.sparse.csr import GSECSR
+from repro.sparse.spmv import _decode_gsecsr
+
+__all__ = ["fused_cg_step", "gse_matvec"]
+
+
+def _step_at_tag(a: GSECSR, x, r, p, rs, *, tag: int, acc_dtype):
+    """One fused CG iteration at a fixed precision tag.
+
+    Single decoded-value pass: ``val`` is materialized once and feeds both
+    the matvec and (via ``ap``) the direction dot; everything downstream of
+    the decode fuses into the same program under jit.
+    """
+    val, col = _decode_gsecsr(
+        a.colpak, a.head, a.tail1, a.tail2, a.table, a.ei_bit, tag, acc_dtype
+    )
+    ap = jax.ops.segment_sum(
+        val * p.astype(acc_dtype)[col], a.row_ids, num_segments=a.shape[0]
+    )
+    denom = jnp.vdot(p, ap)                     # same sweep as the matvec
+    alpha = rs / jnp.where(denom == 0, 1.0, denom)
+    x2 = x + alpha * p
+    r2 = r - alpha * ap
+    rs2 = jnp.vdot(r2, r2)                      # residual norm, same sweep
+    beta = rs2 / jnp.where(rs == 0, 1.0, rs)
+    p2 = r2 + beta * p
+    return x2, r2, p2, rs2
+
+
+def fused_cg_step(a: GSECSR, x, r, p, rs, tag, acc_dtype=jnp.float64):
+    """Fused CG iteration with traced precision ``tag`` in {1, 2, 3}.
+
+    Returns ``(x', r', p', rs')`` where ``rs' = r'.r'`` is the squared
+    recursive residual norm (the monitor records ``sqrt(rs')/||b||``).
+    """
+    return jax.lax.switch(
+        jnp.clip(tag - 1, 0, 2),
+        [
+            partial(_step_at_tag, a, tag=1, acc_dtype=acc_dtype),
+            partial(_step_at_tag, a, tag=2, acc_dtype=acc_dtype),
+            partial(_step_at_tag, a, tag=3, acc_dtype=acc_dtype),
+        ],
+        x, r, p, rs,
+    )
+
+
+def gse_matvec(a: GSECSR, x, tag, acc_dtype=jnp.float64):
+    """Tag-dispatched ``A @ x`` over a GSECSR (initial residual / checks)."""
+    from repro.sparse.spmv import spmv_gse
+
+    return jax.lax.switch(
+        jnp.clip(tag - 1, 0, 2),
+        [
+            lambda v: spmv_gse(a, v, tag=1, acc_dtype=acc_dtype),
+            lambda v: spmv_gse(a, v, tag=2, acc_dtype=acc_dtype),
+            lambda v: spmv_gse(a, v, tag=3, acc_dtype=acc_dtype),
+        ],
+        x,
+    )

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import precision as P
+from repro.solvers.cg import _record_switch
 
 __all__ = ["GMRESResult", "solve_gmres"]
 
@@ -95,11 +96,7 @@ def _solve_gmres(apply_a, b, x0, tol, restart, maxiter,
 
             mon1 = P.record(mon, resid / bnorm)
             mon2 = P.update_tag(mon1, params)
-            stepped = mon2.tag > mon1.tag
-            si = jnp.clip(mon1.tag - 1, 0, 1)
-            switches = switches.at[si].set(
-                jnp.where(stepped, it0 + j + 1, switches[si])
-            )
+            switches = _record_switch(switches, mon1, mon2, it0 + j)
             return (j + 1, V, H, cs, sn, g, resid, mon2, switches)
 
         j, V, H, cs, sn, g, resid, mon, switches = jax.lax.while_loop(

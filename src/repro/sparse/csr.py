@@ -41,6 +41,19 @@ class CSR:
     def nnz(self) -> int:
         return self.col.shape[0]
 
+    def bytes_per_nnz(self, store_dtype=jnp.float64) -> int:
+        """Modeled bytes streamed per nonzero by one SpMV: value + colidx."""
+        return jnp.dtype(store_dtype).itemsize + 4
+
+    def bytes_touched(self, store_dtype=jnp.float64) -> int:
+        """Modeled HBM bytes one SpMV touches in the matrix streams.
+
+        Value + colidx per nnz plus the rowptr stream; the dense x/y vector
+        traffic is format-independent and excluded so formats compare on
+        what the encoding actually changes.
+        """
+        return self.nnz * self.bytes_per_nnz(store_dtype) + self.rowptr.size * 4
+
     def tree_flatten(self):
         return (self.rowptr, self.col, self.val, self.row_ids), (self.shape,)
 
@@ -73,10 +86,33 @@ class GSECSR:
     def width(self) -> int:
         return self.m_h + 48
 
+    @property
+    def nnz(self) -> int:
+        return self.colpak.shape[0]
+
     def nbytes(self, tag: int) -> int:
         n = self.colpak.shape[0]
         per = {1: 2, 2: 4, 3: 8}[tag]
         return n * per + self.table.size * 4
+
+    def bytes_per_nnz(self, tag: int) -> int:
+        """Modeled bytes streamed per nonzero by a tag-``tag`` SpMV.
+
+        Only the segments the tag reads count (the tag-specialized kernels
+        provably omit the rest): 2/4/8 value bytes + 4 packed-colidx bytes
+        -> 6/8/12 for tags 1/2/3, vs 12 for FP64 CSR.
+        """
+        return {1: 2, 2: 4, 3: 8}[tag] + 4
+
+    def bytes_touched(self, tag: int) -> int:
+        """Modeled HBM bytes one tag-``tag`` SpMV touches in the matrix
+        streams: per-nnz segments + rowptr + the shared-exponent table.
+        Dense x/y traffic is format-independent and excluded."""
+        return (
+            self.nnz * self.bytes_per_nnz(tag)
+            + self.rowptr.size * 4
+            + self.table.size * 4
+        )
 
     def tree_flatten(self):
         return (

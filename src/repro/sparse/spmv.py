@@ -91,7 +91,14 @@ def spmv_gse(a: GSECSR, x: jnp.ndarray, tag: int = 1, acc_dtype=jnp.float64):
     """Paper Algorithm 2 (+tails): GSE-SEM SpMV at precision ``tag`` 1/2/3.
 
     Bytes touched for the value stream: 2/4/8 per nnz for tags 1/2/3 plus
-    4 per nnz of packed colidx -- vs 8+4 for FP64 CSR.
+    4 per nnz of packed colidx -- vs 8+4 for FP64 CSR.  The exact modeled
+    per-call traffic is ``a.bytes_touched(tag)`` (6/8/12 bytes per nnz);
+    the TPU-tiled equivalent (``kernels/ops.gse_spmv_ell``) dispatches to
+    a tag-specialized Pallas kernel that provably streams only those
+    segments (DESIGN.md §2.4).  Inside CG prefer passing the ``GSECSR``
+    straight to ``solvers.solve_cg`` -- the fused iteration path decodes
+    the values once per step and folds the vector ops around this SpMV
+    (DESIGN.md §4).
     """
     return _spmv_gse(
         a.colpak, a.head, a.tail1, a.tail2, a.table, a.row_ids, x,

@@ -1,0 +1,69 @@
+"""Property tests (hypothesis): GSE-SEM format invariants.
+
+Split out of test_gse.py and guarded with ``pytest.importorskip`` so tier-1
+collection passes from a clean checkout (hypothesis is optional -- see
+requirements.txt); the property tests still run wherever it is installed.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import gse  # noqa: E402
+
+finite_floats = st.floats(
+    allow_nan=False,
+    allow_infinity=False,
+    allow_subnormal=False,
+    min_value=-1e100,
+    max_value=1e100,
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    st.lists(finite_floats, min_size=1, max_size=200),
+    st.sampled_from([2, 4, 8, 16]),
+)
+def test_prop_decode_monotone_precision(vals, k):
+    arr = np.asarray(vals, np.float64)
+    p = gse.pack(arr, k)
+    d1, d2, d3 = (gse.decode(p, t) for t in (1, 2, 3))
+    e1 = np.abs(d1 - arr)
+    e2 = np.abs(d2 - arr)
+    e3 = np.abs(d3 - arr)
+    assert (e2 <= e1 + 1e-300).all()
+    assert (e3 <= e2 + 1e-300).all()
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(finite_floats, min_size=1, max_size=200))
+def test_prop_full_precision_bounded_relative_error(vals):
+    arr = np.asarray(vals, np.float64)
+    p = gse.pack(arr, 8)
+    dec = gse.decode(p, 3)
+    nz = arr != 0
+    if nz.any():
+        rel = np.abs(dec[nz] - arr[nz]) / np.abs(arr[nz])
+        # Worst case: value sits just below a table entry 2^52 away... but the
+        # max-exponent entry guarantees minDiff <= (e_max+1 - e_min). Values
+        # >= max/2^40 keep >= width-41 bits. We assert the universal bound:
+        # decode never overshoots and never flips sign.
+        assert (np.sign(dec[nz]) == np.sign(arr[nz])).sum() >= (
+            (rel < 1.0).sum()
+        )
+        assert (np.abs(dec[nz]) <= np.abs(arr[nz]) * (1 + 1e-12)).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(finite_floats, min_size=1, max_size=100))
+def test_prop_decode_jnp_equals_numpy(vals):
+    arr = np.asarray(vals, np.float64)
+    p = gse.pack(arr, 8)
+    for tag in (1, 2, 3):
+        np.testing.assert_array_equal(
+            np.asarray(gse.decode_jnp(p, tag, jnp.float64)), gse.decode(p, tag)
+        )

@@ -1,0 +1,57 @@
+"""Property-based kernel sweeps (hypothesis).
+
+Split out of test_kernels.py and guarded with ``pytest.importorskip`` so
+tier-1 collection passes from a clean checkout (hypothesis is optional --
+see requirements.txt); the property tests still run wherever it is
+installed.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import gse  # noqa: E402
+from repro.kernels import ops, ref  # noqa: E402
+
+
+def _packed(shape, k=8, seed=0):
+    rng = np.random.default_rng(seed)
+    base = rng.choice([-2, 0, 1], size=shape)
+    vals = rng.uniform(1.0, 2.0, shape) * np.exp2(base)
+    vals *= rng.choice([-1.0, 1.0], size=shape)
+    return gse.pack(vals, k), vals
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    rows=st.integers(1, 4).map(lambda m: m * 8),
+    cols=st.integers(1, 3).map(lambda n: n * 128),
+    k=st.sampled_from([2, 4, 8, 16]),
+    tag=st.sampled_from([1, 2, 3]),
+)
+def test_prop_decode_kernel_matches_ref(rows, cols, k, tag):
+    p, _ = _packed((rows, cols), k=k, seed=rows * cols + k)
+    out = ops.gse_decode(p, tag=tag)
+    want = ref.decode_ref(p.head, p.tail1, p.tail2, p.table, p.ei_bit, tag)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    m=st.integers(1, 2).map(lambda m: m * 8),
+    kdim=st.integers(1, 2).map(lambda n: n * 128),
+    n=st.integers(1, 2).map(lambda n: n * 128),
+    tag=st.sampled_from([1, 2, 3]),
+)
+def test_prop_matmul_kernel_matches_ref(m, kdim, n, tag):
+    rng = np.random.default_rng(m * kdim + n)
+    x = jnp.asarray(rng.normal(size=(m, kdim)), jnp.float32)
+    p, _ = _packed((kdim, n), seed=n + tag)
+    out = ops.gse_matmul(x, p, tag=tag)
+    want = ref.matmul_ref(x, p.head, p.tail1, p.tail2, p.table, p.ei_bit,
+                          tag)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)

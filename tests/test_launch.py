@@ -235,6 +235,15 @@ def test_compressed_psum_wire_u16():
     from jax.sharding import PartitionSpec as P
     from repro.distributed.wire import compressed_psum
 
+    # jax.shard_map + check_vma are newer-jax spellings; fall back to
+    # jax.experimental.shard_map / check_rep on the pinned 0.4.x.
+    import inspect
+    shard_map = getattr(jax, "shard_map", None)
+    if shard_map is None:
+        from jax.experimental.shard_map import shard_map
+    _chk = ("check_vma" if "check_vma" in inspect.signature(shard_map).parameters
+            else "check_rep")
+
     mesh = jax.make_mesh((8,), ("pod",))
     n = 8 * 1024
     rng = np.random.default_rng(0)
@@ -243,19 +252,15 @@ def test_compressed_psum_wire_u16():
     def body(gs):
         return compressed_psum(gs[0], "pod")
 
-    out = jax.jit(jax.shard_map(
-        body, mesh=mesh, in_specs=P("pod"), out_specs=P(None),
-        check_vma=False,
-    ))(g)
+    sm = shard_map(body, mesh=mesh, in_specs=P("pod"), out_specs=P(None),
+                   **{_chk: False})
+    out = jax.jit(sm)(g)
     exact = np.asarray(g).sum(0)
     rel = np.abs(np.asarray(out) - exact) / np.maximum(np.abs(exact), 1e-3)
     assert np.median(rel) < 1e-4, np.median(rel)
 
     # the wire really moves u16: collectives in HLO carry u16 operands
-    txt = jax.jit(jax.shard_map(
-        body, mesh=mesh, in_specs=P("pod"), out_specs=P(None),
-        check_vma=False,
-    )).lower(g).compile().as_text()
+    txt = jax.jit(sm).lower(g).compile().as_text()
     import re
     coll = [l for l in txt.splitlines()
             if re.search(r"= \\S+ (all-to-all|all-gather)\\(", l)]

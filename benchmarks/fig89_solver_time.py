@@ -21,15 +21,20 @@ import numpy as np
 from benchmarks.common import emit
 from repro.core.precision import MonitorParams
 from repro.sparse import generators as G
-from repro.sparse.csr import pack_csr
+from repro.sparse.csr import iteration_stream_bytes, pack_csr
 from repro.solvers import (
     make_fixed_operator,
     make_gse_operator,
+    make_jacobi,
+    make_spai0,
     solve_cg,
     solve_gmres,
+    solve_pcg,
 )
 
 _PARAMS = MonitorParams(t=40, l=60, m=30, rsd_limit=0.5, reldec_limit=0.45)
+
+_PRECOND_FACTORY = {"jacobi": make_jacobi, "spai0": make_spai0}
 
 
 def _timed(solver, op, b, **kw):
@@ -41,10 +46,12 @@ def _timed(solver, op, b, **kw):
     return res, time.perf_counter() - t0
 
 
-def _gse_run_bytes(g, iters, switch_iters):
-    """Modeled matrix-stream bytes of a stepped run: each iteration is
-    charged ``g.bytes_touched(tag)`` for the tag it actually ran at,
-    using the recorded switch iterations to split the trajectory."""
+def _gse_run_bytes(g, iters, switch_iters, precond=None):
+    """Modeled matrix(+preconditioner)-stream bytes of a stepped run: each
+    iteration is charged ``iteration_stream_bytes(g, tag, precond)`` for
+    the tag it actually ran at, using the recorded switch iterations to
+    split the trajectory -- so preconditioner bytes follow the schedule
+    too (a tag-1 iteration pays 2 B per stored preconditioner entry)."""
     iters = int(iters)
     sw = np.asarray(switch_iters)
     t2 = int(sw[0]) if sw[0] >= 0 else iters  # first tag-2 iteration
@@ -52,17 +59,22 @@ def _gse_run_bytes(g, iters, switch_iters):
     n1 = max(min(t2, iters), 0)
     n3 = max(iters - t3, 0)
     n2 = max(iters - n1 - n3, 0)
-    return (n1 * g.bytes_touched(1) + n2 * g.bytes_touched(2)
-            + n3 * g.bytes_touched(3))
+    return (n1 * iteration_stream_bytes(g, 1, precond)
+            + n2 * iteration_stream_bytes(g, 2, precond)
+            + n3 * iteration_stream_bytes(g, 3, precond))
 
 
-def run() -> dict:
+def run(precond: str = "none") -> dict:
     out = {}
     cases = []
     for i, (name, a) in enumerate(list(G.cg_suite(small=True).items())[:4]):
         if a is None:
             continue
         cases.append(("cg", name, a, i))
+    if precond != "none":
+        # The preconditioned rows earn their keep on the ill-conditioned
+        # workload where unpreconditioned stepped CG stalls.
+        cases.append(("cg", "illcond_32", G.ill_conditioned_spd(32, 8.0), 50))
     for i, (name, a) in enumerate(list(G.gmres_suite(small=True).items())[:3]):
         cases.append(("gmres", name, a, 100 + i))
 
@@ -78,18 +90,34 @@ def run() -> dict:
         kw["maxiter"] = 1500 if kind == "cg" else 2400
 
         rows = {}
+        # CG takes the GSECSR directly -> fused iteration path
+        # (bit-identical trajectory, fewer kernel launches).  One operator
+        # per case: _solve_gmres keys its jit cache on the closure
+        # identity, so the preconditioned row below must reuse it.
+        gse_op = g if kind == "cg" else make_gse_operator(g)
         for label, op in {
             "fp64": make_fixed_operator(a),
             "fp16": make_fixed_operator(a, store_dtype=jnp.float16),
             "bf16": make_fixed_operator(a, store_dtype=jnp.bfloat16),
-            # CG takes the GSECSR directly -> fused iteration path
-            # (bit-identical trajectory, fewer kernel launches).
-            "gse": g if kind == "cg" else make_gse_operator(g),
+            "gse": gse_op,
         }.items():
             res, t = _timed(solver, op, b, **kw)
             rows[label] = dict(t=t, iters=int(res.iters),
                                relres=float(res.relres),
                                switch_iters=np.asarray(res.switch_iters))
+        m = None
+        if precond != "none":
+            # Stepped preconditioned rows: the GSE-packed preconditioner
+            # rides the same tag schedule as the operator (one stored
+            # copy each); PCG on the fused path, GMRES right-precond.
+            m = _PRECOND_FACTORY[precond](a, k=8)
+            if kind == "cg":
+                res, t = _timed(solve_pcg, g, b, precond=m, **kw)
+            else:
+                res, t = _timed(solve_gmres, gse_op, b, precond=m, **kw)
+            rows["gse_pcg"] = dict(t=t, iters=int(res.iters),
+                                   relres=float(res.relres),
+                                   switch_iters=np.asarray(res.switch_iters))
         # Paper Eq. 7: GSE-SEM* projection (conversion-free hardware).
         if rows["fp16"]["iters"] > 0:
             t_star = (rows["fp16"]["t"] / rows["fp16"]["iters"]
@@ -113,8 +141,11 @@ def run() -> dict:
                 run_bytes[label] = (a.bytes_touched(store[label])
                                     * max(r["iters"], 1))
             else:
-                run_bytes[label] = _gse_run_bytes(g, r["iters"],
-                                                  r["switch_iters"])
+                # "gse_pcg" additionally charges the preconditioner
+                # stream at the per-iteration tag actually run.
+                run_bytes[label] = _gse_run_bytes(
+                    g, r["iters"], r["switch_iters"],
+                    precond=m if label == "gse_pcg" else None)
         for label, r in rows.items():
             modeled = run_bytes["fp64"] / max(run_bytes[label], 1)
             per_it = run_bytes[label] / max(r["iters"], 1) / max(a.nnz, 1)

@@ -13,6 +13,10 @@ Prints ``name,us_per_call,derived`` CSV rows.
 ``--quick`` runs a trimmed fig6 SpMV sweep and writes ``BENCH_spmv.json``
 (format/tag x time x modeled GB/s from the ``bytes_touched`` accounting)
 at the repo root -- the perf-trajectory artifact CI regresses against.
+
+``--precond {none,jacobi,spai0}`` adds stepped preconditioned rows to
+fig89 (GSE-packed preconditioner riding the operator's tag schedule;
+preconditioner bytes charged at the per-iteration tag actually run).
 """
 from __future__ import annotations
 
@@ -52,6 +56,11 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smoke mode: trimmed SpMV sweep, emit "
                          "BENCH_spmv.json and exit")
+    ap.add_argument("--precond", default="none",
+                    choices=["none", "jacobi", "spai0"],
+                    help="add stepped preconditioned solver rows to fig89 "
+                         "(GSE-packed preconditioner riding the tag "
+                         "schedule; includes the ill-conditioned CG case)")
     args = ap.parse_args()
     if args.quick and args.only:
         ap.error("--quick and --only are mutually exclusive")
@@ -66,12 +75,14 @@ def main() -> None:
                             fig89_solver_time, lm_gse_serving, roofline,
                             tab34_solver_convergence)
 
+    from functools import partial
+
     suites = {
         "fig1": fig1_entropy.run,
         "fig45": fig45_k_sweep.run,
         "fig6": fig6_spmv_formats.run,
         "tab34": tab34_solver_convergence.run,
-        "fig89": fig89_solver_time.run,
+        "fig89": partial(fig89_solver_time.run, precond=args.precond),
         "lm": lm_gse_serving.run,
         "roofline": roofline.run,
     }

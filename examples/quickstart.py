@@ -11,8 +11,14 @@ import numpy as np  # noqa: E402
 
 from repro.core import gse  # noqa: E402
 from repro.sparse import generators as G  # noqa: E402
-from repro.sparse.csr import pack_csr  # noqa: E402
-from repro.solvers import make_gse_operator, solve_cg  # noqa: E402
+from repro.sparse.csr import iteration_stream_bytes, pack_csr  # noqa: E402
+from repro.solvers import (  # noqa: E402
+    make_gse_operator,
+    make_jacobi,
+    solve_cg,
+    solve_ir,
+    solve_pcg,
+)
 from repro.core.precision import MonitorParams  # noqa: E402
 
 
@@ -72,6 +78,37 @@ def main():
               and float(res2.relres) == float(res.relres))
     print(f"unfused path agrees: {agrees} (iters={int(res2.iters)}, "
           f"relres={float(res2.relres):.2e})")
+
+    # --- 4. preconditioned stepped CG on an ill-conditioned system ------
+    # The GSE-packed Jacobi preconditioner is packed ONCE and applied at
+    # the monitor's current tag -- same one-copy/three-precision storage
+    # as the operator, so a tag-1 apply streams 2 bytes per stored entry
+    # (DESIGN.md §10).
+    ill = G.ill_conditioned_spd(32, decades=8.0, seed=0)
+    gi = pack_csr(ill, k=8)
+    mi = make_jacobi(ill, k=8)
+    bi = spmv(ill, jnp.asarray(rng.normal(size=ill.shape[1])))
+    fast = MonitorParams(t=30, l=30, m=15, rsd_limit=0.5, reldec_limit=0.45)
+    res_cg = solve_cg(gi, bi, tol=1e-10, maxiter=30000, params=fast)
+    res_pcg = solve_pcg(gi, bi, mi, tol=1e-10, maxiter=30000, params=fast)
+    print(f"\nill-conditioned SPD (cond >= 1e6):")
+    print(f"  stepped CG :          iters={int(res_cg.iters):5d} "
+          f"converged={bool(res_cg.converged)}")
+    print(f"  stepped PCG (jacobi): iters={int(res_pcg.iters):5d} "
+          f"converged={bool(res_pcg.converged)}")
+    print("  iteration stream bytes (matrix+precond): "
+          + " ".join(f"tag{t}={iteration_stream_bytes(gi, t, mi)}"
+                     for t in (1, 2, 3)))
+
+    # --- 5. stepped iterative refinement (Carson-Khan shape) ------------
+    # Outer loop: tag-3 residual + full-precision correction.  Inner loop:
+    # loose stepped PCG that mostly stays on the cheap tags.
+    res_ir = solve_ir(gi, bi, tol=1e-11, max_outer=10, inner="cg",
+                      inner_tol=1e-4, inner_maxiter=4000, params=fast,
+                      precond=mi)
+    print(f"stepped IR: converged={res_ir.converged} "
+          f"outer={res_ir.outer_iters} inner={res_ir.inner_iters} "
+          f"true relres={res_ir.relres:.2e}")
 
 
 if __name__ == "__main__":

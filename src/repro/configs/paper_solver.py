@@ -19,3 +19,34 @@ def gmres_setup(name: str = "convdiff_32", small: bool = True):
     suite = generators.gmres_suite(small)
     a = suite.get(name) or generators.convection_diffusion_2d(32)
     return a, MonitorParams.for_gmres()
+
+
+def pcg_setup(precond: str = "jacobi", n: int = 32, decades: float = 8.0):
+    """Preconditioned stepped-CG workload (DESIGN.md §10): the
+    ill-conditioned SPD system where unpreconditioned stepped CG stalls
+    but a GSE-packed diagonal/block preconditioner -- applied at the
+    monitor's current tag -- restores stencil conditioning.
+
+    Returns ``(a, m, params)``; solve with
+    ``solve_pcg(pack_csr(a, 8), b, m, params=params)``.
+    """
+    from repro.solvers import make_block_jacobi, make_jacobi, make_spai0
+
+    factory = {
+        "jacobi": make_jacobi,
+        "spai0": make_spai0,
+        "block_jacobi": make_block_jacobi,
+    }[precond]
+    a = generators.ill_conditioned_spd(n, decades)
+    return a, factory(a), MonitorParams.for_cg()
+
+
+def ir_setup(n: int = 32, decades: float = 8.0):
+    """Stepped iterative-refinement workload (Carson-Khan shape): outer
+    tag-3 residual/correction, inner stepped PCG.  Returns
+    ``(a, m, params)``; solve with ``solve_ir(pack_csr(a, 8), b,
+    precond=m, params=params)``."""
+    from repro.solvers import make_jacobi
+
+    a = generators.ill_conditioned_spd(n, decades)
+    return a, make_jacobi(a), MonitorParams.for_cg()

@@ -49,6 +49,7 @@ __all__ = [
     "decode",
     "decode_jnp",
     "pack32_jnp",
+    "pack32",
     "decode32_jnp",
     "gse_fake_quant",
     "exponent_stats",
@@ -91,10 +92,25 @@ class GSEPacked:
     def shape(self):
         return self.head.shape
 
+    def _tag_bytes(self, tag: int) -> int:
+        """Per-value stored bytes a tag-``tag`` read streams.
+
+        f32-source packs (``frac_bits=23``) have no tail2 segment
+        (``width = m_h + 16``), so tag 3 is not a readable precision --
+        rejected here exactly as ``decode32_jnp`` rejects it.
+        """
+        if tag not in (1, 2, 3):
+            raise ValueError(f"tag must be 1, 2 or 3, got {tag}")
+        if self.frac_bits != _F64_FRAC and tag == 3:
+            raise ValueError(
+                "f32-source packs (frac_bits=23) store no tail2; "
+                "tags 1 and 2 only"
+            )
+        return {1: 2, 2: 4, 3: 8}[tag]
+
     def nbytes(self, tag: int) -> int:
         n = int(np.prod(self.head.shape))
-        per = {1: 2, 2: 4, 3: 8}[tag]
-        return n * per + self.table.size * 4
+        return n * self._tag_bytes(tag) + self.table.size * 4
 
     def bytes_touched(self, tag: int) -> int:
         """Modeled HBM bytes a tag-``tag`` decode/matmul streams for this
@@ -186,11 +202,23 @@ def pack_with_table(vals: np.ndarray, table: np.ndarray, k: int) -> GSEPacked:
     min_diff = np.where(overflow, 1, min_diff)
 
     lsh = w - _F64_FRAC - min_diff  # left shift amount (may be negative)
-    m = np.where(
-        lsh >= 0,
-        m53 << np.maximum(lsh, 0).astype(np.uint64),
-        m53 >> np.minimum(np.maximum(-lsh, 0), 63).astype(np.uint64),
+    # Right-shift path: round-to-nearest-even on the discarded bits so the
+    # tag-3 decode error is <= 0.5 ulp of the W-bit mantissa (truncation
+    # would double the worst case to 1 ulp).  A carry past W bits saturates
+    # to the all-ones mantissa (only reachable at minDiff == 1 with an
+    # all-ones significand).
+    rsh = np.minimum(np.maximum(-lsh, 0), 63).astype(np.uint64)
+    floor_ = m53 >> rsh
+    rem = m53 & ((np.uint64(1) << rsh) - np.uint64(1))
+    half = (np.uint64(1) << rsh) >> np.uint64(1)
+    round_up = (rsh > 0) & (
+        (rem > half) | ((rem == half) & ((floor_ & np.uint64(1)) == np.uint64(1)))
     )
+    rounded = np.minimum(
+        floor_ + round_up.astype(np.uint64),
+        (np.uint64(1) << np.uint64(w)) - np.uint64(1),
+    )
+    m = np.where(lsh >= 0, m53 << np.maximum(lsh, 0).astype(np.uint64), rounded)
     m = np.where(nonzero, m, np.uint64(0))
     # Saturate overflowed values to all-ones mantissa under the max entry.
     max_idx = np.uint64(np.argmax(tbl))
@@ -264,6 +292,10 @@ def _decode_parts(
 
 def decode(packed: GSEPacked, tag: int = 3) -> np.ndarray:
     """Numpy reference decode to float64. tag selects precision (1/2/3)."""
+    if packed.frac_bits != _F64_FRAC and tag == 3:
+        raise ValueError(
+            "f32-source packs (frac_bits=23) store no tail2; tags 1 and 2 only"
+        )
     table = np.asarray(packed.table)
     sgn, mant, pow_ = _decode_parts(
         table,
@@ -338,6 +370,10 @@ def _decode_jnp(table, head, tail1, tail2, ei_bit, frac_bits, tag, dtype):
 
 def decode_jnp(packed: GSEPacked, tag: int = 3, dtype=jnp.float32) -> jnp.ndarray:
     """Jittable decode: int->float convert + scale (no bit scan; DESIGN §2)."""
+    if packed.frac_bits != _F64_FRAC and tag == 3:
+        raise ValueError(
+            "f32-source packs (frac_bits=23) store no tail2; tags 1 and 2 only"
+        )
     return _decode_jnp(
         packed.table,
         packed.head,
@@ -365,9 +401,15 @@ def extract_shared_exponents_jnp(vals: jnp.ndarray, k: int) -> jnp.ndarray:
     counts = jnp.zeros((256,), jnp.int32).at[e_eff.ravel()].add(
         nonzero.ravel().astype(jnp.int32)
     )
-    _, top = jax.lax.top_k(counts, k - 1)
+    top_counts, top = jax.lax.top_k(counts, k - 1)
     e_max = jnp.max(jnp.where(nonzero, e_eff, 0))
     e_max = jnp.maximum(e_max, 1)
+    # Zero-count bins only win the top-k when the data has fewer than k-1
+    # distinct exponents; their bin indices are arbitrary table entries.
+    # The numpy reference (``extract_shared_exponents``) filters
+    # ``counts[e] > 0`` and pads with the max entry -- mirror that so the
+    # two tables agree on few-exponent inputs.
+    top = jnp.where(top_counts > 0, top, e_max)
     table = jnp.concatenate([top.astype(jnp.int32), e_max[None].astype(jnp.int32)])
     # Deduplicate-against-max not required: duplicates are harmless.
     table = jnp.sort(table + 1)[::-1]
@@ -401,11 +443,19 @@ def pack32_jnp(vals: jnp.ndarray, table: jnp.ndarray, k: int):
     min_diff = jnp.where(overflow, 1, min_diff)
 
     lsh = w - _F32_FRAC - min_diff
-    # m24 << lsh for lsh in [-31, w-24]; emulate signed shift.
+    # m24 << lsh for lsh in [-31, w-24]; emulate signed shift.  The
+    # right-shift path rounds to nearest-even on the discarded bits
+    # (mirrors ``pack_with_table``); carries past W saturate.
+    rsh = jnp.clip(-lsh, 0, 31).astype(jnp.uint32)
+    floor_ = m24 >> rsh
+    rem = m24 & ((jnp.uint32(1) << rsh) - 1)
+    half = (jnp.uint32(1) << rsh) >> 1
+    round_up = (rsh > 0) & ((rem > half) | ((rem == half) & ((floor_ & 1) == 1)))
+    rounded = jnp.minimum(floor_ + round_up.astype(jnp.uint32), (1 << w) - 1)
     m = jnp.where(
         lsh >= 0,
         m24 << jnp.clip(lsh, 0, 31).astype(jnp.uint32),
-        m24 >> jnp.clip(-lsh, 0, 31).astype(jnp.uint32),
+        rounded,
     )
     m = jnp.where(nonzero, m, 0)
     m = jnp.where(overflow & nonzero, (1 << w) - 1, m)
@@ -417,6 +467,31 @@ def pack32_jnp(vals: jnp.ndarray, table: jnp.ndarray, k: int):
     ).astype(jnp.uint16)
     tail1 = (m & 0xFFFF).astype(jnp.uint16)
     return head, tail1
+
+
+def pack32(vals, k: int = 8, table: jnp.ndarray | None = None) -> GSEPacked:
+    """f32-source pack into a ``GSEPacked`` container (tags 1/2 only).
+
+    Wraps ``extract_shared_exponents_jnp`` + ``pack32_jnp``.  The mantissa
+    width is ``m_h + 16`` -- there is no tail2 segment -- so the container's
+    byte model (``nbytes``/``bytes_touched``) and decode reject tag 3,
+    consistently with ``decode32_jnp``.
+    """
+    x = jnp.asarray(vals, jnp.float32)
+    if table is None:
+        table = extract_shared_exponents_jnp(x, k)
+    head, tail1 = pack32_jnp(x, table, k)
+    # tail2 does not exist for f32 sources; a zero-length leaf keeps the
+    # pytree structure without allocating a dead full-shape array (the
+    # tag-1/-2 decode branches never reference it).
+    return GSEPacked(
+        table=table,
+        head=head,
+        tail1=tail1,
+        tail2=jnp.zeros((0,), jnp.uint32),
+        ei_bit=_ei_bit(k),
+        frac_bits=_F32_FRAC,
+    )
 
 
 @partial(jax.jit, static_argnames=("k", "tag", "dtype"))

@@ -1,21 +1,47 @@
-"""Iterative solvers with stepped mixed precision (paper Section III.D)."""
-from repro.solvers.cg import CGResult, solve_cg
-from repro.solvers.fused_cg import fused_cg_step, gse_matvec
+"""Iterative solvers with stepped mixed precision (paper Section III.D).
+
+Beyond-paper subsystem (DESIGN.md §10): GSE-packed preconditioners that
+ride the operator's tag schedule (``precond``), preconditioned CG
+(``solve_pcg``, with a fused iteration path) and right-preconditioned
+GMRES (``solve_gmres(..., precond=...)``), plus a stepped
+iterative-refinement driver (``solve_ir``).
+"""
+from repro.solvers.cg import CGResult, solve_cg, solve_pcg
+from repro.solvers.fused_cg import fused_cg_step, fused_pcg_step, gse_matvec
 from repro.solvers.gmres import GMRESResult, solve_gmres
+from repro.solvers.ir import IRResult, solve_ir
 from repro.solvers.operators import (
     make_dense_operator,
     make_fixed_operator,
     make_gse_operator,
+    make_precond_operator,
+)
+from repro.solvers.precond import (
+    BlockJacobiGSEPrecond,
+    DiagGSEPrecond,
+    make_block_jacobi,
+    make_jacobi,
+    make_spai0,
 )
 
 __all__ = [
     "CGResult",
     "solve_cg",
+    "solve_pcg",
     "fused_cg_step",
+    "fused_pcg_step",
     "gse_matvec",
     "GMRESResult",
     "solve_gmres",
+    "IRResult",
+    "solve_ir",
     "make_dense_operator",
     "make_fixed_operator",
     "make_gse_operator",
+    "make_precond_operator",
+    "BlockJacobiGSEPrecond",
+    "DiagGSEPrecond",
+    "make_block_jacobi",
+    "make_jacobi",
+    "make_spai0",
 ]

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from repro.core import precision as P
 from repro.sparse.csr import GSECSR
 
-__all__ = ["CGResult", "solve_cg"]
+__all__ = ["CGResult", "solve_cg", "solve_pcg"]
 
 
 class CGResult(NamedTuple):
@@ -160,6 +160,221 @@ def _solve_cg_fused(a, b, x0, tol, maxiter, params: P.MonitorParams,
     )
 
 
+@partial(jax.jit, static_argnames=("apply_a", "apply_m", "maxiter", "params",
+                                   "init_tag"))
+def _solve_pcg(apply_a, apply_m, b, x0, tol, maxiter, params: P.MonitorParams,
+               init_tag: int = 1):
+    """Preconditioned CG: ``z = M^{-1} r`` at the monitor's current tag.
+
+    The recurrence runs on ``rz = r.z``; the monitor sees the plain
+    residual norm ``sqrt(r.r)/||b||`` -- the same quantity the paper's
+    controller watches in unpreconditioned CG.
+    """
+    dtype = b.dtype
+    bnorm = jnp.linalg.norm(b)
+    bnorm = jnp.where(bnorm == 0, 1.0, bnorm)
+
+    mon = P.init(params, dtype=dtype, tag=init_tag)
+    r0 = b - apply_a(x0, mon.tag)
+    z0 = apply_m(r0, mon.tag)
+    state = dict(
+        x=x0,
+        r=r0,
+        p=z0,
+        rz=jnp.vdot(r0, z0),
+        rr=jnp.vdot(r0, r0),
+        it=jnp.int32(0),
+        mon=mon,
+        switches=jnp.full((2,), -1, jnp.int32),
+    )
+
+    def relres(s):
+        return jnp.sqrt(jnp.abs(s["rr"])) / bnorm
+
+    def cond(s):
+        return (relres(s) > tol) & (s["it"] < maxiter)
+
+    def body(s):
+        tag = s["mon"].tag
+        ap = apply_a(s["p"], tag)
+        denom = jnp.vdot(s["p"], ap)
+        alpha = s["rz"] / jnp.where(denom == 0, 1.0, denom)
+        x = s["x"] + alpha * s["p"]
+        r = s["r"] - alpha * ap
+        z = apply_m(r, tag)
+        rz_new = jnp.vdot(r, z)
+        rr_new = jnp.vdot(r, r)
+        mon = P.record(s["mon"], jnp.sqrt(jnp.abs(rr_new)) / bnorm)
+        mon2 = P.update_tag(mon, params)
+        switches = _record_switch(s["switches"], mon, mon2, s["it"])
+        beta = rz_new / jnp.where(s["rz"] == 0, 1.0, s["rz"])
+        p = z + beta * s["p"]
+        return dict(
+            x=x, r=r, p=p, rz=rz_new, rr=rr_new, it=s["it"] + 1, mon=mon2,
+            switches=switches,
+        )
+
+    out = jax.lax.while_loop(cond, body, state)
+    return CGResult(
+        x=out["x"],
+        iters=out["it"],
+        relres=relres(out),
+        tag=out["mon"].tag,
+        switch_iters=out["switches"],
+        converged=relres(out) <= tol,
+    )
+
+
+@partial(jax.jit, static_argnames=("maxiter", "params", "init_tag"))
+def _solve_pcg_fused(a, m, b, x0, tol, maxiter, params: P.MonitorParams,
+                     init_tag: int = 1):
+    """Fused-path PCG over a ``GSECSR`` operand and a pytree preconditioner.
+
+    Each iteration is one ``fused_pcg_step``: operator decode and
+    preconditioner apply ride the same tag branch (DESIGN.md §10), with
+    the exact arithmetic of ``_solve_pcg`` -- bit-identical trajectories.
+    """
+    from repro.solvers.fused_cg import fused_pcg_step, gse_matvec
+
+    dtype = b.dtype
+    bnorm = jnp.linalg.norm(b)
+    bnorm = jnp.where(bnorm == 0, 1.0, bnorm)
+
+    mon = P.init(params, dtype=dtype, tag=init_tag)
+    r0 = b - gse_matvec(a, x0, mon.tag)
+    z0 = m.apply(r0, mon.tag)
+    state = dict(
+        x=x0,
+        r=r0,
+        p=z0,
+        rz=jnp.vdot(r0, z0),
+        rr=jnp.vdot(r0, r0),
+        it=jnp.int32(0),
+        mon=mon,
+        switches=jnp.full((2,), -1, jnp.int32),
+    )
+
+    def relres(s):
+        return jnp.sqrt(jnp.abs(s["rr"])) / bnorm
+
+    def cond(s):
+        return (relres(s) > tol) & (s["it"] < maxiter)
+
+    def body(s):
+        x, r, p, rz_new, rr_new = fused_pcg_step(
+            a, m, s["x"], s["r"], s["p"], s["rz"], s["mon"].tag
+        )
+        mon = P.record(s["mon"], jnp.sqrt(jnp.abs(rr_new)) / bnorm)
+        mon2 = P.update_tag(mon, params)
+        switches = _record_switch(s["switches"], mon, mon2, s["it"])
+        return dict(
+            x=x, r=r, p=p, rz=rz_new, rr=rr_new, it=s["it"] + 1, mon=mon2,
+            switches=switches,
+        )
+
+    out = jax.lax.while_loop(cond, body, state)
+    return CGResult(
+        x=out["x"],
+        iters=out["it"],
+        relres=relres(out),
+        tag=out["mon"].tag,
+        switch_iters=out["switches"],
+        converged=relres(out) <= tol,
+    )
+
+
+def _finish_with_correction(res, b, tol, maxiter, apply3, resume):
+    """Shared final-correction epilogue (``solve_cg`` / ``solve_pcg`` /
+    ``solve_gmres`` -- ``CGResult`` and ``GMRESResult`` share fields):
+    verify the TRUE tag-3 residual and, when the recursive convergence was
+    optimistic, resume at full precision.  The resume budget is clamped to
+    >= 1 -- the first solve may have exhausted ``maxiter`` exactly at
+    tolerance, and a non-positive budget would run zero iterations and
+    report a stale result."""
+    bnorm = jnp.linalg.norm(b)
+    bnorm = jnp.where(bnorm == 0, 1.0, bnorm)
+    true_rel = jnp.linalg.norm(b - apply3(res.x)) / bnorm
+    if not (bool(res.converged) and float(true_rel) > tol):
+        return res
+    res2 = resume(res.x, max(maxiter - int(res.iters), 1))
+    return type(res)(
+        x=res2.x,
+        iters=res.iters + res2.iters,
+        relres=res2.relres,
+        tag=res2.tag,
+        switch_iters=res.switch_iters,
+        converged=res2.converged,
+    )
+
+
+def _gsecsr_operator(a: GSECSR) -> Callable:
+    """Tag-dispatched operator view of a GSECSR, memoized on the instance
+    so repeated solves reuse one closure (the closure is a static jit
+    argument -- a fresh one per call would retrace the whole solver)."""
+    op = a.__dict__.get("_tag_operator")
+    if op is None:
+        from repro.solvers.fused_cg import gse_matvec
+
+        def op(v, tag):
+            return gse_matvec(a, v, tag)
+
+        a.__dict__["_tag_operator"] = op
+    return op
+
+
+def solve_pcg(
+    apply_a: Union[Callable, GSECSR],
+    b: jnp.ndarray,
+    precond,
+    x0: jnp.ndarray | None = None,
+    tol: float = 1e-6,
+    maxiter: int = 5000,
+    params: P.MonitorParams | None = None,
+    final_correction: bool = False,
+) -> CGResult:
+    """Preconditioned CG for SPD systems with stepped mixed precision.
+
+    ``precond`` is a preconditioner from :mod:`repro.solvers.precond`
+    (exposing ``apply``/``apply_at``) or any callable ``apply_m(r, tag)``.
+    Both the operator and the preconditioner are applied at the monitor's
+    current tag, so the preconditioner stream follows the same precision
+    schedule without a second stored copy.
+
+    Passing a ``GSECSR`` as ``apply_a`` together with a precond *object*
+    selects the fused iteration path (``fused_pcg_step``) -- bit-identical
+    to the generic path, fewer kernel launches.
+    """
+    if x0 is None:
+        x0 = jnp.zeros_like(b)
+    if params is None:
+        params = P.MonitorParams.for_cg()
+    tol_ = jnp.asarray(tol, b.dtype)
+    fused = isinstance(apply_a, GSECSR) and hasattr(precond, "apply_at")
+    if fused:
+        res = _solve_pcg_fused(apply_a, precond, b, x0, tol_, maxiter, params)
+    else:
+        apply_m = precond if callable(precond) else precond.apply
+        if isinstance(apply_a, GSECSR):
+            apply_a = _gsecsr_operator(apply_a)
+        res = _solve_pcg(apply_a, apply_m, b, x0, tol_, maxiter, params)
+    if not final_correction:
+        return res
+    apply3_op = _gsecsr_operator(apply_a) if fused else apply_a
+
+    def apply3(v):
+        return apply3_op(v, jnp.int32(3))
+
+    if fused:
+        def resume(xr, budget):
+            return _solve_pcg_fused(apply_a, precond, b, xr, tol_, budget,
+                                    params, init_tag=3)
+    else:
+        def resume(xr, budget):
+            return _solve_pcg(apply_a, apply_m, b, xr, tol_, budget,
+                              params, init_tag=3)
+    return _finish_with_correction(res, b, tol, maxiter, apply3, resume)
+
+
 def solve_cg(
     apply_a: Union[Callable, GSECSR],
     b: jnp.ndarray,
@@ -194,28 +409,12 @@ def solve_cg(
     res = solve(apply_a, b, x0, tol_, maxiter, params)
     if not final_correction:
         return res
-    if fused:
-        from repro.solvers.fused_cg import gse_matvec
+    apply3_op = _gsecsr_operator(apply_a) if fused else apply_a
 
-        def apply3(v):
-            return gse_matvec(apply_a, v, jnp.int32(3))
-    else:
-        def apply3(v):
-            return apply_a(v, jnp.int32(3))
-    bnorm = jnp.linalg.norm(b)
-    bnorm = jnp.where(bnorm == 0, 1.0, bnorm)
-    true_rel = jnp.linalg.norm(b - apply3(res.x)) / bnorm
-    if bool(res.converged) and float(true_rel) > tol:
-        res2 = solve(
-            apply_a, b, res.x, tol_, maxiter - int(res.iters), params,
-            init_tag=3,
-        )
-        return CGResult(
-            x=res2.x,
-            iters=res.iters + res2.iters,
-            relres=res2.relres,
-            tag=res2.tag,
-            switch_iters=res.switch_iters,
-            converged=res2.converged,
-        )
-    return res
+    def apply3(v):
+        return apply3_op(v, jnp.int32(3))
+
+    def resume(xr, budget):
+        return solve(apply_a, b, xr, tol_, budget, params, init_tag=3)
+
+    return _finish_with_correction(res, b, tol, maxiter, apply3, resume)

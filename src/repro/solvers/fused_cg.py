@@ -31,7 +31,7 @@ import jax.numpy as jnp
 from repro.sparse.csr import GSECSR
 from repro.sparse.spmv import _decode_gsecsr
 
-__all__ = ["fused_cg_step", "gse_matvec"]
+__all__ = ["fused_cg_step", "fused_pcg_step", "gse_matvec"]
 
 
 def _step_at_tag(a: GSECSR, x, r, p, rs, *, tag: int, acc_dtype):
@@ -71,6 +71,52 @@ def fused_cg_step(a: GSECSR, x, r, p, rs, tag, acc_dtype=jnp.float64):
             partial(_step_at_tag, a, tag=3, acc_dtype=acc_dtype),
         ],
         x, r, p, rs,
+    )
+
+
+def _pcg_step_at_tag(a: GSECSR, m, x, r, p, rz, *, tag: int, acc_dtype):
+    """One fused preconditioned-CG iteration at a fixed precision tag.
+
+    The operator decode AND the preconditioner apply run at the same
+    static ``tag`` inside one branch, so both streams follow the monitor's
+    schedule and neither low-tag branch references its tail segments
+    (DESIGN.md §10).  The arithmetic is the exact op sequence of the
+    unfused ``_solve_pcg`` body -- bit-identical trajectories.
+    """
+    val, col = _decode_gsecsr(
+        a.colpak, a.head, a.tail1, a.tail2, a.table, a.ei_bit, tag, acc_dtype
+    )
+    ap = jax.ops.segment_sum(
+        val * p.astype(acc_dtype)[col], a.row_ids, num_segments=a.shape[0]
+    )
+    denom = jnp.vdot(p, ap)
+    alpha = rz / jnp.where(denom == 0, 1.0, denom)
+    x2 = x + alpha * p
+    r2 = r - alpha * ap
+    z2 = m.apply_at(r2, tag, acc_dtype)        # same tag as the SpMV
+    rz2 = jnp.vdot(r2, z2)
+    rr2 = jnp.vdot(r2, r2)                     # monitor sees sqrt(rr)/||b||
+    beta = rz2 / jnp.where(rz == 0, 1.0, rz)
+    p2 = z2 + beta * p
+    return x2, r2, p2, rz2, rr2
+
+
+def fused_pcg_step(a: GSECSR, m, x, r, p, rz, tag, acc_dtype=jnp.float64):
+    """Fused PCG iteration with traced precision ``tag`` in {1, 2, 3}.
+
+    ``m`` is a preconditioner from ``solvers.precond`` (anything exposing
+    ``apply_at(r, tag, acc_dtype)`` with a static tag).  Returns
+    ``(x', r', p', rz', rr')`` where ``rz' = r'.z'`` drives the recurrence
+    and ``rr' = r'.r'`` feeds the residual monitor.
+    """
+    return jax.lax.switch(
+        jnp.clip(tag - 1, 0, 2),
+        [
+            partial(_pcg_step_at_tag, a, m, tag=1, acc_dtype=acc_dtype),
+            partial(_pcg_step_at_tag, a, m, tag=2, acc_dtype=acc_dtype),
+            partial(_pcg_step_at_tag, a, m, tag=3, acc_dtype=acc_dtype),
+        ],
+        x, r, p, rz,
     )
 
 

@@ -37,10 +37,24 @@ def _givens(a, b):
     return c, s, d
 
 
-@partial(jax.jit, static_argnames=("apply_a", "restart", "maxiter", "params",
-                                   "init_tag"))
+@partial(jax.jit, static_argnames=("apply_a", "apply_m", "restart", "maxiter",
+                                   "params", "init_tag"))
 def _solve_gmres(apply_a, b, x0, tol, restart, maxiter,
-                 params: P.MonitorParams, init_tag: int = 1):
+                 params: P.MonitorParams, init_tag: int = 1, apply_m=None):
+    """``apply_m`` (optional) right-preconditions: Arnoldi runs on
+    ``A M^{-1}`` and the Krylov correction is mapped back through
+    ``M^{-1}`` at the end of each cycle.  In exact arithmetic right
+    preconditioning keeps ``|g[j+1]|`` equal to the residual norm of the
+    original system, so the stepped monitor watches the same quantity as
+    in the plain solver -- but under low-tag operator/preconditioner
+    perturbation it remains a RECURSIVE residual (paper semantics, same
+    as unpreconditioned stepped GMRES): use ``final_correction`` to
+    certify the TRUE tag-3 residual.  Both applications run at the
+    monitor's current tag; a mid-cycle tag step therefore mixes decode
+    precisions inside one Krylov cycle (for ``M^{-1}`` exactly as
+    Algorithm 3 already accepts for ``A`` -- the in-place switch, no
+    FGMRES-style Z storage); the next restart's explicit
+    ``r = b - A x`` re-anchors the cycle."""
     n = b.shape[0]
     dtype = b.dtype
     bnorm = jnp.linalg.norm(b)
@@ -63,7 +77,10 @@ def _solve_gmres(apply_a, b, x0, tol, restart, maxiter,
 
         def inner_body(c):
             j, V, H, cs, sn, g, resid, mon, switches = c
-            w = apply_a(V[j], mon.tag)
+            if apply_m is None:
+                w = apply_a(V[j], mon.tag)
+            else:
+                w = apply_a(apply_m(V[j], mon.tag), mon.tag)
             # CGS2: two passes of classical Gram-Schmidt vs rows 0..j.
             mask = (jnp.arange(restart + 1) <= j).astype(dtype)
             h = jnp.zeros((restart + 1,), dtype)
@@ -115,7 +132,10 @@ def _solve_gmres(apply_a, b, x0, tol, restart, maxiter,
         Rm = Rm + jnp.diag(jnp.where(diag == 0, 1.0, 0.0).astype(dtype))
         gm = jnp.where(live, g[:restart], 0.0)
         y = jax.scipy.linalg.solve_triangular(Rm, gm, lower=False)
-        x_new = x + y @ V[:restart]
+        u = y @ V[:restart]
+        if apply_m is not None:  # x = x0 + M^{-1} (V y), right precond
+            u = apply_m(u, mon.tag)
+        x_new = x + u
         return x_new, it0 + j, mon, switches, resid / bnorm
 
     def outer_cond(s):
@@ -152,31 +172,35 @@ def solve_gmres(
     maxiter: int = 15000,
     params: P.MonitorParams | None = None,
     final_correction: bool = False,
+    precond=None,
 ) -> GMRESResult:
     """Restarted GMRES; ``apply_a(x, tag)`` and ``final_correction`` as in
-    :func:`repro.solvers.cg.solve_cg`."""
+    :func:`repro.solvers.cg.solve_cg`.
+
+    ``precond`` (optional) right-preconditions the iteration: a
+    preconditioner object from :mod:`repro.solvers.precond` or a callable
+    ``apply_m(r, tag)``.  The preconditioner rides the monitor's tag
+    schedule exactly like the operator (DESIGN.md §10).
+    """
     if x0 is None:
         x0 = jnp.zeros_like(b)
     if params is None:
         params = P.MonitorParams.for_gmres()
+    apply_m = None
+    if precond is not None:
+        apply_m = precond if callable(precond) else precond.apply
     tol_ = jnp.asarray(tol, b.dtype)
-    res = _solve_gmres(apply_a, b, x0, tol_, restart, maxiter, params)
+    res = _solve_gmres(apply_a, b, x0, tol_, restart, maxiter, params,
+                       apply_m=apply_m)
     if not final_correction:
         return res
-    bnorm = jnp.linalg.norm(b)
-    bnorm = jnp.where(bnorm == 0, 1.0, bnorm)
-    true_rel = jnp.linalg.norm(b - apply_a(res.x, jnp.int32(3))) / bnorm
-    if bool(res.converged) and float(true_rel) > tol:
-        res2 = _solve_gmres(
-            apply_a, b, res.x, tol_, restart, maxiter - int(res.iters),
-            params, init_tag=3,
-        )
-        return GMRESResult(
-            x=res2.x,
-            iters=res.iters + res2.iters,
-            relres=res2.relres,
-            tag=res2.tag,
-            switch_iters=res.switch_iters,
-            converged=res2.converged,
-        )
-    return res
+    from repro.solvers.cg import _finish_with_correction
+
+    def apply3(v):
+        return apply_a(v, jnp.int32(3))
+
+    def resume(xr, budget):
+        return _solve_gmres(apply_a, b, xr, tol_, restart, budget, params,
+                            init_tag=3, apply_m=apply_m)
+
+    return _finish_with_correction(res, b, tol, maxiter, apply3, resume)

@@ -1,0 +1,125 @@
+"""Stepped mixed-precision iterative refinement (Carson-Khan shape).
+
+Outer loop at full precision, inner solves at stepped low precision:
+
+    repeat:
+        r = b - A x          # tag-3 residual (the TRUE residual)
+        d ~= A^{-1} r        # stepped inner solve, starts at tag 1
+        x = x + d            # full-precision correction
+
+This is the classic three-precision iterative-refinement structure
+(Carson & Higham; Carson & Khan arXiv:2307.03914 for the preconditioned
+variant) mapped onto GSE-SEM's one-copy/three-precision storage: the
+inner solver reads the SAME packed operand at whatever tag its residual
+monitor has stepped to, and the outer loop needs no second matrix copy
+for the high-precision residual -- it is a tag-3 read.
+
+The inner solve is deliberately loose (``inner_tol``): IR converges as
+long as each correction gains a constant factor, so the inner monitor
+usually never needs to leave tag 1/2 -- most of the run streams 6-8
+bytes/nnz instead of 12 (DESIGN.md §10).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import precision as P
+from repro.sparse.csr import GSECSR
+from repro.solvers.cg import solve_cg, solve_pcg
+from repro.solvers.gmres import solve_gmres
+
+__all__ = ["IRResult", "solve_ir"]
+
+
+class IRResult(NamedTuple):
+    x: jnp.ndarray
+    outer_iters: int          # correction steps taken
+    inner_iters: int          # total inner-solver iterations
+    relres: float             # final TRUE (tag-3) relative residual
+    converged: bool
+    history: np.ndarray       # (outer_iters+1,) outer residual trajectory
+
+
+def solve_ir(
+    apply_a: Union[Callable, GSECSR],
+    b: jnp.ndarray,
+    tol: float = 1e-10,
+    max_outer: int = 10,
+    inner: str = "cg",
+    inner_tol: float = 1e-4,
+    inner_maxiter: int = 2000,
+    params: P.MonitorParams | None = None,
+    precond=None,
+    restart: int = 30,
+) -> IRResult:
+    """Iterative refinement with a stepped inner solver.
+
+    ``apply_a`` is a tag-dispatched operator or a ``GSECSR`` (the inner CG
+    then takes the fused path).  ``inner`` selects ``"cg"`` or ``"gmres"``;
+    ``precond`` (a :mod:`repro.solvers.precond` object or callable) turns
+    the inner solve into PCG / right-preconditioned GMRES.  ``params``
+    parameterizes the inner residual monitor (``MonitorParams``); each
+    correction restarts the monitor at tag 1, so late corrections --
+    whose right-hand sides are tiny -- get the cheap tags again.
+    """
+    if params is None:
+        params = (P.MonitorParams.for_cg() if inner == "cg"
+                  else P.MonitorParams.for_gmres())
+    if inner not in ("cg", "gmres"):
+        raise ValueError(f"inner must be 'cg' or 'gmres', got {inner}")
+
+    if isinstance(apply_a, GSECSR):
+        from repro.solvers.cg import _gsecsr_operator
+
+        # Memoized on the GSECSR instance: GMRES treats the operator as a
+        # static jit arg, so a fresh closure per call would retrace.
+        apply_tagged = _gsecsr_operator(apply_a)
+    else:
+        apply_tagged = apply_a
+
+    def apply3(v):
+        return apply_tagged(v, jnp.int32(3))
+
+    bnorm = float(jnp.linalg.norm(b))
+    bnorm = bnorm if bnorm != 0 else 1.0
+
+    x = jnp.zeros_like(b)
+    total_inner = 0
+    outer = 0
+    # One tag-3 residual per correction: r doubles as convergence check
+    # and next inner right-hand side (the module's whole point is to
+    # minimize full-precision reads).
+    r = b - apply3(x)
+    relres = float(jnp.linalg.norm(r)) / bnorm
+    history = [relres]
+    while relres > tol and outer < max_outer:
+        if inner == "cg":
+            if precond is not None:
+                res = solve_pcg(apply_a, r, precond, tol=inner_tol,
+                                maxiter=inner_maxiter, params=params)
+            else:
+                res = solve_cg(apply_a, r, tol=inner_tol,
+                               maxiter=inner_maxiter, params=params)
+        else:
+            res = solve_gmres(apply_tagged, r, tol=inner_tol, restart=restart,
+                              maxiter=inner_maxiter, params=params,
+                              precond=precond)
+        x = x + res.x          # full-precision correction
+        total_inner += int(res.iters)
+        outer += 1
+        r = b - apply3(x)      # tag-3 residual: the one-copy high read
+        relres = float(jnp.linalg.norm(r)) / bnorm
+        history.append(relres)
+        if not bool(res.converged) and int(res.iters) == 0:
+            break  # inner solver made no progress; avoid spinning
+    return IRResult(
+        x=x,
+        outer_iters=outer,
+        inner_iters=total_inner,
+        relres=relres,
+        converged=relres <= tol,
+        history=np.asarray(history),
+    )

@@ -14,7 +14,12 @@ import jax.numpy as jnp
 from repro.sparse.csr import CSR, GSECSR
 from repro.sparse.spmv import spmv, spmv_gse
 
-__all__ = ["make_gse_operator", "make_fixed_operator", "make_dense_operator"]
+__all__ = [
+    "make_gse_operator",
+    "make_fixed_operator",
+    "make_dense_operator",
+    "make_precond_operator",
+]
 
 
 def make_gse_operator(a: GSECSR, acc_dtype=jnp.float64) -> Callable:
@@ -48,5 +53,18 @@ def make_dense_operator(mat: jnp.ndarray):
     def apply(x, tag):
         del tag
         return mat @ x
+
+    return apply
+
+
+def make_precond_operator(m, acc_dtype=jnp.float64) -> Callable:
+    """``apply_m(r, tag) = M^{-1} r`` over a :mod:`repro.solvers.precond`
+    preconditioner -- the preconditioner-side twin of ``make_gse_operator``.
+    Delegates to the preconditioner's shared tag dispatch (one stored
+    copy, three apply precisions, ``lax.switch`` over the tag-specialized
+    decode branches)."""
+
+    def apply(r, tag):
+        return m.apply(r, tag, acc_dtype)
 
     return apply

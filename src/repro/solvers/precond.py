@@ -1,0 +1,184 @@
+"""GSE-packed preconditioners that ride the operator's tag schedule.
+
+Carson & Khan (arXiv:2307.03914) and Loe et al. (arXiv:2109.01232) both
+find that the preconditioner application is where mixed precision pays
+off most in Krylov solvers.  GSE-SEM's one-copy/three-precision storage
+is a perfect fit: the preconditioner entries are packed ONCE and every
+apply streams them at the residual monitor's *current* tag -- the same
+``lax.switch`` discipline as ``make_gse_operator``, so a tag-1 apply
+streams 2 bytes per stored entry (DESIGN.md §10).
+
+Two application paths, both through the existing tag-specialized decode:
+
+  * Diagonal preconditioners (Jacobi, SPAI-0) store ``M^{-1}``'s diagonal
+    as a dense ``GSEPacked`` vector and apply via the dense decode
+    (``core.gse._decode_jnp``, DESIGN.md §2.1): tag-1/-2 branches never
+    reference the tail segments.
+  * Block-Jacobi stores the block-diagonal inverse as a ``GSECSR`` and
+    applies via ``spmv_gse`` (``sparse.spmv._decode_gsecsr``) -- exactly
+    the operator's own SpMV decode path.
+
+Every preconditioner answers ``bytes_touched(tag)`` (modeled HBM bytes
+one apply streams) so the solver benchmarks can charge the preconditioner
+stream at the per-iteration tag actually run (``benchmarks/fig89``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gse
+from repro.sparse.csr import CSR, GSECSR, from_coo, pack_csr
+from repro.sparse.spmv import spmv_gse
+
+__all__ = [
+    "DiagGSEPrecond",
+    "BlockJacobiGSEPrecond",
+    "make_jacobi",
+    "make_spai0",
+    "make_block_jacobi",
+]
+
+
+class _TagDispatchPrecond:
+    """Shared traced-tag dispatch: ``lax.switch`` over the three
+    static-tag ``apply_at`` branches -- the preconditioner-side twin of
+    ``make_gse_operator``.  The single implementation keeps the branch
+    order / tag clipping identical across preconditioner kinds."""
+
+    def apply(self, r: jnp.ndarray, tag, acc_dtype=jnp.float64):
+        """``z = M^{-1} r`` with a traced tag in {1, 2, 3}."""
+        return jax.lax.switch(
+            jnp.clip(tag - 1, 0, 2),
+            [partial(self.apply_at, tag=t, acc_dtype=acc_dtype) for t in (1, 2, 3)],
+            r,
+        )
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(eq=False)            # identity hash: bound methods
+class DiagGSEPrecond(_TagDispatchPrecond):  # are usable as static jit args
+    """Diagonal ``M^{-1}`` stored as a dense GSE-SEM vector (one copy,
+    three apply precisions)."""
+
+    packed: gse.GSEPacked  # (n,) packed entries of M^{-1}'s diagonal
+    kind: str              # static: "jacobi" | "spai0"
+
+    def apply_at(self, r: jnp.ndarray, tag: int, acc_dtype=jnp.float64):
+        """``z = M^{-1} r`` at a *static* tag (dense decode path, §2.1)."""
+        d = gse.decode_jnp(self.packed, tag, acc_dtype)
+        return d * r.astype(acc_dtype)
+
+    def nbytes(self, tag: int) -> int:
+        return self.packed.nbytes(tag)
+
+    def bytes_touched(self, tag: int) -> int:
+        """Modeled HBM bytes one tag-``tag`` apply streams for the stored
+        preconditioner (the dense r/z traffic is format-independent)."""
+        return self.packed.nbytes(tag)
+
+    def tree_flatten(self):
+        return (self.packed,), (self.kind,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(leaves[0], kind=aux[0])
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(eq=False)
+class BlockJacobiGSEPrecond(_TagDispatchPrecond):
+    """Block-diagonal ``M^{-1}`` stored as a GSE-SEM CSR; applies through
+    the operator's own tag-specialized SpMV decode path (§2.4)."""
+
+    mat: GSECSR  # block-diagonal inverse, GSE-packed
+    block: int   # static
+
+    kind = "block_jacobi"
+
+    def apply_at(self, r: jnp.ndarray, tag: int, acc_dtype=jnp.float64):
+        return spmv_gse(self.mat, r, tag=tag, acc_dtype=acc_dtype)
+
+    def nbytes(self, tag: int) -> int:
+        return self.mat.nbytes(tag)
+
+    def bytes_touched(self, tag: int) -> int:
+        return self.mat.bytes_touched(tag)
+
+    def tree_flatten(self):
+        return (self.mat,), (self.block,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(leaves[0], block=aux[0])
+
+
+def _csr_diag(a: CSR) -> np.ndarray:
+    """Diagonal of a CSR (missing entries -> 0)."""
+    rows = np.asarray(a.row_ids)
+    cols = np.asarray(a.col)
+    vals = np.asarray(a.val, np.float64)
+    d = np.zeros(a.shape[0], np.float64)
+    hit = rows == cols
+    d[rows[hit]] = vals[hit]
+    return d
+
+
+def make_jacobi(a: CSR, k: int = 8) -> DiagGSEPrecond:
+    """Jacobi: ``M^{-1} = diag(A)^{-1}``, packed once against ``k`` shared
+    exponents.  Zero diagonal entries fall back to 1 (identity row)."""
+    d = _csr_diag(a)
+    d_inv = np.where(d != 0, 1.0 / np.where(d == 0, 1.0, d), 1.0)
+    return DiagGSEPrecond(packed=gse.pack(d_inv, k), kind="jacobi")
+
+
+def make_spai0(a: CSR, k: int = 8) -> DiagGSEPrecond:
+    """SPAI-0: the diagonal ``M`` minimizing ``||I - M A||_F`` --
+    ``m_i = a_ii / ||A_{i,:}||^2`` (Carson-Khan's static-pattern sparse
+    approximate inverse restricted to the diagonal pattern)."""
+    rows = np.asarray(a.row_ids)
+    vals = np.asarray(a.val, np.float64)
+    row_sq = np.zeros(a.shape[0], np.float64)
+    np.add.at(row_sq, rows, vals * vals)
+    d = _csr_diag(a)
+    m = np.where(row_sq != 0, d / np.where(row_sq == 0, 1.0, row_sq), 1.0)
+    m = np.where(m == 0, 1.0, m)
+    return DiagGSEPrecond(packed=gse.pack(m, k), kind="spai0")
+
+
+def make_block_jacobi(a: CSR, block: int = 4, k: int = 8) -> BlockJacobiGSEPrecond:
+    """Block-Jacobi: invert each ``block x block`` diagonal block of A and
+    pack the block-diagonal inverse as a ``GSECSR``.
+
+    The trailing partial block is padded with identity rows before the
+    batched inverse, then the padding is dropped.  Blocks must be
+    nonsingular (guaranteed for SPD / strictly diagonally dominant A).
+    """
+    n = a.shape[0]
+    nb = (n + block - 1) // block
+    rows = np.asarray(a.row_ids)
+    cols = np.asarray(a.col)
+    vals = np.asarray(a.val, np.float64)
+
+    dense = np.zeros((nb, block, block), np.float64)
+    same = rows // block == cols // block
+    br, bc, bv = rows[same], cols[same], vals[same]
+    dense[br // block, br % block, bc % block] = bv
+    # Identity-pad rows beyond n so every block inverts cleanly.
+    pad = np.arange(nb * block)[n:]
+    dense[pad // block, pad % block, pad % block] = 1.0
+
+    inv = np.linalg.inv(dense)
+    bi, ri, ci = np.meshgrid(
+        np.arange(nb), np.arange(block), np.arange(block), indexing="ij"
+    )
+    out_r = (bi * block + ri).ravel()
+    out_c = (bi * block + ci).ravel()
+    out_v = inv.ravel()
+    keep = (out_r < n) & (out_c < n) & (out_v != 0)
+    m = from_coo(out_r[keep], out_c[keep], out_v[keep], (n, n))
+    return BlockJacobiGSEPrecond(mat=pack_csr(m, k), block=block)

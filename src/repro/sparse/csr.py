@@ -25,7 +25,14 @@ import numpy as np
 
 from repro.core import gse
 
-__all__ = ["CSR", "GSECSR", "from_coo", "pack_csr", "to_ell"]
+__all__ = [
+    "CSR",
+    "GSECSR",
+    "from_coo",
+    "pack_csr",
+    "to_ell",
+    "iteration_stream_bytes",
+]
 
 
 @jax.tree_util.register_pytree_node_class
@@ -202,6 +209,30 @@ def pack_csr(a: CSR, k: int = 8) -> GSECSR:
         ei_bit=ei,
         shape=a.shape,
     )
+
+
+def iteration_stream_bytes(op, tag, precond=None) -> int:
+    """Modeled HBM bytes ONE stepped solver iteration streams at ``tag``.
+
+    Sums the operator's matrix streams (``op.bytes_touched``) with the
+    preconditioner's stored streams at the SAME tag: in the
+    preconditioned stepped solvers both reads follow the monitor's
+    schedule, so a tag-1 iteration pays 2 B per stored preconditioner
+    entry, not 8 (DESIGN.md §10).  Without a preconditioner ``tag`` may
+    also be a ``CSR`` store dtype; charging a preconditioner requires a
+    GSE tag in {1, 2, 3} (the preconditioner is always GSE-packed).  The
+    dense vector traffic is format-independent and excluded, as in
+    ``bytes_touched`` itself.
+    """
+    total = op.bytes_touched(tag)
+    if precond is not None:
+        if tag not in (1, 2, 3):
+            raise ValueError(
+                f"preconditioner streams need a GSE tag in {{1, 2, 3}}, "
+                f"got {tag!r}"
+            )
+        total += precond.bytes_touched(tag)
+    return total
 
 
 def to_ell(a: CSR, lane: int = 128) -> Tuple[np.ndarray, np.ndarray, int]:

@@ -26,6 +26,8 @@ __all__ = [
     "convection_diffusion_2d",
     "random_spd",
     "circuit_like",
+    "diag_rescale",
+    "ill_conditioned_spd",
     "mass_diagonal",
     "cg_suite",
     "gmres_suite",
@@ -151,6 +153,23 @@ def diag_rescale(a: CSR, decades: float = 6.0, seed: int = 0) -> CSR:
     cols = np.asarray(a.col)
     vals = np.asarray(a.val) * d[rows] * d[cols]
     return from_coo(rows, cols, vals, a.shape)
+
+
+def ill_conditioned_spd(n: int = 32, decades: float = 14.0, seed: int = 0) -> CSR:
+    """SPD with condition number >= 1e6: 2-D Poisson congruence-rescaled.
+
+    ``D A D`` with ``D = diag(2^U)``, ``U ~ Uniform(-decades/2, decades/2)``:
+    SPD is preserved (congruence) and the Rayleigh bounds
+    ``lambda_max >= max_i (DAD)_ii``, ``lambda_min <= min_i (DAD)_ii`` give
+    ``cond >= (D_max/D_min)^2 ~ 2^(2*decades)`` realized spread -- ``>= 1e6``
+    for ``decades >= 10`` with wide margin at the default 14.
+
+    This is the workload where unpreconditioned stepped CG stalls for
+    thousands of iterations but diagonal (Jacobi/SPAI-0) preconditioning
+    undoes ``D`` exactly, restoring the stencil's conditioning -- the
+    target case for the GSE-packed preconditioners (DESIGN.md §10).
+    """
+    return diag_rescale(poisson2d(n), decades, seed)
 
 
 def mass_diagonal(n: int, seed: int = 0) -> CSR:

@@ -41,6 +41,66 @@ def test_table_all_zeros_input():
     assert t.shape == (8,)
 
 
+@pytest.mark.parametrize(
+    "vals",
+    [
+        np.array([1.0]),                        # one distinct exponent
+        np.array([1.0, 1.5, 2.0, 3.0]),         # two distinct exponents
+        np.full(100, 0.5),                      # below 1.0
+        np.array([0.25] * 7 + [8.0] * 3),       # far-apart pair
+        np.array([-4.0, 4.0, 4.0, 1.0]),        # signs mixed, three distinct
+    ],
+)
+def test_extract_jnp_matches_numpy_few_exponents(vals):
+    """Regression: with fewer than k-1 distinct exponents, ``lax.top_k``
+    used to return zero-count bins as table entries (arbitrary indices),
+    while the numpy reference pads with the max entry.  Compare unbiased
+    tables (numpy reads f64 exponents, jnp reads f32)."""
+    k = 8
+    t_np = gse.extract_shared_exponents(vals, k).astype(np.int64) - 1023
+    t_j = (
+        np.asarray(gse.extract_shared_exponents_jnp(jnp.asarray(vals, jnp.float32), k))
+        .astype(np.int64) - 127
+    )
+    np.testing.assert_array_equal(t_np, t_j)
+
+
+# ---------------------------------------------------------------------------
+# f32-source byte model respects frac_bits (no tail2 segment)
+# ---------------------------------------------------------------------------
+
+def test_f32_source_byte_model_rejects_tag3():
+    vals = _rand_clustered(512, seed=5).astype(np.float32)
+    p = gse.pack32(vals, 8)
+    n = int(np.prod(p.head.shape))
+    tbl = p.table.size * 4
+    assert p.width == p.m_h + 16  # no tail2 for frac_bits=23
+    assert p.nbytes(1) == 2 * n + tbl
+    assert p.nbytes(2) == 4 * n + tbl
+    assert p.bytes_touched(2) == p.nbytes(2)
+    # tag 3 would charge 8 B/value for a segment that does not exist;
+    # the byte model now rejects it exactly as the decode does.
+    with pytest.raises(ValueError):
+        p.nbytes(3)
+    with pytest.raises(ValueError):
+        p.bytes_touched(3)
+    with pytest.raises(ValueError):
+        gse.decode_jnp(p, 3)
+    with pytest.raises(ValueError):
+        gse.decode(p, 3)
+    # Tags 1/2 still decode (round-trip sanity).
+    dec = np.asarray(gse.decode_jnp(p, 2, jnp.float32))
+    rel = np.abs(dec - vals) / np.maximum(np.abs(vals), 1e-30)
+    assert np.median(rel) < 2 ** -22
+
+
+def test_f64_source_byte_model_unchanged():
+    p = gse.pack(_rand_clustered(256, seed=6), 8)
+    n = 256
+    tbl = p.table.size * 4
+    assert [p.nbytes(t) - tbl for t in (1, 2, 3)] == [2 * n, 4 * n, 8 * n]
+
+
 # ---------------------------------------------------------------------------
 # Round-trip precision ladder
 # ---------------------------------------------------------------------------

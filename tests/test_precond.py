@@ -1,0 +1,303 @@
+"""Preconditioned stepped solvers: GSE-packed preconditioners, PCG (fused +
+generic, bit-identical), right-preconditioned GMRES, iterative refinement,
+and the preconditioner byte accounting (DESIGN.md §10)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import precision as P
+from repro.sparse import generators as G
+from repro.sparse.csr import iteration_stream_bytes, pack_csr
+from repro.solvers import (
+    make_block_jacobi,
+    make_gse_operator,
+    make_jacobi,
+    make_precond_operator,
+    make_spai0,
+    solve_cg,
+    solve_gmres,
+    solve_ir,
+    solve_pcg,
+)
+from repro.sparse.spmv import spmv
+
+
+def _fast_params(**kw):
+    d = dict(t=30, l=30, m=15, rsd_limit=0.5, reldec_limit=0.45)
+    d.update(kw)
+    return P.MonitorParams(**d)
+
+
+def _b_for(a, seed=0):
+    rng = np.random.default_rng(seed)
+    x_true = rng.normal(size=a.shape[1])
+    return spmv(a, jnp.asarray(x_true)), x_true
+
+
+@pytest.fixture(scope="module")
+def illcond():
+    """Ill-conditioned SPD system + packed operand + rhs (shared setup)."""
+    a = G.ill_conditioned_spd(32, decades=8.0, seed=0)
+    g = pack_csr(a, k=8)
+    b, x_true = _b_for(a, seed=0)
+    return a, g, b, x_true
+
+
+# ---------------------------------------------------------------------------
+# Preconditioner construction + apply correctness
+# ---------------------------------------------------------------------------
+
+def test_jacobi_apply_matches_diag_inverse(illcond):
+    a, g, b, _ = illcond
+    m = make_jacobi(a, k=8)
+    rows = np.asarray(a.row_ids)
+    cols = np.asarray(a.col)
+    vals = np.asarray(a.val)
+    d = np.zeros(a.shape[0])
+    d[rows[rows == cols]] = vals[rows == cols]
+    r = jnp.asarray(np.random.default_rng(1).normal(size=a.shape[0]))
+    z3 = np.asarray(m.apply_at(r, 3))
+    np.testing.assert_allclose(z3, np.asarray(r) / d, rtol=1e-13)
+    # Traced-tag dispatch agrees with the static-tag branch.
+    for tag in (1, 2, 3):
+        np.testing.assert_array_equal(
+            np.asarray(m.apply(r, jnp.int32(tag))),
+            np.asarray(m.apply_at(r, tag)),
+        )
+    # make_precond_operator is the same switch.
+    op = make_precond_operator(m)
+    np.testing.assert_array_equal(
+        np.asarray(op(r, jnp.int32(2))), np.asarray(m.apply_at(r, 2))
+    )
+
+
+def test_precond_tag_precision_ladder(illcond):
+    """Lower tags apply a coarser M^{-1}: error vs the exact diagonal
+    inverse shrinks (weakly) as the tag steps up -- the one-copy/three-
+    precision property, now on the preconditioner stream."""
+    a, *_ = illcond
+    m = make_jacobi(a, k=8)
+    r = jnp.asarray(np.random.default_rng(2).normal(size=a.shape[0]))
+    exact = np.asarray(m.apply_at(r, 3))
+    errs = [
+        float(np.linalg.norm(np.asarray(m.apply_at(r, t)) - exact))
+        for t in (1, 2, 3)
+    ]
+    assert errs[0] >= errs[1] >= errs[2]
+    assert errs[1] > 0  # tag-2 is genuinely coarser than tag-3 here
+
+
+def test_spai0_entries():
+    a = G.random_spd(300, seed=3)
+    m = make_spai0(a, k=8)
+    rows = np.asarray(a.row_ids)
+    cols = np.asarray(a.col)
+    vals = np.asarray(a.val)
+    d = np.zeros(a.shape[0])
+    d[rows[rows == cols]] = vals[rows == cols]
+    row_sq = np.zeros(a.shape[0])
+    np.add.at(row_sq, rows, vals * vals)
+    r = jnp.ones(a.shape[0])
+    np.testing.assert_allclose(
+        np.asarray(m.apply_at(r, 3)), d / row_sq, rtol=1e-13
+    )
+
+
+def test_block_jacobi_inverts_blocks():
+    a = G.random_spd(257, seed=4)  # non-multiple of block: pad path
+    m = make_block_jacobi(a, block=4, k=8)
+    # Apply to unit vectors through the tag-3 path and compare against the
+    # dense block-diagonal solve.
+    n = a.shape[0]
+    dense = np.zeros((n, n))
+    dense[np.asarray(a.row_ids), np.asarray(a.col)] = np.asarray(a.val)
+    blocks = np.zeros_like(dense)
+    for s in range(0, n, 4):
+        e = min(s + 4, n)
+        blocks[s:e, s:e] = dense[s:e, s:e]
+    eye = jnp.eye(n)
+    applied = np.stack([np.asarray(m.apply_at(eye[i], 3)) for i in range(8)])
+    should = np.stack([np.linalg.solve(blocks, np.eye(n)[i])
+                       for i in range(8)])
+    np.testing.assert_allclose(applied, should, rtol=1e-9, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Stepped PCG: acceptance criteria
+# ---------------------------------------------------------------------------
+
+def test_illcond_condition_number_at_least_1e6(illcond):
+    a, *_ = illcond
+    n = a.shape[0]
+    dense = np.zeros((n, n))
+    dense[np.asarray(a.row_ids), np.asarray(a.col)] = np.asarray(a.val)
+    w = np.linalg.eigvalsh(dense)
+    assert w[0] > 0  # SPD
+    assert w[-1] / w[0] >= 1e6
+
+
+@pytest.mark.slow
+def test_pcg_jacobi_strictly_fewer_iters_than_cg(illcond):
+    """Acceptance: on the cond>=1e6 matrix, stepped PCG with the
+    GSE-packed Jacobi preconditioner converges to 1e-10 in strictly
+    fewer iterations than unpreconditioned stepped CG."""
+    a, g, b, _ = illcond
+    params = _fast_params()
+    res_cg = solve_cg(g, b, tol=1e-10, maxiter=30000, params=params)
+    m = make_jacobi(a, k=8)
+    res_pcg = solve_pcg(g, b, m, tol=1e-10, maxiter=30000, params=params)
+    assert bool(res_pcg.converged)
+    assert bool(res_cg.converged)
+    assert int(res_pcg.iters) < int(res_cg.iters)
+
+
+def test_pcg_fused_unfused_bit_identical(illcond):
+    a, g, b, _ = illcond
+    params = _fast_params()
+    m = make_jacobi(a, k=8)
+    fused = solve_pcg(g, b, m, tol=1e-10, maxiter=5000, params=params)
+    unfused = solve_pcg(make_gse_operator(g), b, m, tol=1e-10, maxiter=5000,
+                        params=params)
+    assert int(fused.iters) == int(unfused.iters)
+    assert float(fused.relres) == float(unfused.relres)
+    assert bool(jnp.all(fused.x == unfused.x))
+    np.testing.assert_array_equal(np.asarray(fused.switch_iters),
+                                  np.asarray(unfused.switch_iters))
+
+
+def test_pcg_block_jacobi_converges(illcond):
+    a, g, b, x_true = illcond
+    m = make_block_jacobi(a, block=4, k=8)
+    res = solve_pcg(g, b, m, tol=1e-10, maxiter=5000, params=_fast_params())
+    assert bool(res.converged)
+    assert int(res.iters) < 1000
+
+
+def test_pcg_spai0_converges_on_moderate_spd():
+    a = G.random_spd(800, seed=6)
+    g = pack_csr(a, k=8)
+    b, _ = _b_for(a, seed=6)
+    m = make_spai0(a, k=8)
+    res = solve_pcg(g, b, m, tol=1e-8, maxiter=4000, params=_fast_params())
+    assert bool(res.converged)
+
+
+def test_pcg_final_correction_drives_true_residual(illcond):
+    a, g, b, _ = illcond
+    m = make_jacobi(a, k=8)
+    res = solve_pcg(g, b, m, tol=1e-8, maxiter=20000, params=_fast_params(),
+                    final_correction=True)
+    op = make_gse_operator(g)
+    true_rel = float(
+        jnp.linalg.norm(b - op(res.x, jnp.int32(3))) / jnp.linalg.norm(b)
+    )
+    assert true_rel < 5e-8
+
+
+# ---------------------------------------------------------------------------
+# Right-preconditioned GMRES
+# ---------------------------------------------------------------------------
+
+def test_gmres_right_precond_converges_faster():
+    # Row-scaled convection-diffusion: right-Jacobi turns A M^{-1} into a
+    # similarity transform of A diag(A)^{-1}, restoring the stencil's
+    # spectrum; plain restarted GMRES stagnates on the raw row scaling.
+    from repro.sparse.csr import from_coo
+
+    rng = np.random.default_rng(11)
+    a0 = G.convection_diffusion_2d(16, beta=10.0)
+    d = np.exp2(rng.uniform(-4, 4, a0.shape[0]))
+    rows = np.asarray(a0.row_ids)
+    a = from_coo(rows, np.asarray(a0.col), np.asarray(a0.val) * d[rows],
+                 a0.shape)
+    g = pack_csr(a, k=8)
+    b, _ = _b_for(a, seed=7)
+    op = make_gse_operator(g)
+    m = make_jacobi(a, k=8)
+    params = _fast_params()
+    plain = solve_gmres(op, b, tol=1e-8, restart=60, maxiter=6000,
+                        params=params)
+    prec = solve_gmres(op, b, tol=1e-8, restart=60, maxiter=6000,
+                       params=params, precond=m)
+    assert bool(prec.converged)
+    assert int(prec.iters) < int(plain.iters) or not bool(plain.converged)
+    # Right preconditioning: the reported residual is the TRUE residual.
+    true_rel = float(
+        jnp.linalg.norm(b - op(prec.x, jnp.int32(3))) / jnp.linalg.norm(b)
+    )
+    assert true_rel < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Iterative refinement
+# ---------------------------------------------------------------------------
+
+def test_ir_converges_beyond_inner_tolerance(illcond):
+    a, g, b, x_true = illcond
+    m = make_jacobi(a, k=8)
+    res = solve_ir(g, b, tol=1e-11, max_outer=12, inner="cg",
+                   inner_tol=1e-4, inner_maxiter=4000,
+                   params=_fast_params(), precond=m)
+    assert res.converged
+    assert res.relres <= 1e-11          # TRUE residual, not recursive
+    assert res.outer_iters >= 2         # refinement actually refined
+    assert (np.diff(res.history) < 0).all()
+    np.testing.assert_allclose(np.asarray(res.x), x_true, rtol=1e-6,
+                               atol=1e-8)
+
+
+def test_ir_gmres_inner():
+    a = G.convection_diffusion_2d(16, beta=10.0)
+    g = pack_csr(a, k=8)
+    b, _ = _b_for(a, seed=8)
+    res = solve_ir(make_gse_operator(g), b, tol=1e-10, max_outer=10,
+                   inner="gmres", inner_tol=1e-6, inner_maxiter=4000,
+                   params=_fast_params(), restart=60)
+    assert res.converged
+    assert res.relres <= 1e-10
+
+
+def test_ir_rejects_unknown_inner(illcond):
+    _, g, b, _ = illcond
+    with pytest.raises(ValueError):
+        solve_ir(g, b, inner="bicgstab")
+
+
+# ---------------------------------------------------------------------------
+# Byte accounting for the preconditioner streams
+# ---------------------------------------------------------------------------
+
+def test_precond_bytes_ladder(illcond):
+    a, g, _, _ = illcond
+    n = a.shape[0]
+    m = make_jacobi(a, k=8)
+    tbl = m.packed.table.size * 4
+    assert m.bytes_touched(1) == 2 * n + tbl
+    assert m.bytes_touched(2) == 4 * n + tbl
+    assert m.bytes_touched(3) == 8 * n + tbl
+    mb = make_block_jacobi(a, block=4, k=8)
+    assert mb.bytes_touched(1) < mb.bytes_touched(2) < mb.bytes_touched(3)
+    # iteration_stream_bytes sums operator + preconditioner at one tag.
+    for t in (1, 2, 3):
+        assert iteration_stream_bytes(g, t, m) == (
+            g.bytes_touched(t) + m.bytes_touched(t)
+        )
+        assert iteration_stream_bytes(g, t) == g.bytes_touched(t)
+
+
+def test_fig89_charges_precond_bytes_at_run_tags(illcond):
+    from benchmarks.fig89_solver_time import _gse_run_bytes
+
+    a, g, _, _ = illcond
+    m = make_jacobi(a, k=8)
+    # 10 iters at tag 1, 5 at tag 2, 5 at tag 3 (switches at 10 and 15).
+    got = _gse_run_bytes(g, 20, np.array([10, 15]), precond=m)
+    want = (10 * iteration_stream_bytes(g, 1, m)
+            + 5 * iteration_stream_bytes(g, 2, m)
+            + 5 * iteration_stream_bytes(g, 3, m))
+    assert got == want
+    # Without a preconditioner the operator-only charge is preserved.
+    assert _gse_run_bytes(g, 20, np.array([10, 15])) == (
+        10 * g.bytes_touched(1) + 5 * g.bytes_touched(2)
+        + 5 * g.bytes_touched(3)
+    )

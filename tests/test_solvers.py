@@ -125,6 +125,52 @@ def test_switch_iters_recorded_in_order():
 
 
 # ---------------------------------------------------------------------------
+# final_correction resume budget (regression: maxiter exhausted exactly at
+# tolerance used to hand the tag-3 resume a non-positive iteration budget)
+# ---------------------------------------------------------------------------
+
+def test_cg_final_correction_resumes_when_maxiter_exhausted_at_tol():
+    a = G.random_spd(600, seed=5)
+    g = pack_csr(a, k=8)
+    b, _ = _b_for(a, seed=5)
+    op = make_gse_operator(g)
+    # Pin the monitor to tag 1: the recursive residual converges against
+    # the perturbed operator while the TRUE residual stalls above tol.
+    params = _fast_params(max_tag=1)
+    res1 = solve_cg(op, b, tol=1e-8, maxiter=4000, params=params)
+    assert bool(res1.converged)
+    true_rel = float(
+        jnp.linalg.norm(b - op(res1.x, jnp.int32(3))) / jnp.linalg.norm(b)
+    )
+    assert true_rel > 1e-8  # premise: correction is actually needed
+    n = int(res1.iters)
+    # Re-run with maxiter == iters: the first solve exhausts its budget
+    # exactly at tolerance; the resume must still get >= 1 iteration.
+    res2 = solve_cg(op, b, tol=1e-8, maxiter=n, params=params,
+                    final_correction=True)
+    assert int(res2.iters) > n
+
+
+def test_gmres_final_correction_resumes_when_maxiter_exhausted_at_tol():
+    a = G.diag_rescale(G.convection_diffusion_2d(12, beta=5.0), 4.0, 6)
+    g = pack_csr(a, k=8)
+    b, _ = _b_for(a, seed=6)
+    op = make_gse_operator(g)
+    params = _fast_params(max_tag=1)
+    res1 = solve_gmres(op, b, tol=1e-8, restart=60, maxiter=4000,
+                       params=params)
+    assert bool(res1.converged)
+    true_rel = float(
+        jnp.linalg.norm(b - op(res1.x, jnp.int32(3))) / jnp.linalg.norm(b)
+    )
+    assert true_rel > 1e-8
+    n = int(res1.iters)
+    res2 = solve_gmres(op, b, tol=1e-8, restart=60, maxiter=n, params=params,
+                       final_correction=True)
+    assert int(res2.iters) > n
+
+
+# ---------------------------------------------------------------------------
 # Paper Table III/IV phenomenology: FP16 overflows, BF16 stalls, GSE ok
 # ---------------------------------------------------------------------------
 

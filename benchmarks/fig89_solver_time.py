@@ -9,6 +9,13 @@ the stepped GSE runs charge every iteration the bytes of the precision
 tag it actually ran at (split by the recorded switch iterations) instead
 of a constant per-format stream estimate.  The CG "gse" row exercises the
 fused iteration path (``solve_cg`` with the ``GSECSR`` operand).
+
+``nrhs > 1`` adds batched multi-RHS rows (``solve_cg_batched`` over the
+same shared GSECSR): the byte model charges matrix segment bytes ONCE per
+iteration and vector bytes per active column
+(``iteration_stream_bytes(..., nrhs=...)``), so bytes/iteration for
+nrhs=4 sits well under 4x -- and, on the matrices whose nnz/row carries
+the stream, under 2x -- of the nrhs=1 figure (DESIGN.md §11).
 """
 from __future__ import annotations
 
@@ -23,11 +30,13 @@ from repro.core.precision import MonitorParams
 from repro.sparse import generators as G
 from repro.sparse.csr import iteration_stream_bytes, pack_csr
 from repro.solvers import (
+    batched_run_bytes,
     make_fixed_operator,
     make_gse_operator,
     make_jacobi,
     make_spai0,
     solve_cg,
+    solve_cg_batched,
     solve_gmres,
     solve_pcg,
 )
@@ -64,7 +73,46 @@ def _gse_run_bytes(g, iters, switch_iters, precond=None):
             + n3 * iteration_stream_bytes(g, 3, precond))
 
 
-def run(precond: str = "none") -> dict:
+def batched_case(a, g, nrhs: int, params=_PARAMS, tol=1e-6,
+                 maxiter=1500, seed=0) -> dict:
+    """One batched multi-RHS stepped-CG measurement over a shared GSECSR.
+
+    Returns wall time, per-column iters/relres/switches, the batched
+    byte model (matrix bytes once per iteration), and the per-iteration
+    byte ratio vs the nrhs=1 figure -- the quantity the acceptance bar
+    bounds (< 2x for nrhs=4 on stream-dominated matrices).
+    """
+    from repro.sparse.spmv import spmv
+
+    rng = np.random.default_rng(seed)
+    b = jnp.stack(
+        [jnp.asarray(np.asarray(spmv(a, jnp.asarray(
+            rng.normal(size=a.shape[1]))))) for _ in range(nrhs)],
+        axis=1,
+    )
+    kw = dict(tol=tol, maxiter=maxiter, params=params)
+    res, t = _timed(solve_cg_batched, g, b, **kw)
+    iters = np.asarray(res.iters)
+    run_bytes = batched_run_bytes(g, res.iters, res.switch_iters)
+    # Per-iteration figures at the dominant (tag-1) stream for the
+    # headline ratio; the trajectory-split totals are reported alongside.
+    per_it = {m: iteration_stream_bytes(g, 1, nrhs=m) for m in (1, nrhs)}
+    return dict(
+        t=t,
+        nrhs=nrhs,
+        iters=iters.tolist(),
+        relres=np.asarray(res.relres).tolist(),
+        converged=np.asarray(res.converged).tolist(),
+        switch_iters=np.asarray(res.switch_iters).tolist(),
+        run_bytes=int(run_bytes),
+        bytes_per_iter_nrhs=int(per_it[nrhs]),
+        bytes_per_iter_1=int(per_it[1]),
+        per_iter_ratio=per_it[nrhs] / per_it[1],
+        naive_nx_bytes=int(per_it[1]) * int(iters.sum()),
+    )
+
+
+def run(precond: str = "none", nrhs: int = 1) -> dict:
     out = {}
     cases = []
     for i, (name, a) in enumerate(list(G.cg_suite(small=True).items())[:4]):
@@ -152,6 +200,18 @@ def run(precond: str = "none") -> dict:
             emit(f"fig89/{kind}/{name}/{label}", r["t"] * 1e6,
                  f"iters={r['iters']} speedup={base / max(r['t'],1e-12):.2f}"
                  f" modeled_speedup={modeled:.2f} B/nnz/iter={per_it:.2f}")
+        if nrhs > 1 and kind == "cg":
+            # Batched multi-RHS row: matrix bytes once per iteration,
+            # vector bytes per active column (DESIGN.md §11).
+            bt = batched_case(a, g, nrhs, params=_PARAMS,
+                              maxiter=kw["maxiter"], seed=seed)
+            emit(f"fig89/cg/{name}/gse_batch{nrhs}", bt["t"] * 1e6,
+                 f"iters={bt['iters']} "
+                 f"B/iter(nrhs={nrhs})={bt['bytes_per_iter_nrhs']} "
+                 f"B/iter(1)={bt['bytes_per_iter_1']} "
+                 f"ratio={bt['per_iter_ratio']:.2f} "
+                 f"run_bytes={bt['run_bytes']}")
+            rows["gse_batch"] = bt
         out[(kind, name)] = rows
     return out
 

@@ -17,6 +17,13 @@ at the repo root -- the perf-trajectory artifact CI regresses against.
 ``--precond {none,jacobi,spai0}`` adds stepped preconditioned rows to
 fig89 (GSE-packed preconditioner riding the operator's tag schedule;
 preconditioner bytes charged at the per-iteration tag actually run).
+
+``--nrhs N`` (N > 1) adds batched multi-RHS stepped-CG rows to fig89
+(matrix bytes charged once per iteration, vector bytes per active
+column); with ``--quick`` it instead runs a trimmed batched solve and
+writes ``BENCH_batch.json`` -- per-request iterations/residual plus the
+bytes/iteration ratio vs nrhs=1 the acceptance bar bounds (< 2x at
+nrhs=4 on the stream-dominated smoke matrix).
 """
 from __future__ import annotations
 
@@ -48,6 +55,44 @@ def run_quick(out_path: pathlib.Path | None = None) -> dict:
     return payload
 
 
+def run_quick_batch(nrhs: int, out_path: pathlib.Path | None = None) -> dict:
+    """CI batched smoke: one multi-RHS stepped CG -> BENCH_batch.json.
+
+    Runs ``solve_cg_batched`` over ``nrhs`` right-hand sides sharing one
+    packed random-SPD operand (nnz/row high enough that the matrix
+    segments dominate the stream) and records the byte-model headline:
+    bytes/iteration at ``nrhs`` vs the unchanged nrhs=1 figure.
+    """
+    from benchmarks import fig89_solver_time
+    from repro.core.precision import MonitorParams
+    from repro.sparse import generators as G
+    from repro.sparse.csr import pack_csr
+
+    a = G.random_spd(600, seed=5)
+    g = pack_csr(a, k=8)
+    params = MonitorParams(t=40, l=60, m=30, rsd_limit=0.5, reldec_limit=0.45)
+    case = fig89_solver_time.batched_case(a, g, nrhs, params=params,
+                                          maxiter=1500, seed=5)
+    payload = {
+        "bench": "batched_multirhs_quick",
+        "schema": "batched stepped CG over random_spd_600: per-column "
+                  "iters/relres/switches + bytes/iteration vs nrhs=1",
+        "matrix": "random_spd_600",
+        "results": case,
+    }
+    path = out_path or (_REPO_ROOT / "BENCH_batch.json")
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {path}", file=sys.stderr)
+    if not all(case["converged"]):
+        raise SystemExit("batched smoke: not all columns converged")
+    if nrhs >= 2 and case["per_iter_ratio"] >= 2.0:
+        raise SystemExit(
+            f"batched smoke: bytes/iteration ratio {case['per_iter_ratio']:.2f} "
+            f"at nrhs={nrhs} not < 2x the nrhs=1 figure"
+        )
+    return payload
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -61,13 +106,23 @@ def main() -> None:
                     help="add stepped preconditioned solver rows to fig89 "
                          "(GSE-packed preconditioner riding the tag "
                          "schedule; includes the ill-conditioned CG case)")
+    ap.add_argument("--nrhs", type=int, default=1,
+                    help="batch width for the multi-RHS rows: > 1 adds "
+                         "batched stepped-CG rows to fig89, or (with "
+                         "--quick) runs the batched smoke and writes "
+                         "BENCH_batch.json")
     args = ap.parse_args()
     if args.quick and args.only:
         ap.error("--quick and --only are mutually exclusive")
+    if args.nrhs < 1:
+        ap.error("--nrhs must be >= 1")
 
     print("name,us_per_call,derived")
     if args.quick:
-        run_quick()
+        if args.nrhs > 1:  # batched smoke only; the SpMV sweep is the
+            run_quick_batch(args.nrhs)  # plain --quick job's work
+        else:
+            run_quick()
         return
     want = set(args.only.split(",")) if args.only else None
 
@@ -82,7 +137,8 @@ def main() -> None:
         "fig45": fig45_k_sweep.run,
         "fig6": fig6_spmv_formats.run,
         "tab34": tab34_solver_convergence.run,
-        "fig89": partial(fig89_solver_time.run, precond=args.precond),
+        "fig89": partial(fig89_solver_time.run, precond=args.precond,
+                         nrhs=args.nrhs),
         "lm": lm_gse_serving.run,
         "roofline": roofline.run,
     }

@@ -1,0 +1,147 @@
+"""Pallas TPU kernel: blocked-ELL SpMM with fused GSE-SEM decode.
+
+Multi-RHS extension of ``kernels/gse_spmv.py`` (DESIGN.md §11): the paper's
+whole case is that SpMV is memory-bound, so the GSE-SEM format wins by
+streaming fewer *matrix* bytes per iteration.  With ``nrhs`` right-hand
+sides the same packed segments are decoded ONCE per tile and amortized
+across all columns of a dense (n, nrhs) operand -- one streaming pass over
+the head/tail segments feeds every RHS, multiplying the byte win by the
+batch width.
+
+Tag specialization is identical to the SpMV kernel: each tag gets its own
+kernel body whose ``pallas_call`` operand list contains ONLY the segments
+that tag reads (tail arrays for tags that skip them never enter the jaxpr,
+never get a BlockSpec, never get DMA'd):
+
+    tag 1   scales, colpak, head, x                   (6  B/nnz streamed)
+    tag 2   scales, colpak, head, tail1, x            (8  B/nnz)
+    tag 3   scales, colpak, head, tail1, tail2, x     (12 B/nnz)
+
+Output layout (DESIGN.md §2.3 generalized): each RHS column owns its own
+lane-aligned (BM, LANE) accumulator strip inside a (BM, nrhs*LANE) VMEM
+tile -- a (BM, BL) product tile is reduced only across its BL/128 sublane
+groups per column, so every store fills all 128 lanes.  The reduction
+epilogue collapses the LANE partials per (row, column) to the final
+(M, nrhs) result.
+
+The dense operand rides the kernel as a (nrhs, n) VMEM-pinned block (the
+transpose keeps each column's gather a contiguous minor-dim read); padded
+matrix slots carry col=0, head=0 -> mantissa 0 -> contribute 0 to every
+column.
+
+Grid: (M/BM, L/BL); the L axis accumulates sequentially into the output
+rows, exactly like the SpMV kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.gse_spmv import LANE, decode_tile, spmv_operand_names
+
+__all__ = ["gse_spmm_pallas", "gse_spmm_call", "spmm_operand_names", "LANE"]
+
+# The multi-RHS kernel streams the SAME matrix segment list as the SpMV,
+# whatever nrhs is -- one name owns the layout (asserted in tests).
+spmm_operand_names = spmv_operand_names
+
+
+def _accumulate(scales_ref, colpak_ref, head_ref, tail1_ref, tail2_ref,
+                x_ref, out_ref, *, ei_bit: int, tag: int, k: int, nrhs: int):
+    """Shared tile math; tail refs are ``None`` for the tags that skip them.
+
+    The decode runs ONCE per (BM, BL) tile (``decode_tile``, shared with
+    the SpMV kernel body); the per-column gathers and lane-group
+    reductions reuse the same decoded ``vals`` -- the in-VMEM twin of the
+    byte model's "matrix bytes once, vector bytes per column".
+    """
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    vals, col = decode_tile(scales_ref, colpak_ref, head_ref, tail1_ref,
+                            tail2_ref, ei_bit=ei_bit, tag=tag, k=k)
+
+    bm, bl = vals.shape
+    flat_col = col.reshape(-1)
+    for j in range(nrhs):                 # static unroll over RHS columns
+        xj = x_ref[j, :]                  # (N,) in VMEM
+        xg = xj[flat_col].reshape(col.shape)
+        prod = vals * xg                  # (BM, BL) -- decoded vals reused
+        out_ref[:, j * LANE:(j + 1) * LANE] += jnp.sum(
+            prod.reshape(bm, bl // LANE, LANE), axis=1
+        )
+
+
+def _spmm_body_tag1(scales_ref, colpak_ref, head_ref, x_ref, out_ref, *,
+                    ei_bit: int, k: int, nrhs: int):
+    _accumulate(scales_ref, colpak_ref, head_ref, None, None, x_ref, out_ref,
+                ei_bit=ei_bit, tag=1, k=k, nrhs=nrhs)
+
+
+def _spmm_body_tag2(scales_ref, colpak_ref, head_ref, tail1_ref, x_ref,
+                    out_ref, *, ei_bit: int, k: int, nrhs: int):
+    _accumulate(scales_ref, colpak_ref, head_ref, tail1_ref, None, x_ref,
+                out_ref, ei_bit=ei_bit, tag=2, k=k, nrhs=nrhs)
+
+
+def _spmm_body_tag3(scales_ref, colpak_ref, head_ref, tail1_ref, tail2_ref,
+                    x_ref, out_ref, *, ei_bit: int, k: int, nrhs: int):
+    _accumulate(scales_ref, colpak_ref, head_ref, tail1_ref, tail2_ref, x_ref,
+                out_ref, ei_bit=ei_bit, tag=3, k=k, nrhs=nrhs)
+
+
+_BODIES = {1: _spmm_body_tag1, 2: _spmm_body_tag2, 3: _spmm_body_tag3}
+
+
+def gse_spmm_call(colpak, head, tail1, tail2, x, scales, *, ei_bit: int,
+                  tag: int, blocks=(8, 128), interpret: bool = True):
+    """Unjitted tag-specialized SpMM (exported for jaxpr inspection).
+
+    colpak/head (+tails the tag reads): (M, L); x: (N, nrhs) dense
+    right-hand sides; scales: (1, k).  ``tail1``/``tail2`` may be ``None``
+    when ``tag`` does not read them; arrays passed for unread segments are
+    ignored (not streamed).  Returns Y = A @ X as a (M, nrhs) f32 array.
+    """
+    m, L = colpak.shape
+    bm, bl = blocks
+    assert m % bm == 0 and L % bl == 0, (colpak.shape, blocks)
+    assert bl % LANE == 0, f"BL must be lane-aligned (multiple of {LANE})"
+    assert x.ndim == 2, f"x must be (n, nrhs); got {x.shape}"
+    n, nrhs = x.shape
+    nk = scales.shape[1]
+    grid = (m // bm, L // bl)
+    tile = pl.BlockSpec((bm, bl), lambda i, l: (i, l))
+
+    operands = [scales, colpak, head]
+    in_specs = [pl.BlockSpec((1, nk), lambda i, l: (0, 0)), tile, tile]
+    if tag >= 2:
+        assert tail1 is not None, "tag>=2 reads tail1"
+        operands.append(tail1)
+        in_specs.append(tile)
+    if tag == 3:
+        assert tail2 is not None, "tag==3 reads tail2"
+        operands.append(tail2)
+        in_specs.append(tile)
+    operands.append(x.T.reshape(nrhs, n))  # columns contiguous for gathers
+    in_specs.append(pl.BlockSpec((nrhs, n), lambda i, l: (0, 0)))  # pinned
+
+    acc = pl.pallas_call(
+        functools.partial(_BODIES[tag], ei_bit=ei_bit, k=nk, nrhs=nrhs),
+        out_shape=jax.ShapeDtypeStruct((m, nrhs * LANE), jnp.float32),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, nrhs * LANE), lambda i, l: (i, 0)),
+        interpret=interpret,
+    )(*operands)
+    # Reduction epilogue: collapse each column's LANE per-row partials.
+    return jnp.sum(acc.reshape(m, nrhs, LANE), axis=2)
+
+
+gse_spmm_pallas = functools.partial(
+    jax.jit,
+    static_argnames=("ei_bit", "tag", "blocks", "interpret"),
+)(gse_spmm_call)

@@ -44,7 +44,8 @@ from jax.experimental import pallas as pl
 
 from repro.kernels.gse_decode import _select_scale
 
-__all__ = ["gse_spmv_pallas", "gse_spmv_call", "spmv_operand_names", "LANE"]
+__all__ = ["gse_spmv_pallas", "gse_spmv_call", "spmv_operand_names",
+           "decode_tile", "LANE"]
 
 LANE = 128  # TPU vector-lane count; output accumulator minor dim
 
@@ -56,13 +57,16 @@ def spmv_operand_names(tag: int) -> tuple:
     return base + tails + ("x",)
 
 
-def _accumulate(scales_ref, colpak_ref, head_ref, tail1_ref, tail2_ref,
-                x_ref, out_ref, *, ei_bit: int, tag: int, k: int):
-    """Shared tile math; tail refs are ``None`` for the tags that skip them."""
-    @pl.when(pl.program_id(1) == 0)
-    def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
+def decode_tile(scales_ref, colpak_ref, head_ref, tail1_ref, tail2_ref, *,
+                ei_bit: int, tag: int, k: int):
+    """Decode one (BM, BL) tile of GSE-SEM segments -> (vals, col).
 
+    The single in-kernel owner of the bit-level layout (expIdx in
+    colpak's top ``ei_bit`` bits, 15-bit head mantissa, tail splices):
+    the SpMV and SpMM kernel bodies both call this, so the decode cannot
+    drift between the single- and multi-RHS pipelines.  Tail refs are
+    ``None`` for the tags that skip them.
+    """
     cp = colpak_ref[...].astype(jnp.uint32)
     shift = 32 - ei_bit
     exp_idx = (cp >> shift).astype(jnp.int32)
@@ -76,6 +80,18 @@ def _accumulate(scales_ref, colpak_ref, head_ref, tail1_ref, tail2_ref,
     if tag == 3:
         mant = mant * jnp.float32(2.0**32) + tail2_ref[...].astype(jnp.float32)
     vals = sgn * mant * _select_scale(exp_idx, scales_ref, k)
+    return vals, col
+
+
+def _accumulate(scales_ref, colpak_ref, head_ref, tail1_ref, tail2_ref,
+                x_ref, out_ref, *, ei_bit: int, tag: int, k: int):
+    """Shared tile math; tail refs are ``None`` for the tags that skip them."""
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    vals, col = decode_tile(scales_ref, colpak_ref, head_ref, tail1_ref,
+                            tail2_ref, ei_bit=ei_bit, tag=tag, k=k)
 
     xv = x_ref[0, :]                      # (N,) in VMEM
     xg = xv[col.reshape(-1)].reshape(col.shape)

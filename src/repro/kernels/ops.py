@@ -15,11 +15,12 @@ from repro.core.gse import GSEPacked
 from repro.kernels import ref
 from repro.kernels.gse_decode import decode_pallas
 from repro.kernels.gse_matmul import gse_matmul_pallas
+from repro.kernels.gse_spmm import gse_spmm_pallas
 from repro.kernels.gse_spmv import gse_spmv_pallas
 from repro.sparse.csr import GSECSR
 
-__all__ = ["gse_decode", "gse_matmul", "gse_spmv_ell", "ell_pack_gsecsr",
-           "spmv_kernel_for"]
+__all__ = ["gse_decode", "gse_matmul", "gse_spmv_ell", "gse_spmm_ell",
+           "ell_pack_gsecsr", "spmv_kernel_for", "spmm_kernel_for"]
 
 
 def _interpret_default() -> bool:
@@ -134,6 +135,68 @@ def spmv_kernel_for(tag: int, ei_bit: int, blocks=(8, 128),
     else:
         raise ValueError(f"tag must be 1, 2 or 3, got {tag}")
     return call
+
+
+@functools.lru_cache(maxsize=None)
+def spmm_kernel_for(tag: int, ei_bit: int, blocks=(8, 128),
+                    interpret: bool = True):
+    """Tag-specialized SpMM dispatch: one cached ``pallas_call`` wrapper per
+    ``(tag, ei_bit, blocks)`` -- the multi-RHS twin of ``spmv_kernel_for``
+    (DESIGN.md §11).
+
+    The returned callable takes exactly the operands ``tag`` streams --
+    ``(colpak, head, x, scales)`` for tag 1, ``+ tail1`` for tag 2,
+    ``+ tail2`` for tag 3 -- with ``x`` a dense (n, nrhs) block.  The
+    matrix segments are streamed ONCE per call however many right-hand
+    sides ride along; the tag-1/-2 kernels provably never touch the tail
+    arrays.
+    """
+    if tag == 1:
+        def call(colpak, head, x, scales):
+            return gse_spmm_pallas(colpak, head, None, None, x, scales,
+                                   ei_bit=ei_bit, tag=1, blocks=blocks,
+                                   interpret=interpret)
+    elif tag == 2:
+        def call(colpak, head, tail1, x, scales):
+            return gse_spmm_pallas(colpak, head, tail1, None, x, scales,
+                                   ei_bit=ei_bit, tag=2, blocks=blocks,
+                                   interpret=interpret)
+    elif tag == 3:
+        def call(colpak, head, tail1, tail2, x, scales):
+            return gse_spmm_pallas(colpak, head, tail1, tail2, x, scales,
+                                   ei_bit=ei_bit, tag=3, blocks=blocks,
+                                   interpret=interpret)
+    else:
+        raise ValueError(f"tag must be 1, 2 or 3, got {tag}")
+    return call
+
+
+def gse_spmm_ell(ell, table, x: jnp.ndarray, ei_bit: int, tag: int = 1,
+                 blocks=(8, 128), interpret: bool | None = None):
+    """Y = A @ X from ELL-packed GSE-SEM segments (Pallas SpMM kernel).
+
+    ``x`` is a dense (n, nrhs) right-hand-side block.  Dispatches to the
+    tag-specialized kernel (``spmm_kernel_for``): only the segment arrays
+    ``tag`` reads are padded, passed, and streamed -- and they are
+    streamed ONCE for all ``nrhs`` columns, so the modeled per-iteration
+    traffic is ``iteration_stream_bytes(a, tag, nrhs=nrhs)`` instead of
+    ``nrhs`` full SpMV passes (DESIGN.md §11).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    colpak, head, t1, t2 = ell
+    bm, bl = blocks
+    m0 = colpak.shape[0]
+    bits_used = {1: 15, 2: 31, 3: 63}[tag]
+    scales = ref.make_scales(table, bits_used).reshape(1, -1)
+    kernel = spmm_kernel_for(tag, ei_bit, blocks, interpret)
+    operands = [_pad2(colpak, bm, bl), _pad2(head, bm, bl)]
+    if tag >= 2:
+        operands.append(_pad2(t1, bm, bl))
+    if tag == 3:
+        operands.append(_pad2(t2, bm, bl))
+    out = kernel(*operands, x, scales)
+    return out[:m0]
 
 
 def gse_spmv_ell(ell, table, x: jnp.ndarray, ei_bit: int, tag: int = 1,

@@ -1,0 +1,306 @@
+"""Request-batching solve service over registered GSE-SEM operators.
+
+The ROADMAP's serving-shaped front-end for the linear-solver path
+(DESIGN.md §11): heavy traffic means MANY simultaneous solve requests
+against a few shared operators.  The service packs each registered
+matrix (and optional preconditioner) ONCE, buckets incoming requests by
+(operator, tolerance), pads each bucket to a fixed batch-slot width, and
+runs the batched stepped solver -- one streaming pass over the packed
+matrix segments feeds every request in a slot, so the dominant matrix
+traffic is charged once per iteration however many requests ride along
+(``csr.iteration_stream_bytes(..., nrhs=...)``).
+
+Per-request reporting: iterations, final relative residual, the
+per-column tag-switch schedule, and the request's modeled byte share of
+its batch (matrix bytes split evenly across the iterations' active
+columns, vector bytes owned per column).  Padding columns are all-zero
+right-hand sides: ``||b|| = 0`` makes them converge at iteration 0, so
+they never stream vector bytes and never perturb real requests (the
+batched solver's columns are independent by construction).
+
+Usage (demo):
+  PYTHONPATH=src python -m repro.launch.solver_serve --requests 6 --slots 4
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import precision as P
+from repro.sparse.csr import CSR, iteration_stream_bytes, pack_csr
+from repro.solvers.batched import (
+    column_tags_at,
+    solve_cg_batched,
+    solve_pcg_batched,
+)
+from repro.solvers.precond import make_jacobi, make_spai0
+
+__all__ = ["SolveRequest", "SolveReport", "SolverService"]
+
+_PRECOND_FACTORY = {"jacobi": make_jacobi, "spai0": make_spai0}
+
+
+@dataclasses.dataclass
+class SolveRequest:
+    id: int
+    handle: str
+    b: jnp.ndarray
+    tol: float
+    x0: Optional[jnp.ndarray] = None
+
+
+@dataclasses.dataclass
+class SolveReport:
+    id: int
+    handle: str
+    iters: int
+    relres: float
+    converged: bool
+    tag: int
+    switch_iters: np.ndarray  # (2,)
+    est_bytes: int            # modeled byte share of the batch
+    batch_size: int           # real requests in the slot it ran in
+
+
+@dataclasses.dataclass
+class _Operator:
+    name: str
+    csr: CSR
+    gse: "object"     # GSECSR, packed once at registration
+    precond: object   # precond object or None
+
+
+class SolverService:
+    """Minimal request-batching front-end for the batched stepped solvers.
+
+    ``slots`` is the batch width every bucket is padded to (the serving
+    analogue of a fixed decode batch): requests against the same
+    (operator, tol) bucket share one batched solve.  ``flush()`` drains
+    all pending requests and returns per-request ``SolveReport``s.
+    """
+
+    def __init__(self, slots: int = 4,
+                 params: P.MonitorParams | None = None,
+                 maxiter: int = 5000):
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1, got {slots}")
+        self.slots = slots
+        self.params = params or P.MonitorParams.for_cg()
+        self.maxiter = maxiter
+        self._ops: Dict[str, _Operator] = {}
+        self._pending: List[SolveRequest] = []
+        self._ids = itertools.count()
+        self._solutions: Dict[int, jnp.ndarray] = {}
+        self.stats = dict(batches=0, requests=0, padded_cols=0,
+                          modeled_bytes=0)
+
+    # -- registration ------------------------------------------------------
+
+    def register(self, name: str, a: CSR, k: int = 8,
+                 precond: str | object | None = None) -> str:
+        """Pack ``a`` (and optionally a preconditioner) once; returns the
+        handle requests are submitted against.  ``precond`` is ``None``,
+        ``"jacobi"``/``"spai0"``, or a ready :mod:`repro.solvers.precond`
+        object (Carson-Khan-style setup reuse: one packed preconditioner
+        serves every request against the handle)."""
+        if name in self._ops:
+            raise ValueError(f"handle {name!r} already registered")
+        if isinstance(precond, str):
+            try:
+                precond = _PRECOND_FACTORY[precond](a, k=k)
+            except KeyError:
+                raise ValueError(
+                    f"unknown preconditioner {precond!r}; expected one of "
+                    f"{sorted(_PRECOND_FACTORY)}"
+                ) from None
+        self._ops[name] = _Operator(
+            name=name, csr=a, gse=pack_csr(a, k=k), precond=precond
+        )
+        return name
+
+    # -- request intake ----------------------------------------------------
+
+    def submit(self, handle: str, b, tol: float = 1e-8, x0=None) -> int:
+        """Queue one solve request; returns its request id."""
+        op = self._ops.get(handle)
+        if op is None:
+            raise KeyError(f"unknown handle {handle!r}")
+        b = jnp.asarray(b)
+        if b.ndim == 2 and b.shape[1] == 1:
+            b = b[:, 0]
+        if b.ndim != 1 or b.shape[0] != op.csr.shape[0]:
+            raise ValueError(
+                f"b must be ({op.csr.shape[0]},) or ({op.csr.shape[0]}, 1) "
+                f"for handle {handle!r}; got {tuple(b.shape)}"
+            )
+        if x0 is not None:
+            x0 = jnp.asarray(x0)
+            if x0.ndim == 2 and x0.shape[1] == 1:
+                x0 = x0[:, 0]  # same (n, 1) normalization as b
+            if x0.shape != b.shape:
+                raise ValueError(
+                    f"x0 shape {tuple(x0.shape)} != b shape {tuple(b.shape)}"
+                )
+        rid = next(self._ids)
+        self._pending.append(SolveRequest(rid, handle, b, float(tol), x0))
+        return rid
+
+    # -- batch execution ---------------------------------------------------
+
+    def flush(self) -> Dict[int, SolveReport]:
+        """Drain pending requests: bucket by (handle, tol), pad to the slot
+        width, run the batched stepped solver, report per request.
+
+        Solutions are retained only until the NEXT flush (claim them with
+        :meth:`solution`), so a long-running service that only reads the
+        reports does not accumulate solved vectors without bound."""
+        self._solutions.clear()
+        buckets: Dict[tuple, List[SolveRequest]] = {}
+        for req in self._pending:
+            buckets.setdefault((req.handle, req.tol), []).append(req)
+        self._pending = []
+
+        reports: Dict[int, SolveReport] = {}
+        for (handle, tol), reqs in buckets.items():
+            op = self._ops[handle]
+            for i in range(0, len(reqs), self.slots):
+                chunk = reqs[i:i + self.slots]
+                reports.update(self._run_slot(op, tol, chunk))
+        return reports
+
+    def _run_slot(self, op: _Operator, tol: float,
+                  reqs: List[SolveRequest]) -> Dict[int, SolveReport]:
+        n = op.csr.shape[0]
+        nrhs = self.slots
+        pad = nrhs - len(reqs)
+        zero = jnp.zeros((n,), reqs[0].b.dtype)
+        cols = [r.b for r in reqs] + [zero] * pad
+        b = jnp.stack(cols, axis=1)
+        x0 = None
+        if any(r.x0 is not None for r in reqs):
+            x0 = jnp.stack(
+                [r.x0 if r.x0 is not None else zero for r in reqs]
+                + [zero] * pad,
+                axis=1,
+            )
+        if op.precond is not None:
+            res = solve_pcg_batched(op.gse, b, op.precond, x0=x0, tol=tol,
+                                    maxiter=self.maxiter, params=self.params)
+        else:
+            res = solve_cg_batched(op.gse, b, x0=x0, tol=tol,
+                                   maxiter=self.maxiter, params=self.params)
+
+        iters = np.asarray(res.iters)
+        sw = np.asarray(res.switch_iters)
+        shares, total_bytes = self._byte_shares(op, iters, sw)
+        self.stats["batches"] += 1
+        self.stats["requests"] += len(reqs)
+        self.stats["padded_cols"] += pad
+        self.stats["modeled_bytes"] += total_bytes
+
+        out = {}
+        for j, req in enumerate(reqs):
+            self._solutions[req.id] = res.x[:, j]
+            out[req.id] = SolveReport(
+                id=req.id,
+                handle=op.name,
+                iters=int(iters[j]),
+                relres=float(res.relres[j]),
+                converged=bool(res.converged[j]),
+                tag=int(res.tag[j]),
+                switch_iters=sw[j],
+                est_bytes=int(shares[j]),
+                batch_size=len(reqs),
+            )
+        return out
+
+    def solution(self, request_id: int) -> jnp.ndarray:
+        """The solved ``x`` for a flushed request (pop to free memory)."""
+        try:
+            return self._solutions.pop(request_id)
+        except KeyError:
+            raise KeyError(
+                f"no flushed solution for request {request_id!r}"
+            ) from None
+
+    def _byte_shares(self, op: _Operator, iters, sw):
+        """One walk of the per-iteration byte model: returns the per-column
+        shares AND their sum, which is exactly ``batched_run_bytes`` (each
+        iteration adds ``iteration_stream_bytes(..., nrhs=n_active)``
+        split evenly among the columns sharing the streaming pass)."""
+        from repro.sparse.csr import vector_stream_bytes
+
+        nrhs = iters.shape[0]
+        shares = np.zeros(nrhs, np.float64)
+        vec = vector_stream_bytes(op.csr)
+        for it in range(int(iters.max(initial=0))):
+            tags = column_tags_at(iters, sw, it)
+            live = np.nonzero(tags > 0)[0]
+            if live.size == 0:
+                continue
+            mat = iteration_stream_bytes(op.gse, int(tags.max()), op.precond)
+            # The iteration's batch total (matrix once + (n_active-1) vec
+            # streams, matching iteration_stream_bytes(..., nrhs=n_active))
+            # divides evenly among the columns sharing the pass.
+            shares[live] += (mat + (live.size - 1) * vec) / live.size
+        return np.rint(shares).astype(np.int64), int(round(shares.sum()))
+
+
+def main():
+    import argparse
+    import time
+
+    from repro.sparse import generators as G
+    from repro.sparse.spmv import spmv
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--n", type=int, default=24, help="Poisson grid side")
+    ap.add_argument("--precond", default="none",
+                    choices=["none", "jacobi", "spai0"])
+    ap.add_argument("--tol", type=float, default=1e-8)
+    args = ap.parse_args()
+
+    a = G.poisson2d(args.n)
+    params = P.MonitorParams(t=40, l=60, m=30, rsd_limit=0.5,
+                             reldec_limit=0.45)
+    svc = SolverService(slots=args.slots, params=params, maxiter=20000)
+    svc.register("poisson", a, k=8,
+                 precond=None if args.precond == "none" else args.precond)
+
+    rng = np.random.default_rng(0)
+    ids = []
+    for _ in range(args.requests):
+        b = spmv(a, jnp.asarray(rng.normal(size=a.shape[1])))
+        ids.append(svc.submit("poisson", b, tol=args.tol))
+
+    t0 = time.time()
+    reports = svc.flush()
+    dt = time.time() - t0
+    for rid in ids:
+        r = reports[rid]
+        print(
+            f"req {r.id}: iters={r.iters} relres={r.relres:.2e} "
+            f"converged={r.converged} tag={r.tag} "
+            f"switches={r.switch_iters.tolist()} "
+            f"est_bytes={r.est_bytes} batch={r.batch_size}/{args.slots}"
+        )
+    s = svc.stats
+    print(
+        f"served {s['requests']} requests in {s['batches']} batches "
+        f"({s['padded_cols']} padded cols, "
+        f"{s['modeled_bytes'] / 1e6:.2f} MB modeled matrix+vector stream) "
+        f"in {dt:.2f}s"
+    )
+
+
+if __name__ == "__main__":
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    main()

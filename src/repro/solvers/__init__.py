@@ -5,7 +5,21 @@ ride the operator's tag schedule (``precond``), preconditioned CG
 (``solve_pcg``, with a fused iteration path) and right-preconditioned
 GMRES (``solve_gmres(..., precond=...)``), plus a stepped
 iterative-refinement driver (``solve_ir``).
+
+Batched multi-RHS subsystem (DESIGN.md §11): ``solve_cg_batched`` /
+``solve_pcg_batched`` / ``solve_ir_batched`` run per-column precision
+schedules over one shared operand (matrix bytes charged once per
+iteration, ``batched_run_bytes``); ``launch.solver_serve`` is the
+request-batching front-end.
 """
+from repro.solvers.batched import (
+    BatchedCGResult,
+    BatchedIRResult,
+    batched_run_bytes,
+    solve_cg_batched,
+    solve_ir_batched,
+    solve_pcg_batched,
+)
 from repro.solvers.cg import CGResult, solve_cg, solve_pcg
 from repro.solvers.fused_cg import fused_cg_step, fused_pcg_step, gse_matvec
 from repro.solvers.gmres import GMRESResult, solve_gmres
@@ -26,8 +40,14 @@ from repro.solvers.precond import (
 
 __all__ = [
     "CGResult",
+    "BatchedCGResult",
+    "BatchedIRResult",
+    "batched_run_bytes",
     "solve_cg",
     "solve_pcg",
+    "solve_cg_batched",
+    "solve_pcg_batched",
+    "solve_ir_batched",
     "fused_cg_step",
     "fused_pcg_step",
     "gse_matvec",

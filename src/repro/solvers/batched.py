@@ -1,0 +1,474 @@
+"""Batched multi-RHS stepped solvers: per-column precision schedules over
+one shared operand (DESIGN.md §11).
+
+The paper's case is that SpMV is memory-bound, so GSE-SEM wins by
+streaming fewer matrix bytes per iteration; with ``nrhs`` right-hand
+sides the SAME packed segments serve every column in one pass, so the
+matrix stream is charged once per iteration however wide the batch is
+(``csr.iteration_stream_bytes(..., nrhs=...)``).  Loe et al.
+(arXiv:2109.01232) show precision schedules must adapt per solve --
+different right-hand sides converge at different rates -- so each column
+here carries its OWN residual monitor, its own tag schedule, and its own
+switch-iteration log, and deactivates independently on convergence.
+
+Bit-identity contract (the subsystem's acceptance bar): column ``j`` of a
+batched solve runs EXACTLY the op sequence of an independent
+``solve_cg``/``solve_pcg`` on ``b[:, j]`` -- the batch body unrolls the
+same per-column ``fused_cg_step``/``fused_pcg_step`` (or generic-body
+ops) at each column's own traced tag via the same ``lax.switch``
+dispatch, and converged columns are frozen behind a per-column
+``lax.cond`` -- they skip their SpMV/decode entirely instead of being
+dragged further.  Columns that share a tag share one decoded-value pass
+under XLA CSE (the in-jaxpr form of "tag-bucketed sub-batches"); columns
+at different tags split into their own branches.  The kernels-path twin
+(``kernels/ops.gse_spmm_ell``) streams the union pass explicitly.
+
+``batched_run_bytes`` is the fig89-style account of a whole batched run:
+per iteration the matrix (+preconditioner) segments are charged ONCE at
+the widest tag any active column runs, and each active column beyond the
+first charges its dense x/y stream.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import precision as P
+from repro.sparse.csr import GSECSR, iteration_stream_bytes
+from repro.solvers.cg import _record_switch
+
+__all__ = [
+    "BatchedCGResult",
+    "BatchedIRResult",
+    "solve_cg_batched",
+    "solve_pcg_batched",
+    "solve_ir_batched",
+    "batched_run_bytes",
+    "column_tags_at",
+]
+
+
+class BatchedCGResult(NamedTuple):
+    x: jnp.ndarray             # (n, nrhs) solutions
+    iters: jnp.ndarray         # (nrhs,) iterations executed per column
+    relres: jnp.ndarray        # (nrhs,) final recursive relative residuals
+    tag: jnp.ndarray           # (nrhs,) final precision tag per column
+    switch_iters: jnp.ndarray  # (nrhs, 2) iteration of tag->2 / tag->3 (-1: never)
+    converged: jnp.ndarray     # (nrhs,) bool
+
+
+class BatchedIRResult(NamedTuple):
+    x: jnp.ndarray             # (n, nrhs)
+    outer_iters: np.ndarray    # (nrhs,) correction steps per column
+    inner_iters: np.ndarray    # (nrhs,) total inner iterations per column
+    relres: np.ndarray         # (nrhs,) final TRUE (tag-3) relative residuals
+    converged: np.ndarray      # (nrhs,) bool
+    history: list              # nrhs lists of outer residual trajectories
+
+
+def _normalize_block(b, x0):
+    """Accept ``b``/``x0`` as ``(n,)`` or ``(n, nrhs)`` blocks."""
+    b = jnp.asarray(b)
+    if b.ndim == 1:
+        b = b[:, None]
+    if b.ndim != 2:
+        raise ValueError(f"b must be (n,) or (n, nrhs); got {b.shape}")
+    if x0 is None:
+        x0 = jnp.zeros_like(b)
+    else:
+        x0 = jnp.asarray(x0)
+        if x0.ndim == 1:
+            x0 = x0[:, None]
+        if x0.shape != b.shape:
+            raise ValueError(
+                f"x0/b shape mismatch: {x0.shape} vs {b.shape}"
+            )
+        if x0.dtype != b.dtype:
+            raise ValueError(f"x0/b dtype mismatch: {x0.dtype} vs {b.dtype}")
+    return b, x0
+
+
+def _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
+                         init_col, step_col):
+    """Shared batched while_loop: per-column monitors, masking, switches.
+
+    ``init_col(b_j, x0_j, tag) -> dict`` builds one column's Krylov state
+    (must contain ``rr`` = squared residual norm driving the monitor);
+    ``step_col(col_state, tag) -> dict`` runs ONE iteration of the
+    single-RHS solver body at a traced per-column tag.  Everything else
+    (monitor record/update, switch logging, convergence masking, per-
+    column iteration counts) is identical across CG and PCG.
+    """
+    nrhs = b.shape[1]
+    bnorms = []
+    cols = []
+    for j in range(nrhs):
+        bn = jnp.linalg.norm(b[:, j])
+        bn = jnp.where(bn == 0, 1.0, bn)
+        bnorms.append(bn)
+        mon = P.init(params, dtype=b.dtype, tag=init_tag)
+        c = init_col(b[:, j], x0[:, j], mon.tag)
+        c.update(
+            it=jnp.int32(0),
+            mon=mon,
+            sw=jnp.full((2,), -1, jnp.int32),
+        )
+        cols.append(c)
+    cols = tuple(cols)
+
+    def col_relres(c, j):
+        return jnp.sqrt(jnp.abs(c["rr"])) / bnorms[j]
+
+    def col_active(c, j):
+        return (col_relres(c, j) > tol) & (c["it"] < maxiter)
+
+    def cond(cols):
+        alive = [col_active(c, j) for j, c in enumerate(cols)]
+        return jnp.stack(alive).any()
+
+    def step_one(j):
+        def run(c):
+            stepped = step_col(c, c["mon"].tag)
+            mon1 = P.record(c["mon"],
+                            jnp.sqrt(jnp.abs(stepped["rr"])) / bnorms[j])
+            mon2 = P.update_tag(mon1, params)
+            sw = _record_switch(c["sw"], mon1, mon2, c["it"])
+            stepped.update(it=c["it"] + 1, mon=mon2, sw=sw)
+            return stepped
+
+        return run
+
+    def body(cols):
+        # lax.cond (scalar predicate -> real branch, not a select): a
+        # frozen column skips its SpMV/decode entirely instead of
+        # computing a result that masking would discard -- the service's
+        # padding columns cost nothing while real requests iterate.
+        return tuple(
+            jax.lax.cond(col_active(c, j), step_one(j), lambda c: c, c)
+            for j, c in enumerate(cols)
+        )
+
+    cols = jax.lax.while_loop(cond, body, cols)
+    relres = jnp.stack([col_relres(c, j) for j, c in enumerate(cols)])
+    return BatchedCGResult(
+        x=jnp.stack([c["x"] for c in cols], axis=1),
+        iters=jnp.stack([c["it"] for c in cols]),
+        relres=relres,
+        tag=jnp.stack([c["mon"].tag for c in cols]),
+        switch_iters=jnp.stack([c["sw"] for c in cols]),
+        converged=relres <= tol,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batched CG
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("maxiter", "params", "init_tag"))
+def _solve_cg_batched_fused(a, b, x0, tol, maxiter, params, init_tag=1):
+    from repro.solvers.fused_cg import fused_cg_step, gse_matvec
+
+    def init_col(bj, xj, tag):
+        r0 = bj - gse_matvec(a, xj, tag)
+        rs = jnp.vdot(r0, r0)
+        return dict(x=xj, r=r0, p=r0, rr=rs)
+
+    def step_col(c, tag):
+        x, r, p, rs = fused_cg_step(a, c["x"], c["r"], c["p"], c["rr"], tag)
+        return dict(x=x, r=r, p=p, rr=rs)
+
+    return _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
+                                init_col, step_col)
+
+
+@partial(jax.jit, static_argnames=("apply_a", "maxiter", "params", "init_tag"))
+def _solve_cg_batched(apply_a, b, x0, tol, maxiter, params, init_tag=1):
+    def init_col(bj, xj, tag):
+        r0 = bj - apply_a(xj, tag)
+        rs = jnp.vdot(r0, r0)
+        return dict(x=xj, r=r0, p=r0, rr=rs)
+
+    def step_col(c, tag):
+        # EXACTLY the _solve_cg body ops, in order (bit-identity contract).
+        ap = apply_a(c["p"], tag)
+        denom = jnp.vdot(c["p"], ap)
+        alpha = c["rr"] / jnp.where(denom == 0, 1.0, denom)
+        x = c["x"] + alpha * c["p"]
+        r = c["r"] - alpha * ap
+        rs_new = jnp.vdot(r, r)
+        beta = rs_new / jnp.where(c["rr"] == 0, 1.0, c["rr"])
+        p = r + beta * c["p"]
+        return dict(x=x, r=r, p=p, rr=rs_new)
+
+    return _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
+                                init_col, step_col)
+
+
+def solve_cg_batched(
+    apply_a: Union[Callable, GSECSR],
+    b: jnp.ndarray,
+    x0: jnp.ndarray | None = None,
+    tol: float = 1e-6,
+    maxiter: int = 5000,
+    params: P.MonitorParams | None = None,
+) -> BatchedCGResult:
+    """Stepped CG over an (n, nrhs) right-hand-side block.
+
+    One shared operand, ``nrhs`` independent per-column precision
+    schedules: each column carries its own residual monitor and steps its
+    own tag, deactivating when it converges.  Column ``j``'s trajectory is
+    bit-identical to ``solve_cg(apply_a, b[:, j], ...)`` with the same
+    parameters -- same iterates, same iteration count, same switch
+    iterations (tested in tests/test_batched.py).
+
+    Passing a ``GSECSR`` selects the fused per-column iteration
+    (``fused_cg_step``), exactly as in single-RHS ``solve_cg``.  The
+    modeled per-iteration traffic of the batch is
+    ``iteration_stream_bytes(a, tag, nrhs=n_active)`` -- matrix bytes
+    once, vector bytes per active column; ``batched_run_bytes`` accounts
+    a whole run from the per-column results.
+    """
+    b, x0 = _normalize_block(b, x0)
+    if params is None:
+        params = P.MonitorParams.for_cg()
+    tol_ = jnp.asarray(tol, b.dtype)
+    if isinstance(apply_a, GSECSR):
+        return _solve_cg_batched_fused(apply_a, b, x0, tol_, maxiter, params)
+    return _solve_cg_batched(apply_a, b, x0, tol_, maxiter, params)
+
+
+# ---------------------------------------------------------------------------
+# Batched PCG
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("maxiter", "params", "init_tag"))
+def _solve_pcg_batched_fused(a, m, b, x0, tol, maxiter, params, init_tag=1):
+    from repro.solvers.fused_cg import fused_pcg_step, gse_matvec
+
+    def init_col(bj, xj, tag):
+        r0 = bj - gse_matvec(a, xj, tag)
+        z0 = m.apply(r0, tag)
+        return dict(x=xj, r=r0, p=z0, rz=jnp.vdot(r0, z0),
+                    rr=jnp.vdot(r0, r0))
+
+    def step_col(c, tag):
+        x, r, p, rz, rr = fused_pcg_step(
+            a, m, c["x"], c["r"], c["p"], c["rz"], tag
+        )
+        return dict(x=x, r=r, p=p, rz=rz, rr=rr)
+
+    return _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
+                                init_col, step_col)
+
+
+@partial(jax.jit, static_argnames=("apply_a", "apply_m", "maxiter", "params",
+                                   "init_tag"))
+def _solve_pcg_batched(apply_a, apply_m, b, x0, tol, maxiter, params,
+                       init_tag=1):
+    def init_col(bj, xj, tag):
+        r0 = bj - apply_a(xj, tag)
+        z0 = apply_m(r0, tag)
+        return dict(x=xj, r=r0, p=z0, rz=jnp.vdot(r0, z0),
+                    rr=jnp.vdot(r0, r0))
+
+    def step_col(c, tag):
+        # EXACTLY the _solve_pcg body ops, in order (bit-identity contract).
+        ap = apply_a(c["p"], tag)
+        denom = jnp.vdot(c["p"], ap)
+        alpha = c["rz"] / jnp.where(denom == 0, 1.0, denom)
+        x = c["x"] + alpha * c["p"]
+        r = c["r"] - alpha * ap
+        z = apply_m(r, tag)
+        rz_new = jnp.vdot(r, z)
+        rr_new = jnp.vdot(r, r)
+        beta = rz_new / jnp.where(c["rz"] == 0, 1.0, c["rz"])
+        p = z + beta * c["p"]
+        return dict(x=x, r=r, p=p, rz=rz_new, rr=rr_new)
+
+    return _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
+                                init_col, step_col)
+
+
+def solve_pcg_batched(
+    apply_a: Union[Callable, GSECSR],
+    b: jnp.ndarray,
+    precond,
+    x0: jnp.ndarray | None = None,
+    tol: float = 1e-6,
+    maxiter: int = 5000,
+    params: P.MonitorParams | None = None,
+) -> BatchedCGResult:
+    """Stepped preconditioned CG over an (n, nrhs) block.
+
+    Both the operator and the GSE-packed preconditioner follow each
+    column's OWN tag schedule; the stored segments of both are charged
+    once per iteration however many columns ride along.  Column ``j`` is
+    bit-identical to ``solve_pcg(apply_a, b[:, j], precond, ...)``.
+    """
+    b, x0 = _normalize_block(b, x0)
+    if params is None:
+        params = P.MonitorParams.for_cg()
+    tol_ = jnp.asarray(tol, b.dtype)
+    if isinstance(apply_a, GSECSR) and hasattr(precond, "apply_at"):
+        return _solve_pcg_batched_fused(apply_a, precond, b, x0, tol_,
+                                        maxiter, params)
+    apply_m = precond if callable(precond) else precond.apply
+    if isinstance(apply_a, GSECSR):
+        from repro.solvers.cg import _gsecsr_operator
+
+        apply_a = _gsecsr_operator(apply_a)
+    return _solve_pcg_batched(apply_a, apply_m, b, x0, tol_, maxiter, params)
+
+
+# ---------------------------------------------------------------------------
+# Batched iterative refinement (outer loop from solvers/ir.py)
+# ---------------------------------------------------------------------------
+
+def solve_ir_batched(
+    apply_a: Union[Callable, GSECSR],
+    b: jnp.ndarray,
+    tol: float = 1e-10,
+    max_outer: int = 10,
+    inner_tol: float = 1e-4,
+    inner_maxiter: int = 2000,
+    params: P.MonitorParams | None = None,
+    precond=None,
+) -> BatchedIRResult:
+    """Batched stepped iterative refinement (the ``solve_ir`` outer loop
+    over an (n, nrhs) block, inner solves batched).
+
+    Outer loop at tag 3 per column (the one-copy high-precision read),
+    inner batched stepped CG/PCG starting every correction back at tag 1.
+    Each column refines until ITS true residual meets ``tol`` and then
+    drops out of the correction updates; the inner batch keeps streaming
+    one matrix pass for whichever columns remain.  Active columns'
+    trajectories match the single-RHS ``solve_ir`` exactly (the batched
+    inner solve is per-column bit-identical and the outer ops are
+    per-column).
+    """
+    b = jnp.asarray(b)
+    if b.ndim == 1:
+        b = b[:, None]
+    if params is None:
+        params = P.MonitorParams.for_cg()
+    nrhs = b.shape[1]
+
+    if isinstance(apply_a, GSECSR):
+        from repro.solvers.cg import _gsecsr_operator
+
+        apply_tagged = _gsecsr_operator(apply_a)
+    else:
+        apply_tagged = apply_a
+
+    def apply3_block(x_block):
+        # Per-column tag-3 reads: identical arithmetic to solve_ir's apply3.
+        return jnp.stack(
+            [apply_tagged(x_block[:, j], jnp.int32(3)) for j in range(nrhs)],
+            axis=1,
+        )
+
+    def col_norms(block):
+        # Per-column 1-D norms, NOT an axis reduction: solve_ir's scalar
+        # norm and jnp.linalg.norm(..., axis=0) can differ in the last
+        # ulp, and the bit-identity contract extends to the history.
+        return np.asarray(
+            [float(jnp.linalg.norm(block[:, j])) for j in range(nrhs)]
+        )
+
+    bnorms = col_norms(b)
+    bnorms = np.where(bnorms == 0, 1.0, bnorms)
+
+    x = jnp.zeros_like(b)
+    total_inner = np.zeros(nrhs, np.int64)
+    outer = np.zeros(nrhs, np.int64)
+    r = b - apply3_block(x)
+    relres = col_norms(r) / bnorms
+    history = [[float(v)] for v in relres]
+    active = (relres > tol) & (outer < max_outer)
+    while active.any():
+        mask = jnp.asarray(active)
+        # Converged columns drop out of the inner batch NOW: zeroing their
+        # residual column makes them converge at inner iteration 0 (the
+        # ||b||=0 path, same trick as the service's padding columns), so
+        # they stop burning inner iterations on corrections the mask
+        # below would discard anyway.
+        r_in = jnp.where(mask[None, :], r, 0.0)
+        if precond is not None:
+            res = solve_pcg_batched(apply_a, r_in, precond, tol=inner_tol,
+                                    maxiter=inner_maxiter, params=params)
+        else:
+            res = solve_cg_batched(apply_a, r_in, tol=inner_tol,
+                                   maxiter=inner_maxiter, params=params)
+        x = jnp.where(mask[None, :], x + res.x, x)  # correct active cols only
+        iters = np.asarray(res.iters)
+        conv = np.asarray(res.converged)
+        total_inner[active] += iters[active]
+        outer[active] += 1
+        r = b - apply3_block(x)
+        relres = col_norms(r) / bnorms
+        for j in range(nrhs):
+            if active[j]:
+                history[j].append(float(relres[j]))
+        stalled = (~conv) & (iters == 0)  # no-progress guard, per column
+        active = active & (relres > tol) & ~stalled & (outer < max_outer)
+    return BatchedIRResult(
+        x=x,
+        outer_iters=outer,
+        inner_iters=total_inner,
+        relres=relres,
+        converged=relres <= tol,
+        history=[np.asarray(h) for h in history],
+    )
+
+
+# ---------------------------------------------------------------------------
+# Byte accounting for a whole batched run (fig89-style)
+# ---------------------------------------------------------------------------
+
+def column_tags_at(iters, switch_iters, it: int) -> np.ndarray:
+    """Per-column tag at 0-based iteration ``it`` (0 for finished columns).
+
+    Uses the ``switch_iters`` semantics of the single-RHS byte model
+    (``benchmarks.fig89``): iterations ``[0, sw0)`` run at tag 1,
+    ``[sw0, sw1)`` at tag 2, ``[sw1, iters)`` at tag 3; ``-1`` means the
+    step never happened.
+    """
+    iters = np.asarray(iters)
+    sw = np.asarray(switch_iters)
+    nrhs = iters.shape[0]
+    tags = np.zeros(nrhs, np.int64)
+    for j in range(nrhs):
+        if it >= iters[j]:
+            continue  # column already converged: streams nothing
+        t2 = sw[j, 0] if sw[j, 0] >= 0 else iters[j]
+        t3 = sw[j, 1] if sw[j, 1] >= 0 else iters[j]
+        tags[j] = 1 if it < t2 else (2 if it < t3 else 3)
+    return tags
+
+
+def batched_run_bytes(op, iters, switch_iters, precond=None) -> int:
+    """Modeled HBM bytes a whole batched stepped run streams.
+
+    Per iteration, the matrix (+preconditioner) segments are charged ONCE
+    at the WIDEST tag any active column runs -- the shared streaming pass
+    must read the union of the segments its columns need -- and every
+    active column beyond the first charges its dense x/y stream
+    (``iteration_stream_bytes(..., nrhs=n_active)``).  Converged columns
+    stream nothing.  With ``nrhs == 1`` this reduces exactly to the
+    single-RHS trajectory account of ``benchmarks.fig89``.
+    """
+    iters = np.asarray(iters)
+    total = 0
+    for it in range(int(iters.max(initial=0))):
+        tags = column_tags_at(iters, switch_iters, it)
+        n_active = int((tags > 0).sum())
+        if n_active == 0:
+            continue
+        total += iteration_stream_bytes(
+            op, int(tags.max()), precond, nrhs=n_active
+        )
+    return total

@@ -29,6 +29,51 @@ from repro.sparse.csr import GSECSR
 __all__ = ["CGResult", "solve_cg", "solve_pcg"]
 
 
+def _normalize_b_x0(b, x0):
+    """Accept ``b``/``x0`` as ``(n,)`` or ``(n, 1)``; reject anything else.
+
+    Returns ``(b_1d, x0_1d_or_None, orig_shape)`` -- the solvers run on the
+    1-D view and reshape the solution back to the caller's layout, so the
+    batched wrappers (``solvers.batched``) can delegate single columns
+    without special cases.  Mismatched shapes or dtypes between ``b`` and
+    ``x0`` raise a ``ValueError`` up front instead of a shape error deep
+    inside a jitted ``while_loop``.
+    """
+    b = jnp.asarray(b)
+    orig_shape = b.shape
+    if b.ndim == 2 and b.shape[1] == 1:
+        b = b[:, 0]
+    elif b.ndim != 1:
+        raise ValueError(
+            f"b must be (n,) or (n, 1); got {orig_shape} -- for multi-RHS "
+            "blocks use repro.solvers.batched"
+        )
+    if x0 is not None:
+        x0 = jnp.asarray(x0)
+        x0_shape = x0.shape
+        if x0.ndim == 2 and x0.shape[1] == 1:
+            x0 = x0[:, 0]
+        elif x0.ndim != 1:
+            raise ValueError(f"x0 must be (n,) or (n, 1); got {x0_shape}")
+        if x0.shape[0] != b.shape[0]:
+            raise ValueError(
+                f"x0/b shape mismatch: x0 has {x0.shape[0]} rows, "
+                f"b has {b.shape[0]}"
+            )
+        if x0.dtype != b.dtype:
+            raise ValueError(
+                f"x0/b dtype mismatch: {x0.dtype} vs {b.dtype}"
+            )
+    return b, x0, orig_shape
+
+
+def _restore_shape(res, orig_shape):
+    """Reshape the solution back to the caller's ``b`` layout."""
+    if res.x.shape != orig_shape:
+        res = res._replace(x=res.x.reshape(orig_shape))
+    return res
+
+
 class CGResult(NamedTuple):
     x: jnp.ndarray
     iters: jnp.ndarray       # iterations executed
@@ -343,7 +388,11 @@ def solve_pcg(
     Passing a ``GSECSR`` as ``apply_a`` together with a precond *object*
     selects the fused iteration path (``fused_pcg_step``) -- bit-identical
     to the generic path, fewer kernel launches.
+
+    ``b``/``x0`` may be ``(n,)`` or ``(n, 1)``; the solution comes back in
+    ``b``'s layout.
     """
+    b, x0, orig_shape = _normalize_b_x0(b, x0)
     if x0 is None:
         x0 = jnp.zeros_like(b)
     if params is None:
@@ -358,7 +407,7 @@ def solve_pcg(
             apply_a = _gsecsr_operator(apply_a)
         res = _solve_pcg(apply_a, apply_m, b, x0, tol_, maxiter, params)
     if not final_correction:
-        return res
+        return _restore_shape(res, orig_shape)
     apply3_op = _gsecsr_operator(apply_a) if fused else apply_a
 
     def apply3(v):
@@ -372,7 +421,10 @@ def solve_pcg(
         def resume(xr, budget):
             return _solve_pcg(apply_a, apply_m, b, xr, tol_, budget,
                               params, init_tag=3)
-    return _finish_with_correction(res, b, tol, maxiter, apply3, resume)
+    return _restore_shape(
+        _finish_with_correction(res, b, tol, maxiter, apply3, resume),
+        orig_shape,
+    )
 
 
 def solve_cg(
@@ -398,7 +450,11 @@ def solve_cg(
     the true residual can sit above ``tol``.  When enabled, the driver
     verifies the tag-3 residual after convergence and, if needed, resumes
     at full precision until the TRUE residual meets ``tol``.
+
+    ``b``/``x0`` may be ``(n,)`` or ``(n, 1)``; the solution comes back in
+    ``b``'s layout.
     """
+    b, x0, orig_shape = _normalize_b_x0(b, x0)
     if x0 is None:
         x0 = jnp.zeros_like(b)
     if params is None:
@@ -408,7 +464,7 @@ def solve_cg(
     solve = _solve_cg_fused if fused else _solve_cg
     res = solve(apply_a, b, x0, tol_, maxiter, params)
     if not final_correction:
-        return res
+        return _restore_shape(res, orig_shape)
     apply3_op = _gsecsr_operator(apply_a) if fused else apply_a
 
     def apply3(v):
@@ -417,4 +473,7 @@ def solve_cg(
     def resume(xr, budget):
         return solve(apply_a, b, xr, tol_, budget, params, init_tag=3)
 
-    return _finish_with_correction(res, b, tol, maxiter, apply3, resume)
+    return _restore_shape(
+        _finish_with_correction(res, b, tol, maxiter, apply3, resume),
+        orig_shape,
+    )

@@ -181,7 +181,13 @@ def solve_gmres(
     preconditioner object from :mod:`repro.solvers.precond` or a callable
     ``apply_m(r, tag)``.  The preconditioner rides the monitor's tag
     schedule exactly like the operator (DESIGN.md §10).
+
+    ``b``/``x0`` may be ``(n,)`` or ``(n, 1)``; the solution comes back in
+    ``b``'s layout.
     """
+    from repro.solvers.cg import _normalize_b_x0, _restore_shape
+
+    b, x0, orig_shape = _normalize_b_x0(b, x0)
     if x0 is None:
         x0 = jnp.zeros_like(b)
     if params is None:
@@ -193,7 +199,7 @@ def solve_gmres(
     res = _solve_gmres(apply_a, b, x0, tol_, restart, maxiter, params,
                        apply_m=apply_m)
     if not final_correction:
-        return res
+        return _restore_shape(res, orig_shape)
     from repro.solvers.cg import _finish_with_correction
 
     def apply3(v):
@@ -203,4 +209,7 @@ def solve_gmres(
         return _solve_gmres(apply_a, b, xr, tol_, restart, budget, params,
                             init_tag=3, apply_m=apply_m)
 
-    return _finish_with_correction(res, b, tol, maxiter, apply3, resume)
+    return _restore_shape(
+        _finish_with_correction(res, b, tol, maxiter, apply3, resume),
+        orig_shape,
+    )

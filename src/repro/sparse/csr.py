@@ -32,6 +32,7 @@ __all__ = [
     "pack_csr",
     "to_ell",
     "iteration_stream_bytes",
+    "vector_stream_bytes",
 ]
 
 
@@ -211,7 +212,15 @@ def pack_csr(a: CSR, k: int = 8) -> GSECSR:
     )
 
 
-def iteration_stream_bytes(op, tag, precond=None) -> int:
+def vector_stream_bytes(op, dtype=jnp.float64) -> int:
+    """Modeled HBM bytes ONE dense operand/result column streams: the x
+    gather read plus the y write of a single SpMV/SpMM column at
+    ``dtype`` (the solver vectors' precision, f64 by default)."""
+    m, n = op.shape
+    return (m + n) * jnp.dtype(dtype).itemsize
+
+
+def iteration_stream_bytes(op, tag, precond=None, nrhs: int = 1) -> int:
     """Modeled HBM bytes ONE stepped solver iteration streams at ``tag``.
 
     Sums the operator's matrix streams (``op.bytes_touched``) with the
@@ -220,10 +229,19 @@ def iteration_stream_bytes(op, tag, precond=None) -> int:
     schedule, so a tag-1 iteration pays 2 B per stored preconditioner
     entry, not 8 (DESIGN.md §10).  Without a preconditioner ``tag`` may
     also be a ``CSR`` store dtype; charging a preconditioner requires a
-    GSE tag in {1, 2, 3} (the preconditioner is always GSE-packed).  The
-    dense vector traffic is format-independent and excluded, as in
-    ``bytes_touched`` itself.
+    GSE tag in {1, 2, 3} (the preconditioner is always GSE-packed).
+
+    ``nrhs`` is the number of ACTIVE right-hand-side columns the batched
+    SpMM iteration feeds (DESIGN.md §11): the matrix (+preconditioner)
+    segments are charged ONCE per iteration -- one streaming pass over
+    the packed bytes serves every column -- while each column beyond the
+    first charges its own dense x/y stream (``vector_stream_bytes``).
+    The first column's vector traffic stays excluded exactly as before
+    (it is format-independent and cancels in format comparisons), so
+    ``nrhs=1`` reproduces the single-RHS figure identically.
     """
+    if nrhs < 1:
+        raise ValueError(f"nrhs must be >= 1, got {nrhs}")
     total = op.bytes_touched(tag)
     if precond is not None:
         if tag not in (1, 2, 3):
@@ -232,6 +250,7 @@ def iteration_stream_bytes(op, tag, precond=None) -> int:
                 f"got {tag!r}"
             )
         total += precond.bytes_touched(tag)
+    total += (nrhs - 1) * vector_stream_bytes(op)
     return total
 
 

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from repro.core import gse
 from repro.sparse.csr import CSR, GSECSR
 
-__all__ = ["spmv", "spmv_gse", "spmv_ell", "decode_gsecsr"]
+__all__ = ["spmv", "spmv_gse", "spmv_ell", "spmm", "spmm_gse", "decode_gsecsr"]
 
 
 @partial(jax.jit, static_argnames=("store_dtype", "acc_dtype", "num_rows"))
@@ -112,3 +112,56 @@ def spmv_ell(cols: jnp.ndarray, vals: jnp.ndarray, x: jnp.ndarray,
     """Padded-ELL SpMV: dense (rows, L) tiles -- the TPU-shaped reference."""
     prod = vals.astype(acc_dtype) * x.astype(acc_dtype)[cols]
     return jnp.sum(prod, axis=1)
+
+
+@partial(jax.jit, static_argnames=("store_dtype", "acc_dtype", "num_rows"))
+def _spmm_cast(row_ids, col, val, x, store_dtype, acc_dtype, num_rows):
+    v = val.astype(store_dtype).astype(acc_dtype)  # storage round-trip
+    prod = v[:, None] * x.astype(acc_dtype)[col]   # (nnz, nrhs)
+    return jax.ops.segment_sum(prod, row_ids, num_segments=num_rows)
+
+
+def spmm(a: CSR, x: jnp.ndarray, store_dtype=jnp.float64,
+         acc_dtype=jnp.float64):
+    """Y = A @ X for a dense (n, nrhs) right-hand-side block.
+
+    Multi-RHS twin of :func:`spmv` (fixed-format baselines): the value and
+    colidx streams are read ONCE and amortized across all ``nrhs`` columns
+    -- the memory-bound win the batched solvers build on (DESIGN.md §11).
+    Column ``j`` of the result is numerically the column-by-column
+    ``spmv(a, x[:, j])`` (same gather, same segment reduction order).
+    """
+    if x.ndim != 2:
+        raise ValueError(f"spmm wants a (n, nrhs) block; got {x.shape}")
+    return _spmm_cast(
+        a.row_ids, a.col, a.val, x, store_dtype, acc_dtype, a.shape[0]
+    )
+
+
+@partial(jax.jit, static_argnames=("ei_bit", "tag", "acc_dtype", "num_rows"))
+def _spmm_gse(colpak, head, tail1, tail2, table, row_ids, x, ei_bit, tag,
+              acc_dtype, num_rows):
+    val, col = _decode_gsecsr(
+        colpak, head, tail1, tail2, table, ei_bit, tag, acc_dtype
+    )
+    prod = val[:, None] * x.astype(acc_dtype)[col]  # decode once, nrhs uses
+    return jax.ops.segment_sum(prod, row_ids, num_segments=num_rows)
+
+
+def spmm_gse(a: GSECSR, x: jnp.ndarray, tag: int = 1, acc_dtype=jnp.float64):
+    """GSE-SEM SpMM at precision ``tag``: Y = A @ X, X dense (n, nrhs).
+
+    One decoded-value pass feeds every column, so the modeled matrix
+    traffic is ``a.bytes_touched(tag)`` ONCE per call however many
+    right-hand sides ride along -- ``csr.iteration_stream_bytes(...,
+    nrhs=nrhs)`` is the per-iteration account (DESIGN.md §11).  The
+    TPU-tiled equivalent (``kernels/ops.gse_spmm_ell``) dispatches to a
+    tag-specialized Pallas kernel that provably streams only the segments
+    ``tag`` reads, exactly like the SpMV pipeline.
+    """
+    if x.ndim != 2:
+        raise ValueError(f"spmm_gse wants a (n, nrhs) block; got {x.shape}")
+    return _spmm_gse(
+        a.colpak, a.head, a.tail1, a.tail2, a.table, a.row_ids, x,
+        a.ei_bit, tag, acc_dtype, a.shape[0]
+    )

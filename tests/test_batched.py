@@ -1,0 +1,333 @@
+"""Tests for the batched multi-RHS stepped-solver subsystem (DESIGN.md §11).
+
+Acceptance criteria covered:
+
+  * batched stepped CG on 4 RHS over a shared Poisson GSECSR produces
+    per-column trajectories BIT-IDENTICAL to 4 independent ``solve_cg``
+    runs (iterates, iteration counts, tag schedules, switch iterations);
+  * per-column monitors: on a stalling system different columns step tags
+    at their own iterations;
+  * columns deactivate on convergence (per-column iteration counts);
+  * ``batched_run_bytes`` charges matrix segment bytes once per
+    iteration, not nrhs times;
+  * single-RHS ``solve_cg``/``solve_pcg``/``solve_gmres`` accept (n,) and
+    (n, 1) with clear ValueErrors on mismatches (the shape-normalization
+    satellite the batched wrappers delegate through).
+"""
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import precision as P
+from repro.sparse import generators as G
+from repro.sparse.csr import from_coo, iteration_stream_bytes, pack_csr
+from repro.sparse.spmv import spmv
+from repro.solvers import (
+    batched_run_bytes,
+    make_gse_operator,
+    make_jacobi,
+    solve_cg,
+    solve_cg_batched,
+    solve_gmres,
+    solve_ir,
+    solve_ir_batched,
+    solve_pcg,
+    solve_pcg_batched,
+)
+from repro.solvers.batched import column_tags_at
+
+
+def _fast_params(**kw):
+    d = dict(t=30, l=30, m=15, rsd_limit=0.5, reldec_limit=0.45)
+    d.update(kw)
+    return P.MonitorParams(**d)
+
+
+def _rhs_block(a, nrhs, seed=0):
+    rng = np.random.default_rng(seed)
+    cols = [
+        jnp.asarray(np.asarray(spmv(a, jnp.asarray(
+            rng.normal(size=a.shape[1])))))
+        for _ in range(nrhs)
+    ]
+    return jnp.stack(cols, axis=1)
+
+
+@functools.lru_cache(maxsize=1)
+def _stalling_spd():
+    """SPD with eigenvalues down to 1e-6 (as in test_spmv_pipeline): the
+    tag-1 decode error perturbs the small eigenvalues, so head-only CG
+    genuinely stalls and the per-column controllers must step up."""
+    rng = np.random.default_rng(7)
+    n = 200
+    q, _ = np.linalg.qr(rng.normal(size=(n, n)))
+    eigs = np.logspace(-6, 0, n)
+    dense = (q * eigs) @ q.T
+    dense = 0.5 * (dense + dense.T)
+    rows, cols = np.nonzero(np.ones((n, n)))
+    a = from_coo(rows, cols, dense[rows, cols], (n, n))
+    return a, dense
+
+
+def _assert_columns_match_independent(res, solver, op, b, nrhs, **kw):
+    for j in range(nrhs):
+        ind = solver(op, b[:, j], **kw)
+        assert int(ind.iters) == int(res.iters[j]), f"col {j}"
+        assert float(ind.relres) == float(res.relres[j]), f"col {j}"
+        assert int(ind.tag) == int(res.tag[j]), f"col {j}"
+        np.testing.assert_array_equal(
+            np.asarray(ind.switch_iters), np.asarray(res.switch_iters[j])
+        )
+        np.testing.assert_array_equal(
+            np.asarray(ind.x), np.asarray(res.x[:, j])
+        )
+        assert bool(ind.converged) == bool(res.converged[j])
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: batched == independent, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_batched_cg_4rhs_bit_identical_to_independent():
+    """THE acceptance criterion: 4-RHS batched stepped CG over a shared
+    Poisson GSECSR == 4 independent fused solve_cg runs, bitwise."""
+    a = G.poisson2d(16)
+    g = pack_csr(a, k=8)
+    b = _rhs_block(a, 4, seed=0)
+    kw = dict(tol=1e-8, maxiter=3000, params=_fast_params())
+    res = solve_cg_batched(g, b, **kw)
+    _assert_columns_match_independent(res, solve_cg, g, b, 4, **kw)
+    # Columns deactivate independently: the per-column counts differ.
+    assert len(set(np.asarray(res.iters).tolist())) > 1
+
+
+def test_batched_cg_generic_operator_bit_identical():
+    a = G.random_spd(300, seed=2)
+    g = pack_csr(a, k=8)
+    op = make_gse_operator(g)
+    b = _rhs_block(a, 3, seed=2)
+    kw = dict(tol=1e-8, maxiter=3000, params=_fast_params())
+    res = solve_cg_batched(op, b, **kw)
+    _assert_columns_match_independent(res, solve_cg, op, b, 3, **kw)
+
+
+def test_batched_cg_per_column_tag_schedules():
+    """On a stalling system each column steps tags on ITS OWN schedule
+    (Loe et al.: precision schedules must adapt per solve)."""
+    a, dense = _stalling_spd()
+    g = pack_csr(a, k=8)
+    rng = np.random.default_rng(3)
+    cols = [jnp.asarray(dense @ rng.normal(size=a.shape[1]))
+            for _ in range(3)]
+    # Make one column trivially easy so it never needs to leave tag 1.
+    cols.append(jnp.asarray(dense @ (1e-3 * np.ones(a.shape[1]))))
+    b = jnp.stack(cols, axis=1)
+    kw = dict(tol=1e-8, maxiter=20000, params=_fast_params(t=60, l=60, m=30))
+    res = solve_cg_batched(g, b, **kw)
+    assert bool(res.converged.all())
+    tags = np.asarray(res.tag)
+    assert tags[:3].max() >= 2          # the hard columns stepped
+    _assert_columns_match_independent(res, solve_cg, g, b, 4, **kw)
+
+
+def test_batched_pcg_bit_identical_and_deactivation():
+    ill = G.ill_conditioned_spd(32, 8.0)
+    g = pack_csr(ill, k=8)
+    m = make_jacobi(ill, k=8)
+    b = _rhs_block(ill, 3, seed=4)
+    kw = dict(tol=1e-10, maxiter=20000, params=_fast_params())
+    res = solve_pcg_batched(g, b, m, **kw)
+    for j in range(3):
+        ind = solve_pcg(g, b[:, j], m, **kw)
+        assert int(ind.iters) == int(res.iters[j])
+        np.testing.assert_array_equal(np.asarray(ind.x),
+                                      np.asarray(res.x[:, j]))
+        np.testing.assert_array_equal(np.asarray(ind.switch_iters),
+                                      np.asarray(res.switch_iters[j]))
+
+
+def test_batched_zero_column_converges_immediately():
+    """A zero RHS (the service's padding column) does zero iterations and
+    never perturbs its neighbours."""
+    a = G.poisson2d(12)
+    g = pack_csr(a, k=8)
+    b = _rhs_block(a, 2, seed=5)
+    bz = jnp.concatenate([b, jnp.zeros((a.shape[0], 1))], axis=1)
+    kw = dict(tol=1e-8, maxiter=3000, params=_fast_params())
+    res2 = solve_cg_batched(g, b, **kw)
+    res3 = solve_cg_batched(g, bz, **kw)
+    assert int(res3.iters[2]) == 0
+    assert bool(res3.converged[2])
+    np.testing.assert_array_equal(np.asarray(res3.x[:, :2]),
+                                  np.asarray(res2.x))
+    np.testing.assert_array_equal(np.asarray(res3.iters[:2]),
+                                  np.asarray(res2.iters))
+
+
+def test_batched_accepts_1d_rhs_and_rejects_bad_shapes():
+    a = G.poisson2d(8)
+    g = pack_csr(a, k=8)
+    b = _rhs_block(a, 1, seed=6)[:, 0]
+    kw = dict(tol=1e-8, maxiter=2000, params=_fast_params())
+    res = solve_cg_batched(g, b, **kw)
+    assert res.x.shape == (a.shape[0], 1)
+    ind = solve_cg(g, b, **kw)
+    np.testing.assert_array_equal(np.asarray(ind.x), np.asarray(res.x[:, 0]))
+    with pytest.raises(ValueError, match="shape mismatch"):
+        solve_cg_batched(g, b[:, None], x0=jnp.zeros((a.shape[0], 2)), **kw)
+    with pytest.raises(ValueError, match="dtype mismatch"):
+        solve_cg_batched(
+            g, b[:, None], x0=jnp.zeros((a.shape[0], 1), jnp.float32), **kw
+        )
+
+
+# ---------------------------------------------------------------------------
+# Batched iterative refinement
+# ---------------------------------------------------------------------------
+
+def test_batched_ir_matches_independent():
+    ill = G.ill_conditioned_spd(24, 8.0)
+    g = pack_csr(ill, k=8)
+    m = make_jacobi(ill, k=8)
+    b = _rhs_block(ill, 3, seed=7)
+    kw = dict(tol=1e-11, max_outer=10, inner_tol=1e-4, inner_maxiter=4000,
+              params=_fast_params())
+    res = solve_ir_batched(g, b, precond=m, **kw)
+    assert res.converged.all()
+    for j in range(3):
+        ind = solve_ir(g, b[:, j], inner="cg", precond=m, **kw)
+        assert ind.outer_iters == int(res.outer_iters[j])
+        assert ind.inner_iters == int(res.inner_iters[j])
+        np.testing.assert_array_equal(np.asarray(ind.x),
+                                      np.asarray(res.x[:, j]))
+        np.testing.assert_allclose(ind.history, res.history[j], rtol=0,
+                                   atol=0)
+
+
+# ---------------------------------------------------------------------------
+# Batched byte model
+# ---------------------------------------------------------------------------
+
+def test_column_tags_at_reconstruction():
+    iters = np.array([10, 6, 0])
+    sw = np.array([[3, 7], [-1, -1], [-1, -1]])
+    assert column_tags_at(iters, sw, 0).tolist() == [1, 1, 0]
+    assert column_tags_at(iters, sw, 3).tolist() == [2, 1, 0]
+    assert column_tags_at(iters, sw, 6).tolist() == [2, 0, 0]
+    assert column_tags_at(iters, sw, 7).tolist() == [3, 0, 0]
+    assert column_tags_at(iters, sw, 10).tolist() == [0, 0, 0]
+
+
+def test_batched_run_bytes_charges_matrix_once():
+    """The whole-run account: matrix segment bytes once per iteration --
+    strictly under nrhs independent runs, and equal to the single-RHS
+    trajectory account at nrhs=1."""
+    a = G.poisson2d(16)
+    g = pack_csr(a, k=8)
+    b = _rhs_block(a, 4, seed=8)
+    kw = dict(tol=1e-8, maxiter=3000, params=_fast_params())
+    res = solve_cg_batched(g, b, **kw)
+    batched = batched_run_bytes(g, res.iters, res.switch_iters)
+    independent = sum(
+        batched_run_bytes(g, res.iters[j:j + 1], res.switch_iters[j:j + 1])
+        for j in range(4)
+    )
+    assert batched < independent
+    # nrhs=1 reduction: equals the per-iteration sum of the single run.
+    j0 = batched_run_bytes(g, res.iters[:1], res.switch_iters[:1])
+    want = sum(
+        iteration_stream_bytes(
+            g, int(column_tags_at(res.iters[:1], res.switch_iters[:1], i)[0])
+        )
+        for i in range(int(res.iters[0]))
+    )
+    assert j0 == want
+
+
+def test_batched_run_bytes_nrhs4_under_2x_single():
+    """Acceptance bound on the trajectory account: a 4-RHS batched run on
+    the stream-dominated matrix costs < 2x ONE column's run (and the
+    per-iteration figures behave the same way)."""
+    a = G.random_spd(600, seed=5)
+    g = pack_csr(a, k=8)
+    b = _rhs_block(a, 4, seed=9)
+    kw = dict(tol=1e-8, maxiter=3000, params=_fast_params())
+    res = solve_cg_batched(g, b, **kw)
+    assert bool(res.converged.all())
+    four = batched_run_bytes(g, res.iters, res.switch_iters)
+    one = batched_run_bytes(g, res.iters[:1], res.switch_iters[:1])
+    # The single-column run does fewer iterations than the widest column;
+    # normalize per iteration for the 2x bound.
+    four_per_it = four / int(np.asarray(res.iters).max())
+    one_per_it = one / int(res.iters[0])
+    assert four_per_it < 2 * one_per_it
+
+
+# ---------------------------------------------------------------------------
+# Shape-normalization satellite: (n,) vs (n, 1) + clear errors
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("solver", ["cg", "pcg", "gmres"])
+def test_solvers_accept_column_vector_rhs(solver):
+    a = G.poisson2d(8)
+    g = pack_csr(a, k=8)
+    b = _rhs_block(a, 1, seed=10)[:, 0]
+    params = _fast_params()
+    if solver == "cg":
+        run = lambda bb, **kw: solve_cg(g, bb, tol=1e-8, maxiter=2000,
+                                        params=params, **kw)
+    elif solver == "pcg":
+        m = make_jacobi(a, k=8)
+        run = lambda bb, **kw: solve_pcg(g, bb, m, tol=1e-8, maxiter=2000,
+                                         params=params, **kw)
+    else:
+        op = make_gse_operator(g)
+        run = lambda bb, **kw: solve_gmres(op, bb, tol=1e-8, maxiter=2000,
+                                           params=params, **kw)
+    flat = run(b)
+    colv = run(b[:, None])
+    assert flat.x.shape == (a.shape[0],)
+    assert colv.x.shape == (a.shape[0], 1)  # solution in b's layout
+    np.testing.assert_array_equal(np.asarray(flat.x),
+                                  np.asarray(colv.x[:, 0]))
+    assert int(flat.iters) == int(colv.iters)
+    # (n, 1) x0 with (n,) b is fine too (normalized to one layout).
+    mixed = run(b, x0=jnp.zeros((a.shape[0], 1)))
+    np.testing.assert_array_equal(np.asarray(flat.x), np.asarray(mixed.x))
+
+
+@pytest.mark.parametrize("solver", ["cg", "pcg", "gmres"])
+def test_solvers_reject_bad_rhs_shapes_and_dtypes(solver):
+    a = G.poisson2d(8)
+    g = pack_csr(a, k=8)
+    n = a.shape[0]
+    b = _rhs_block(a, 1, seed=11)[:, 0]
+    if solver == "cg":
+        run = lambda bb, **kw: solve_cg(g, bb, **kw)
+    elif solver == "pcg":
+        m = make_jacobi(a, k=8)
+        run = lambda bb, **kw: solve_pcg(g, bb, m, **kw)
+    else:
+        op = make_gse_operator(g)
+        run = lambda bb, **kw: solve_gmres(op, bb, **kw)
+    with pytest.raises(ValueError, match=r"\(n,\) or \(n, 1\)"):
+        run(jnp.zeros((n, 2)))
+    with pytest.raises(ValueError, match=r"\(n,\) or \(n, 1\)"):
+        run(jnp.zeros((2, 3, 4)))
+    with pytest.raises(ValueError, match="x0 must be"):
+        run(b, x0=jnp.zeros((n, 3)))
+    with pytest.raises(ValueError, match="shape mismatch"):
+        run(b, x0=jnp.zeros((n + 1,)))
+    with pytest.raises(ValueError, match="dtype mismatch"):
+        run(b, x0=jnp.zeros((n,), jnp.float32))
+
+
+def test_final_correction_preserves_rhs_layout():
+    a = G.random_spd(300, seed=12)
+    g = pack_csr(a, k=8)
+    b = _rhs_block(a, 1, seed=12)
+    res = solve_cg(g, b, tol=1e-6, maxiter=6000, params=_fast_params(),
+                   final_correction=True)
+    assert res.x.shape == b.shape

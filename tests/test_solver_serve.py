@@ -1,0 +1,154 @@
+"""Tests for the request-batching solve service (launch/solver_serve.py).
+
+The serving front-end must: pack registered operators once, bucket and
+pad requests into batch slots, return per-request reports that match the
+direct solver exactly, and account the batch's modeled byte stream
+(matrix bytes once per iteration, split across the requests sharing the
+pass).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import precision as P
+from repro.launch.solver_serve import SolverService
+from repro.sparse import generators as G
+from repro.sparse.csr import pack_csr
+from repro.sparse.spmv import spmv
+from repro.solvers import make_jacobi, solve_cg, solve_pcg
+from repro.solvers.batched import batched_run_bytes
+
+
+def _params():
+    return P.MonitorParams(t=30, l=30, m=15, rsd_limit=0.5, reldec_limit=0.45)
+
+
+def _mk_service(a, slots=4, precond=None, maxiter=20000):
+    svc = SolverService(slots=slots, params=_params(), maxiter=maxiter)
+    svc.register("op", a, k=8, precond=precond)
+    return svc
+
+
+def _rhs(a, seed):
+    rng = np.random.default_rng(seed)
+    return spmv(a, jnp.asarray(rng.normal(size=a.shape[1])))
+
+
+def test_reports_match_direct_solver():
+    """A padded 3-request batch reports exactly what 3 direct solve_cg
+    runs report (the batched solver's bit-identity surfaces end to end)."""
+    a = G.poisson2d(12)
+    g = pack_csr(a, k=8)
+    svc = _mk_service(a, slots=4)
+    ids = [svc.submit("op", _rhs(a, s), tol=1e-8) for s in range(3)]
+    reports = svc.flush()
+    assert set(reports) == set(ids)
+    for s, rid in enumerate(ids):
+        rep = reports[rid]
+        direct = solve_cg(g, _rhs(a, s), tol=1e-8, maxiter=20000,
+                          params=_params())
+        assert rep.iters == int(direct.iters)
+        assert rep.relres == float(direct.relres)
+        assert rep.converged and bool(direct.converged)
+        assert rep.tag == int(direct.tag)
+        np.testing.assert_array_equal(rep.switch_iters,
+                                      np.asarray(direct.switch_iters))
+        assert rep.batch_size == 3
+        assert rep.est_bytes > 0
+        np.testing.assert_array_equal(np.asarray(svc.solution(rid)),
+                                      np.asarray(direct.x))
+    assert svc.stats["batches"] == 1
+    assert svc.stats["padded_cols"] == 1
+    with pytest.raises(KeyError, match="no flushed solution"):
+        svc.solution(ids[0])  # popped above
+
+
+def test_preconditioned_handle_matches_direct_pcg():
+    ill = G.ill_conditioned_spd(24, 8.0)
+    gi = pack_csr(ill, k=8)
+    mi = make_jacobi(ill, k=8)
+    svc = _mk_service(ill, slots=2, precond="jacobi")
+    rid = svc.submit("op", _rhs(ill, 3), tol=1e-10)
+    rep = svc.flush()[rid]
+    direct = solve_pcg(gi, _rhs(ill, 3), mi, tol=1e-10, maxiter=20000,
+                       params=_params())
+    assert rep.iters == int(direct.iters)
+    assert rep.relres == float(direct.relres)
+
+
+def test_buckets_by_tolerance_and_overflow_slots():
+    """Requests at different tolerances run in different batches; more
+    requests than slots split into multiple slots."""
+    a = G.poisson2d(10)
+    svc = _mk_service(a, slots=2)
+    ids_tight = [svc.submit("op", _rhs(a, s), tol=1e-10) for s in range(3)]
+    ids_loose = [svc.submit("op", _rhs(a, s), tol=1e-4) for s in range(2)]
+    reports = svc.flush()
+    assert len(reports) == 5
+    # 3 tight requests at 2 slots -> 2 batches; 2 loose -> 1 batch.
+    assert svc.stats["batches"] == 3
+    for rid in ids_tight:
+        assert reports[rid].relres <= 1e-10
+    for rid in ids_loose:
+        assert reports[rid].converged
+    # Looser requests stop earlier than the same RHS solved tightly.
+    assert reports[ids_loose[0]].iters < reports[ids_tight[0]].iters
+
+
+def test_byte_shares_sum_to_batch_total():
+    """Per-request byte shares partition the batched_run_bytes total."""
+    a = G.random_spd(400, seed=6)
+    g = pack_csr(a, k=8)
+    svc = _mk_service(a, slots=4)
+    ids = [svc.submit("op", _rhs(a, s), tol=1e-8) for s in range(4)]
+    reports = svc.flush()
+    res_bytes = sum(reports[r].est_bytes for r in ids)
+    # Shares are rounded per column, the total once: equal to within
+    # one byte per column.
+    assert svc.stats["modeled_bytes"] == pytest.approx(res_bytes,
+                                                       abs=len(ids))
+    # ... and the batch total is far below 4 independent runs' matrix cost.
+    assert svc.stats["modeled_bytes"] < sum(
+        reports[r].iters for r in ids
+    ) * g.bytes_touched(3)
+
+
+def test_submit_validation():
+    a = G.poisson2d(8)
+    svc = _mk_service(a)
+    with pytest.raises(KeyError, match="unknown handle"):
+        svc.submit("nope", jnp.zeros((a.shape[0],)))
+    with pytest.raises(ValueError, match="b must be"):
+        svc.submit("op", jnp.zeros((a.shape[0] + 1,)))
+    with pytest.raises(ValueError, match="b must be"):
+        svc.submit("op", jnp.zeros((a.shape[0], 2)))
+    # (n, 1) b AND (n, 1) x0 are accepted (shape-normalization satellite).
+    n = a.shape[0]
+    rid = svc.submit("op", jnp.asarray(_rhs(a, 0))[:, None],
+                     x0=jnp.zeros((n, 1)))
+    assert rid in svc.flush()
+    with pytest.raises(ValueError, match="x0 shape"):
+        svc.submit("op", _rhs(a, 0), x0=jnp.zeros((n, 2)))
+    with pytest.raises(ValueError, match="already registered"):
+        svc.register("op", a)
+    with pytest.raises(ValueError, match="unknown preconditioner"):
+        svc.register("op2", a, precond="ilu")
+    with pytest.raises(ValueError, match="slots"):
+        SolverService(slots=0)
+
+
+def test_padding_does_not_perturb_requests():
+    """The same request reports identically whether its slot is full or
+    mostly padding."""
+    a = G.poisson2d(12)
+    b = _rhs(a, 9)
+    svc1 = _mk_service(a, slots=1)
+    svc4 = _mk_service(a, slots=4)
+    rid1 = svc1.submit("op", b, tol=1e-8)
+    r1 = svc1.flush()[rid1]
+    rid4 = svc4.submit("op", b, tol=1e-8)
+    r4 = svc4.flush()[rid4]
+    assert (r1.iters, r1.relres, r1.tag) == (r4.iters, r4.relres, r4.tag)
+    # Padding columns converge at iteration 0: they add no iterations and
+    # no vector traffic, so the matrix-stream share is identical too.
+    assert r1.est_bytes == r4.est_bytes

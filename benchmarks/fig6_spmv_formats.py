@@ -16,8 +16,54 @@ import numpy as np
 
 from benchmarks.common import emit, time_fn
 from repro.sparse import generators as G
-from repro.sparse.csr import pack_csr
+from repro.sparse.csr import ell_layout, pack_csr
 from repro.sparse.spmv import spmv, spmv_gse
+
+
+def skewed_layout_case(n: int = 1024, seed: int = 0) -> dict:
+    """Uniform-ELL vs SELL-C-σ padding on the skewed benchmark matrix
+    (DESIGN.md §12) -- the ``run.py --quick`` CI job gates on this.
+
+    Reports, per layout and per tag, the ACTUAL padded slots the packed
+    kernels stream (``bytes_touched``), the effective bytes/nnz, and
+    ``padding_ratio`` (wasted-slot fraction) -- the numbers the nnz-only
+    format figures above cannot see.  Also cross-checks that the SELL
+    reference SpMV matches the CSR reference bitwise (the layouts differ
+    in traffic, never in arithmetic).
+    """
+    from repro.kernels.ops import sell_pack_gsecsr
+
+    a = G.skewed_spd(n, seed=seed)
+    g = pack_csr(a, k=8)
+    sell = sell_pack_gsecsr(g)
+    layouts = {"ell": ell_layout(g), "sell": sell}
+
+    x = jnp.ones((a.shape[1],), jnp.float64)
+    want = np.asarray(spmv_gse(g, x, tag=1))
+    got = np.asarray(spmv_gse(sell, x, tag=1))
+    if not np.array_equal(want, got):
+        raise AssertionError("SELL reference SpMV diverged from CSR")
+
+    out = {"matrix": f"skewed_{n}", "nnz": int(a.nnz), "layouts": {}}
+    for name, lay in layouts.items():
+        row = dict(
+            slots=int(lay.slots),
+            padding_ratio=float(lay.padding_ratio),
+            **{f"bytes_touched_tag{t}": int(lay.bytes_touched(t))
+               for t in (1, 2, 3)},
+            bytes_per_nnz_tag1=lay.bytes_touched(1) / a.nnz,
+        )
+        if name == "sell":
+            row["widths"] = list(sell.widths)
+            row["us_spmv_tag1"] = time_fn(
+                lambda: spmv_gse(sell, x, tag=1), iters=3
+            )
+        out["layouts"][name] = row
+        emit(f"fig6/skewed_{n}/{name}", row.get("us_spmv_tag1", 0.0),
+             f"padding_ratio={row['padding_ratio']:.4f} "
+             f"tag1B/nnz={row['bytes_per_nnz_tag1']:.2f} "
+             f"slots={row['slots']}")
+    return out
 
 
 def run(quick: bool = False) -> dict:
@@ -67,6 +113,12 @@ def run(quick: bool = False) -> dict:
         better = (rows["gse_h"]["err"] <= rows["fp16"]["err"] + 1e-300 and
                   rows["gse_h"]["err"] <= rows["bf16"]["err"] + 1e-300)
         emit(f"fig6/{name}/gse_head_beats_16bit", 0.0, str(better))
+    # Padding-honest layout comparison on the skewed worst case
+    # (DESIGN.md §12): what the nnz-only rows above cannot show.  The
+    # size stays 1024 in quick mode -- the dense-row blowup the gate
+    # bounds needs the dense rows >> one lane tile, and the case is a
+    # host-side pack + one jnp SpMV, not a kernel sweep.
+    out["skewed_layouts"] = skewed_layout_case(1024)
     return out
 
 

@@ -55,12 +55,17 @@ def _timed(solver, op, b, **kw):
     return res, time.perf_counter() - t0
 
 
-def _gse_run_bytes(g, iters, switch_iters, precond=None):
+def _gse_run_bytes(g, iters, switch_iters, precond=None, layout=None):
     """Modeled matrix(+preconditioner)-stream bytes of a stepped run: each
     iteration is charged ``iteration_stream_bytes(g, tag, precond)`` for
     the tag it actually ran at, using the recorded switch iterations to
     split the trajectory -- so preconditioner bytes follow the schedule
-    too (a tag-1 iteration pays 2 B per stored preconditioner entry)."""
+    too (a tag-1 iteration pays 2 B per stored preconditioner entry).
+
+    ``layout`` (a ``GSESellC``/``ELLLayout``) switches every iteration to
+    the padding-honest account -- actual padded slots instead of nnz only
+    (DESIGN.md §12) -- so skewed-matrix trajectories stop under-reporting
+    what the packed kernels really stream."""
     iters = int(iters)
     sw = np.asarray(switch_iters)
     t2 = int(sw[0]) if sw[0] >= 0 else iters  # first tag-2 iteration
@@ -68,9 +73,9 @@ def _gse_run_bytes(g, iters, switch_iters, precond=None):
     n1 = max(min(t2, iters), 0)
     n3 = max(iters - t3, 0)
     n2 = max(iters - n1 - n3, 0)
-    return (n1 * iteration_stream_bytes(g, 1, precond)
-            + n2 * iteration_stream_bytes(g, 2, precond)
-            + n3 * iteration_stream_bytes(g, 3, precond))
+    return (n1 * iteration_stream_bytes(g, 1, precond, layout=layout)
+            + n2 * iteration_stream_bytes(g, 2, precond, layout=layout)
+            + n3 * iteration_stream_bytes(g, 3, precond, layout=layout))
 
 
 def batched_case(a, g, nrhs: int, params=_PARAMS, tol=1e-6,
@@ -112,7 +117,15 @@ def batched_case(a, g, nrhs: int, params=_PARAMS, tol=1e-6,
     )
 
 
-def run(precond: str = "none", nrhs: int = 1) -> dict:
+def run(precond: str = "none", nrhs: int = 1, layout: str = "nnz") -> dict:
+    """``layout="sell"`` switches the GSE rows' byte model to the
+    padding-honest account: each case's operator is SELL-C-σ packed
+    (``kernels.ops.sell_pack_gsecsr``) and every stepped iteration is
+    charged the layout's ACTUAL padded slots (DESIGN.md §12) -- what the
+    packed kernels really stream on skewed matrices.  The ``"nnz"``
+    default keeps the encoding-only figures unchanged."""
+    if layout not in ("nnz", "sell"):
+        raise ValueError(f"unknown layout {layout!r}; expected 'nnz'/'sell'")
     out = {}
     cases = []
     for i, (name, a) in enumerate(list(G.cg_suite(small=True).items())[:4]):
@@ -183,6 +196,11 @@ def run(precond: str = "none", nrhs: int = 1) -> dict:
         # the tag it actually ran at, split by the recorded switch points.
         store = {"fp64": jnp.float64, "fp16": jnp.float16,
                  "bf16": jnp.bfloat16}
+        lay = None
+        if layout == "sell":
+            from repro.kernels.ops import sell_pack_gsecsr
+
+            lay = sell_pack_gsecsr(g)
         run_bytes = {}
         for label, r in rows.items():
             if label in store:
@@ -193,7 +211,8 @@ def run(precond: str = "none", nrhs: int = 1) -> dict:
                 # stream at the per-iteration tag actually run.
                 run_bytes[label] = _gse_run_bytes(
                     g, r["iters"], r["switch_iters"],
-                    precond=m if label == "gse_pcg" else None)
+                    precond=m if label == "gse_pcg" else None,
+                    layout=lay)
         for label, r in rows.items():
             modeled = run_bytes["fp64"] / max(run_bytes[label], 1)
             per_it = run_bytes[label] / max(r["iters"], 1) / max(a.nnz, 1)

@@ -39,19 +39,47 @@ if str(_REPO_ROOT) not in sys.path:  # allow `python benchmarks/run.py`
 
 
 def run_quick(out_path: pathlib.Path | None = None) -> dict:
-    """CI smoke mode: trimmed SpMV format sweep -> BENCH_spmv.json."""
+    """CI smoke mode: trimmed SpMV format sweep -> BENCH_spmv.json.
+
+    The ``skewed_layouts`` entry compares uniform-ELL vs SELL-C-σ padding
+    on the skewed benchmark matrix and is gated (DESIGN.md §12): the SELL
+    layout must waste < 50% of uniform ELL's padded-slot fraction, stream
+    < 50% of its modeled tag-1 bytes, and keep tag-1 effective bytes
+    within 10% of the 6 B/nnz the format promises.  The JSON is written
+    BEFORE the gate raises so a failing run still uploads diagnostics.
+    """
     from benchmarks import fig6_spmv_formats
 
     results = fig6_spmv_formats.run(quick=True)
     payload = {
         "bench": "spmv_formats_quick",
         "schema": "matrix -> format -> {us, err, gflops, bytes_per_nnz, "
-                  "bytes_touched, model_gbps}",
+                  "bytes_touched, model_gbps}; skewed_layouts -> "
+                  "{ell, sell} -> {slots, padding_ratio, bytes_touched_tagT,"
+                  " bytes_per_nnz_tag1}",
         "results": results,
     }
     path = out_path or (_REPO_ROOT / "BENCH_spmv.json")
     path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
     print(f"wrote {path}", file=sys.stderr)
+
+    lay = results["skewed_layouts"]["layouts"]
+    sell, ell = lay["sell"], lay["ell"]
+    if not sell["padding_ratio"] < 0.5 * ell["padding_ratio"]:
+        raise SystemExit(
+            f"skewed smoke: SELL padding_ratio {sell['padding_ratio']:.4f} "
+            f"not < 0.5x uniform-ELL's {ell['padding_ratio']:.4f}"
+        )
+    if not sell["bytes_touched_tag1"] < 0.5 * ell["bytes_touched_tag1"]:
+        raise SystemExit(
+            f"skewed smoke: SELL tag-1 bytes {sell['bytes_touched_tag1']} "
+            f"not < 50% of uniform-ELL's {ell['bytes_touched_tag1']}"
+        )
+    if abs(sell["bytes_per_nnz_tag1"] - 6.0) / 6.0 > 0.10:
+        raise SystemExit(
+            f"skewed smoke: SELL tag-1 effective {sell['bytes_per_nnz_tag1']:.3f} "
+            "B/nnz strayed > 10% from the 6 B/nnz format promise"
+        )
     return payload
 
 
@@ -111,6 +139,10 @@ def main() -> None:
                          "batched stepped-CG rows to fig89, or (with "
                          "--quick) runs the batched smoke and writes "
                          "BENCH_batch.json")
+    ap.add_argument("--layout", default="nnz", choices=["nnz", "sell"],
+                    help="fig89 byte model: 'sell' charges the GSE rows "
+                         "the SELL-C-sigma layout's actual padded slots "
+                         "instead of nnz only (DESIGN.md section 12)")
     args = ap.parse_args()
     if args.quick and args.only:
         ap.error("--quick and --only are mutually exclusive")
@@ -138,7 +170,7 @@ def main() -> None:
         "fig6": fig6_spmv_formats.run,
         "tab34": tab34_solver_convergence.run,
         "fig89": partial(fig89_solver_time.run, precond=args.precond,
-                         nrhs=args.nrhs),
+                         nrhs=args.nrhs, layout=args.layout),
         "lm": lm_gse_serving.run,
         "roofline": roofline.run,
     }

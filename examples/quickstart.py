@@ -141,6 +141,30 @@ def main():
           + " ".join(f"nrhs={m}:{iteration_stream_bytes(g, 1, nrhs=m)}"
                      for m in (1, 4)))
 
+    # --- 7. SELL-C-sigma layout: padding-honest bytes on skewed rows -----
+    # Uniform ELL pads EVERY row to the longest row's width, so a few
+    # dense rows blow up the streamed bytes for the whole matrix.  The
+    # sliced layout (DESIGN.md section 12) sorts rows by length in
+    # sigma-windows and pads each C-row slice only to its own width;
+    # solver trajectories through it are bit-identical to the CSR
+    # reference, only the traffic changes.
+    from repro.kernels.ops import sell_pack_gsecsr
+    from repro.sparse.csr import ell_layout
+
+    sk = G.skewed_spd(512, seed=0)           # power-law rows + dense hubs
+    gsk = pack_csr(sk, k=8)
+    sell = sell_pack_gsecsr(gsk)             # cached on the instance
+    ell = ell_layout(gsk)
+    print(f"\nskewed matrix ({sk.nnz} nnz, widths {list(sell.widths)}):")
+    print(f"  uniform ELL : padding_ratio={ell.padding_ratio:.3f} "
+          f"tag-1 {ell.bytes_touched(1) / sk.nnz:.1f} B/nnz")
+    print(f"  SELL-C-sigma: padding_ratio={sell.padding_ratio:.3f} "
+          f"tag-1 {sell.bytes_touched(1) / sk.nnz:.1f} B/nnz")
+    res_sell = solve_cg(sell, spmv(sk, jnp.ones((sk.shape[1],))),
+                        tol=1e-8, maxiter=2000, params=fast)
+    print(f"  solve_cg over the SELL pack: iters={int(res_sell.iters)} "
+          f"relres={float(res_sell.relres):.2e} (bit-identical to CSR)")
+
 
 if __name__ == "__main__":
     main()

@@ -42,7 +42,8 @@ from jax.experimental import pallas as pl
 
 from repro.kernels.gse_spmv import LANE, decode_tile, spmv_operand_names
 
-__all__ = ["gse_spmm_pallas", "gse_spmm_call", "spmm_operand_names", "LANE"]
+__all__ = ["gse_spmm_pallas", "gse_spmm_call", "gse_spmm_sell_call",
+           "spmm_operand_names", "LANE"]
 
 # The multi-RHS kernel streams the SAME matrix segment list as the SpMV,
 # whatever nrhs is -- one name owns the layout (asserted in tests).
@@ -145,3 +146,19 @@ gse_spmm_pallas = functools.partial(
     jax.jit,
     static_argnames=("ei_bit", "tag", "blocks", "interpret"),
 )(gse_spmm_call)
+
+
+def gse_spmm_sell_call(buckets, unperm, x, scales, *, ei_bit: int, tag: int,
+                       blocks=(8, 128), interpret: bool = True):
+    """Sliced-ELL SpMM: the multi-RHS twin of
+    :func:`repro.kernels.gse_spmv.gse_spmv_sell_call` -- one tag-
+    specialized ``pallas_call`` per width-bucket, same per-bucket operand
+    lists, matrix segments streamed once for all ``nrhs`` columns, row
+    order restored by the ``unperm`` gather (DESIGN.md §12)."""
+    outs = [
+        gse_spmm_call(colpak, head, tail1, tail2, x, scales, ei_bit=ei_bit,
+                      tag=tag, blocks=blocks, interpret=interpret)
+        for colpak, head, tail1, tail2 in buckets
+    ]
+    y = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+    return y[unperm]

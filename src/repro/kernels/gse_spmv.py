@@ -44,8 +44,8 @@ from jax.experimental import pallas as pl
 
 from repro.kernels.gse_decode import _select_scale
 
-__all__ = ["gse_spmv_pallas", "gse_spmv_call", "spmv_operand_names",
-           "decode_tile", "LANE"]
+__all__ = ["gse_spmv_pallas", "gse_spmv_call", "gse_spmv_sell_call",
+           "spmv_operand_names", "decode_tile", "LANE"]
 
 LANE = 128  # TPU vector-lane count; output accumulator minor dim
 
@@ -170,3 +170,33 @@ gse_spmv_pallas = functools.partial(
     jax.jit,
     static_argnames=("ei_bit", "tag", "blocks", "interpret"),
 )(gse_spmv_call)
+
+
+def gse_spmv_sell_call(buckets, unperm, x, scales, *, ei_bit: int, tag: int,
+                       blocks=(8, 128), interpret: bool = True):
+    """Sliced-ELL SpMV: one tag-specialized ``pallas_call`` per width-bucket
+    (DESIGN.md §12), reusing the uniform-ELL kernel body (``decode_tile``)
+    unchanged.
+
+    ``buckets`` is a tuple of per-bucket ``(colpak, head, tail1, tail2)``
+    segment tuples, each ``(rows_b, w_b)`` with ``rows_b`` a multiple of
+    ``blocks[0]`` and ``w_b`` of ``blocks[1]``; tails are ``None`` for the
+    tags that skip them, exactly as in :func:`gse_spmv_call` -- the per-
+    bucket operand lists stay tag-specialized and jaxpr-checkable.  Bucket
+    rows are σ-sorted slice rows; ``unperm`` maps each ORIGINAL row to its
+    position in the bucket concatenation, so the epilogue gather restores
+    row order.
+
+    Per-row arithmetic is IDENTICAL to the uniform-ELL kernel: a row's
+    entries occupy the same in-row slots, the lane-group partial sums run
+    over the same ascending slot groups, and trailing all-zero groups the
+    uniform layout would add contribute exact zeros -- so SELL and uniform
+    ELL outputs are equal (asserted bitwise in tests/test_sell.py).
+    """
+    outs = [
+        gse_spmv_call(colpak, head, tail1, tail2, x, scales, ei_bit=ei_bit,
+                      tag=tag, blocks=blocks, interpret=interpret)
+        for colpak, head, tail1, tail2 in buckets
+    ]
+    y = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+    return y[unperm]

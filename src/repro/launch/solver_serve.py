@@ -70,7 +70,7 @@ class SolveReport:
 class _Operator:
     name: str
     csr: CSR
-    gse: "object"     # GSECSR, packed once at registration
+    gse: "object"     # GSECSR or GSESellC, packed once at registration
     precond: object   # precond object or None
 
 
@@ -101,14 +101,25 @@ class SolverService:
     # -- registration ------------------------------------------------------
 
     def register(self, name: str, a: CSR, k: int = 8,
-                 precond: str | object | None = None) -> str:
+                 precond: str | object | None = None,
+                 layout: str = "csr") -> str:
         """Pack ``a`` (and optionally a preconditioner) once; returns the
         handle requests are submitted against.  ``precond`` is ``None``,
         ``"jacobi"``/``"spai0"``, or a ready :mod:`repro.solvers.precond`
         object (Carson-Khan-style setup reuse: one packed preconditioner
-        serves every request against the handle)."""
+        serves every request against the handle).
+
+        ``layout="sell"`` additionally packs the operator into the
+        SELL-C-σ sliced layout (``kernels.ops.sell_pack_gsecsr``, cached
+        on the packed instance -- DESIGN.md §12): trajectories are
+        bit-identical to the ``"csr"`` default, but byte reports charge
+        the layout's ACTUAL padded slots instead of nnz only."""
         if name in self._ops:
             raise ValueError(f"handle {name!r} already registered")
+        if layout not in ("csr", "sell"):
+            raise ValueError(
+                f"unknown layout {layout!r}; expected 'csr' or 'sell'"
+            )
         if isinstance(precond, str):
             try:
                 precond = _PRECOND_FACTORY[precond](a, k=k)
@@ -117,8 +128,13 @@ class SolverService:
                     f"unknown preconditioner {precond!r}; expected one of "
                     f"{sorted(_PRECOND_FACTORY)}"
                 ) from None
+        gse = pack_csr(a, k=k)
+        if layout == "sell":
+            from repro.kernels.ops import sell_pack_gsecsr
+
+            gse = sell_pack_gsecsr(gse)
         self._ops[name] = _Operator(
-            name=name, csr=a, gse=pack_csr(a, k=k), precond=precond
+            name=name, csr=a, gse=gse, precond=precond
         )
         return name
 
@@ -263,6 +279,9 @@ def main():
     ap.add_argument("--n", type=int, default=24, help="Poisson grid side")
     ap.add_argument("--precond", default="none",
                     choices=["none", "jacobi", "spai0"])
+    ap.add_argument("--layout", default="csr", choices=["csr", "sell"],
+                    help="operator pack: 'sell' rides the SELL-C-sigma "
+                         "sliced layout (padding-honest byte reports)")
     ap.add_argument("--tol", type=float, default=1e-8)
     args = ap.parse_args()
 
@@ -271,7 +290,8 @@ def main():
                              reldec_limit=0.45)
     svc = SolverService(slots=args.slots, params=params, maxiter=20000)
     svc.register("poisson", a, k=8,
-                 precond=None if args.precond == "none" else args.precond)
+                 precond=None if args.precond == "none" else args.precond,
+                 layout=args.layout)
 
     rng = np.random.default_rng(0)
     ids = []

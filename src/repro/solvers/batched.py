@@ -38,7 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import precision as P
-from repro.sparse.csr import GSECSR, iteration_stream_bytes
+from repro.sparse.csr import GSECSR, GSESellC, iteration_stream_bytes
 from repro.solvers.cg import _record_switch
 
 __all__ = [
@@ -236,7 +236,7 @@ def solve_cg_batched(
     if params is None:
         params = P.MonitorParams.for_cg()
     tol_ = jnp.asarray(tol, b.dtype)
-    if isinstance(apply_a, GSECSR):
+    if isinstance(apply_a, (GSECSR, GSESellC)):
         return _solve_cg_batched_fused(apply_a, b, x0, tol_, maxiter, params)
     return _solve_cg_batched(apply_a, b, x0, tol_, maxiter, params)
 
@@ -313,11 +313,12 @@ def solve_pcg_batched(
     if params is None:
         params = P.MonitorParams.for_cg()
     tol_ = jnp.asarray(tol, b.dtype)
-    if isinstance(apply_a, GSECSR) and hasattr(precond, "apply_at"):
+    if isinstance(apply_a, (GSECSR, GSESellC)) and hasattr(precond,
+                                                           "apply_at"):
         return _solve_pcg_batched_fused(apply_a, precond, b, x0, tol_,
                                         maxiter, params)
     apply_m = precond if callable(precond) else precond.apply
-    if isinstance(apply_a, GSECSR):
+    if isinstance(apply_a, (GSECSR, GSESellC)):
         from repro.solvers.cg import _gsecsr_operator
 
         apply_a = _gsecsr_operator(apply_a)
@@ -357,7 +358,7 @@ def solve_ir_batched(
         params = P.MonitorParams.for_cg()
     nrhs = b.shape[1]
 
-    if isinstance(apply_a, GSECSR):
+    if isinstance(apply_a, (GSECSR, GSESellC)):
         from repro.solvers.cg import _gsecsr_operator
 
         apply_tagged = _gsecsr_operator(apply_a)

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import precision as P
-from repro.sparse.csr import GSECSR
+from repro.sparse.csr import GSECSR, GSESellC
 
 __all__ = ["CGResult", "solve_cg", "solve_pcg"]
 
@@ -352,8 +352,8 @@ def _finish_with_correction(res, b, tol, maxiter, apply3, resume):
     )
 
 
-def _gsecsr_operator(a: GSECSR) -> Callable:
-    """Tag-dispatched operator view of a GSECSR, memoized on the instance
+def _gsecsr_operator(a) -> Callable:
+    """Tag-dispatched operator view of a GSECSR/GSESellC, memoized on the instance
     so repeated solves reuse one closure (the closure is a static jit
     argument -- a fresh one per call would retrace the whole solver)."""
     op = a.__dict__.get("_tag_operator")
@@ -398,12 +398,13 @@ def solve_pcg(
     if params is None:
         params = P.MonitorParams.for_cg()
     tol_ = jnp.asarray(tol, b.dtype)
-    fused = isinstance(apply_a, GSECSR) and hasattr(precond, "apply_at")
+    fused = (isinstance(apply_a, (GSECSR, GSESellC))
+             and hasattr(precond, "apply_at"))
     if fused:
         res = _solve_pcg_fused(apply_a, precond, b, x0, tol_, maxiter, params)
     else:
         apply_m = precond if callable(precond) else precond.apply
-        if isinstance(apply_a, GSECSR):
+        if isinstance(apply_a, (GSECSR, GSESellC)):
             apply_a = _gsecsr_operator(apply_a)
         res = _solve_pcg(apply_a, apply_m, b, x0, tol_, maxiter, params)
     if not final_correction:
@@ -460,7 +461,7 @@ def solve_cg(
     if params is None:
         params = P.MonitorParams.for_cg()
     tol_ = jnp.asarray(tol, b.dtype)
-    fused = isinstance(apply_a, GSECSR)
+    fused = isinstance(apply_a, (GSECSR, GSESellC))
     solve = _solve_cg_fused if fused else _solve_cg
     res = solve(apply_a, b, x0, tol_, maxiter, params)
     if not final_correction:

@@ -28,22 +28,22 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.sparse.csr import GSECSR
-from repro.sparse.spmv import _decode_gsecsr
+from repro.sparse.spmv import decode_operand
 
 __all__ = ["fused_cg_step", "fused_pcg_step", "gse_matvec"]
 
 
-def _step_at_tag(a: GSECSR, x, r, p, rs, *, tag: int, acc_dtype):
+def _step_at_tag(a, x, r, p, rs, *, tag: int, acc_dtype):
     """One fused CG iteration at a fixed precision tag.
 
+    ``a`` is a ``GSECSR`` or a SELL-C-σ packed ``GSESellC`` --
+    ``decode_operand`` recovers the same CSR-order values either way, so
+    the layouts share one bit-identical iteration body (DESIGN.md §12).
     Single decoded-value pass: ``val`` is materialized once and feeds both
     the matvec and (via ``ap``) the direction dot; everything downstream of
     the decode fuses into the same program under jit.
     """
-    val, col = _decode_gsecsr(
-        a.colpak, a.head, a.tail1, a.tail2, a.table, a.ei_bit, tag, acc_dtype
-    )
+    val, col = decode_operand(a, tag, acc_dtype)
     ap = jax.ops.segment_sum(
         val * p.astype(acc_dtype)[col], a.row_ids, num_segments=a.shape[0]
     )
@@ -57,10 +57,11 @@ def _step_at_tag(a: GSECSR, x, r, p, rs, *, tag: int, acc_dtype):
     return x2, r2, p2, rs2
 
 
-def fused_cg_step(a: GSECSR, x, r, p, rs, tag, acc_dtype=jnp.float64):
+def fused_cg_step(a, x, r, p, rs, tag, acc_dtype=jnp.float64):
     """Fused CG iteration with traced precision ``tag`` in {1, 2, 3}.
 
-    Returns ``(x', r', p', rs')`` where ``rs' = r'.r'`` is the squared
+    ``a`` is a ``GSECSR`` or ``GSESellC`` operand.  Returns
+    ``(x', r', p', rs')`` where ``rs' = r'.r'`` is the squared
     recursive residual norm (the monitor records ``sqrt(rs')/||b||``).
     """
     return jax.lax.switch(
@@ -74,18 +75,17 @@ def fused_cg_step(a: GSECSR, x, r, p, rs, tag, acc_dtype=jnp.float64):
     )
 
 
-def _pcg_step_at_tag(a: GSECSR, m, x, r, p, rz, *, tag: int, acc_dtype):
+def _pcg_step_at_tag(a, m, x, r, p, rz, *, tag: int, acc_dtype):
     """One fused preconditioned-CG iteration at a fixed precision tag.
 
     The operator decode AND the preconditioner apply run at the same
     static ``tag`` inside one branch, so both streams follow the monitor's
     schedule and neither low-tag branch references its tail segments
-    (DESIGN.md §10).  The arithmetic is the exact op sequence of the
+    (DESIGN.md §10).  ``a`` may be a ``GSECSR`` or ``GSESellC`` (shared
+    ``decode_operand``).  The arithmetic is the exact op sequence of the
     unfused ``_solve_pcg`` body -- bit-identical trajectories.
     """
-    val, col = _decode_gsecsr(
-        a.colpak, a.head, a.tail1, a.tail2, a.table, a.ei_bit, tag, acc_dtype
-    )
+    val, col = decode_operand(a, tag, acc_dtype)
     ap = jax.ops.segment_sum(
         val * p.astype(acc_dtype)[col], a.row_ids, num_segments=a.shape[0]
     )
@@ -101,7 +101,7 @@ def _pcg_step_at_tag(a: GSECSR, m, x, r, p, rz, *, tag: int, acc_dtype):
     return x2, r2, p2, rz2, rr2
 
 
-def fused_pcg_step(a: GSECSR, m, x, r, p, rz, tag, acc_dtype=jnp.float64):
+def fused_pcg_step(a, m, x, r, p, rz, tag, acc_dtype=jnp.float64):
     """Fused PCG iteration with traced precision ``tag`` in {1, 2, 3}.
 
     ``m`` is a preconditioner from ``solvers.precond`` (anything exposing
@@ -120,8 +120,9 @@ def fused_pcg_step(a: GSECSR, m, x, r, p, rz, tag, acc_dtype=jnp.float64):
     )
 
 
-def gse_matvec(a: GSECSR, x, tag, acc_dtype=jnp.float64):
-    """Tag-dispatched ``A @ x`` over a GSECSR (initial residual / checks)."""
+def gse_matvec(a, x, tag, acc_dtype=jnp.float64):
+    """Tag-dispatched ``A @ x`` over a ``GSECSR`` or ``GSESellC`` operand
+    (initial residual / checks); ``spmv_gse`` dispatches on the layout."""
     from repro.sparse.spmv import spmv_gse
 
     return jax.lax.switch(

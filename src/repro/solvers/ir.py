@@ -27,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import precision as P
-from repro.sparse.csr import GSECSR
+from repro.sparse.csr import GSECSR, GSESellC
 from repro.solvers.cg import solve_cg, solve_pcg
 from repro.solvers.gmres import solve_gmres
 
@@ -71,7 +71,7 @@ def solve_ir(
     if inner not in ("cg", "gmres"):
         raise ValueError(f"inner must be 'cg' or 'gmres', got {inner}")
 
-    if isinstance(apply_a, GSECSR):
+    if isinstance(apply_a, (GSECSR, GSESellC)):
         from repro.solvers.cg import _gsecsr_operator
 
         # Memoized on the GSECSR instance: GMRES treats the operator as a

@@ -22,8 +22,12 @@ __all__ = [
 ]
 
 
-def make_gse_operator(a: GSECSR, acc_dtype=jnp.float64) -> Callable:
-    """Three-precision operator over one stored copy (the paper's A1/A2/A3)."""
+def make_gse_operator(a, acc_dtype=jnp.float64) -> Callable:
+    """Three-precision operator over one stored copy (the paper's A1/A2/A3).
+
+    ``a`` is a ``GSECSR`` or a SELL-C-σ packed ``GSESellC``;
+    ``spmv_gse`` dispatches on the layout and the two are bit-identical
+    (DESIGN.md §12)."""
 
     def apply(x, tag):
         return jax.lax.switch(

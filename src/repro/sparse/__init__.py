@@ -1,6 +1,16 @@
-"""Sparse substrate: CSR/ELL containers, generators, SpMV operators."""
+"""Sparse substrate: CSR/ELL/SELL-C-sigma containers, generators, SpMV ops."""
 from repro.sparse import csr, generators, spmv
-from repro.sparse.csr import CSR, GSECSR, from_coo, pack_csr, to_ell
+from repro.sparse.csr import (
+    CSR,
+    ELLLayout,
+    GSECSR,
+    GSESellC,
+    ell_layout,
+    from_coo,
+    pack_csr,
+    pack_sell,
+    to_ell,
+)
 from repro.sparse.spmv import spmv as spmv_csr
 from repro.sparse.spmv import spmv_ell, spmv_gse
 
@@ -9,9 +19,13 @@ __all__ = [
     "generators",
     "spmv",
     "CSR",
+    "ELLLayout",
     "GSECSR",
+    "GSESellC",
+    "ell_layout",
     "from_coo",
     "pack_csr",
+    "pack_sell",
     "to_ell",
     "spmv_csr",
     "spmv_ell",

@@ -28,12 +28,22 @@ from repro.core import gse
 __all__ = [
     "CSR",
     "GSECSR",
+    "GSESellC",
+    "ELLLayout",
     "from_coo",
     "pack_csr",
     "to_ell",
+    "scatter_rows",
+    "sell_slices",
+    "pack_sell",
+    "ell_layout",
     "iteration_stream_bytes",
     "vector_stream_bytes",
 ]
+
+# Matrix-stream bytes one padded slot (or one nnz) costs at each GSE tag:
+# 2/4/8 value-segment bytes + 4 packed-colidx bytes (DESIGN.md §8).
+_SLOT_BYTES = {1: 2 + 4, 2: 4 + 4, 3: 8 + 4}
 
 
 @jax.tree_util.register_pytree_node_class
@@ -112,10 +122,19 @@ class GSECSR:
         """
         return {1: 2, 2: 4, 3: 8}[tag] + 4
 
-    def bytes_touched(self, tag: int) -> int:
+    def bytes_touched(self, tag: int, layout=None) -> int:
         """Modeled HBM bytes one tag-``tag`` SpMV touches in the matrix
-        streams: per-nnz segments + rowptr + the shared-exponent table.
-        Dense x/y traffic is format-independent and excluded."""
+        streams.  Dense x/y traffic is format-independent and excluded.
+
+        ``layout=None`` is the nnz-only mode (per-nnz segments + rowptr +
+        the shared-exponent table) used by the format-comparison figures:
+        it charges what the *encoding* costs, independent of how rows are
+        padded onto tiles.  Passing a packed layout (``GSESellC`` or
+        ``ELLLayout``) charges the ACTUAL padded slots that layout streams
+        -- ``layout.bytes_touched(tag)`` -- so skewed matrices stop
+        under-reporting traffic (DESIGN.md §12)."""
+        if layout is not None:
+            return layout.bytes_touched(tag)
         return (
             self.nnz * self.bytes_per_nnz(tag)
             + self.rowptr.size * 4
@@ -131,6 +150,139 @@ class GSECSR:
     @classmethod
     def tree_unflatten(cls, aux, leaves):
         return cls(*leaves, ei_bit=aux[0], shape=aux[1])
+
+
+@dataclasses.dataclass(frozen=True)
+class ELLLayout:
+    """Padding descriptor of the uniform blocked-ELL pack (DESIGN.md §12).
+
+    Uniform ELL pads EVERY row to the longest row's lane-aligned width, so
+    one dense row on a skewed matrix multiplies the streamed slots for the
+    whole matrix.  This descriptor makes that cost explicit:
+    ``bytes_touched(tag)`` charges every padded slot the kernels actually
+    stream (value segment + packed colidx per slot, plus the shared-
+    exponent table); ``padding_ratio`` is the wasted fraction.
+    """
+
+    rows: int           # padded row count the kernel grid covers
+    width: int          # lane-aligned uniform row width L
+    nnz: int            # real stored entries
+    table_entries: int  # shared-exponent table length
+
+    @property
+    def slots(self) -> int:
+        return self.rows * self.width
+
+    @property
+    def padding_ratio(self) -> float:
+        """Fraction of streamed slots that are padding, in [0, 1)."""
+        return 1.0 - self.nnz / max(self.slots, 1)
+
+    def bytes_touched(self, tag: int) -> int:
+        return self.slots * _SLOT_BYTES[tag] + self.table_entries * 4
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class GSESellC:
+    """Sliced-ELL (SELL-C-σ) view of a :class:`GSECSR` (DESIGN.md §12).
+
+    Rows are sorted by descending length inside windows of ``sigma`` rows
+    (σ-window sort -- the permutation is recoverable and locality-bounded),
+    grouped into slices of ``c`` rows, and each slice is padded only to its
+    OWN lane-aligned width instead of the global maximum.  Slices are then
+    binned by width into a handful of power-of-two width-buckets; each
+    bucket stores its slices' segment arrays as one dense
+    ``(slices*c, width)`` block, so the SpMV/SpMM kernels run one
+    ``pallas_call`` per bucket with exactly the tag-specialized operand
+    list of the uniform-ELL kernels.
+
+    Leaves (per width-bucket tuples + flat metadata):
+
+      * ``colpak/head/tail1/tail2`` -- tuples of ``(rows_b, w_b)`` segment
+        arrays, one entry per width-bucket (ascending widths);
+      * ``gather``  -- (nnz,) flat index of every CSR-order entry inside the
+        concatenation of the row-major bucket arrays (the packed store IS
+        the value store: the reference/solver paths decode through this
+        gather, bit-identical to the CSR decode);
+      * ``perm``    -- (rows_padded,) original row id of each concatenated
+        bucket row (-1 for slice-padding rows);
+      * ``unperm``  -- (m,) position of each original row in that
+        concatenation (``perm[unperm[i]] == i``);
+      * ``row_ids`` -- (nnz,) CSR-order row ids (segment reduction);
+      * ``table``   -- shared-exponent table.
+
+    Static: per-bucket ``widths``, ``c``, ``sigma``, ``lane``, ``ei_bit``,
+    ``shape``.  The byte model charges ACTUAL padded slots
+    (``bytes_touched``); ``padding_ratio`` reports the wasted fraction.
+    """
+
+    colpak: tuple   # per-bucket (rows_b, w_b) uint32
+    head: tuple     # per-bucket (rows_b, w_b) uint16
+    tail1: tuple    # per-bucket (rows_b, w_b) uint16
+    tail2: tuple    # per-bucket (rows_b, w_b) uint32
+    gather: jnp.ndarray   # (nnz,) int32
+    perm: jnp.ndarray     # (rows_padded,) int32, -1 for padding rows
+    unperm: jnp.ndarray   # (m,) int32
+    row_ids: jnp.ndarray  # (nnz,) int32
+    table: jnp.ndarray    # (k,) int32 biased+1
+    widths: Tuple[int, ...]
+    c: int
+    sigma: int
+    lane: int
+    ei_bit: int
+    shape: Tuple[int, int]
+
+    @property
+    def nnz(self) -> int:
+        return self.gather.shape[0]
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.widths)
+
+    @property
+    def bucket_rows(self) -> Tuple[int, ...]:
+        return tuple(cp.shape[0] for cp in self.colpak)
+
+    @property
+    def slots(self) -> int:
+        """Padded slots actually stored/streamed, across all buckets."""
+        return sum(r * w for r, w in zip(self.bucket_rows, self.widths))
+
+    @property
+    def padding_ratio(self) -> float:
+        """Fraction of streamed slots that are padding, in [0, 1)."""
+        return 1.0 - self.nnz / max(self.slots, 1)
+
+    def bytes_per_nnz(self, tag: int) -> float:
+        """EFFECTIVE bytes streamed per nonzero: padded slots amortized
+        over the real entries (the honest twin of
+        ``GSECSR.bytes_per_nnz``, which charges nnz only)."""
+        return _SLOT_BYTES[tag] * self.slots / max(self.nnz, 1)
+
+    def bytes_touched(self, tag: int) -> int:
+        """Modeled HBM bytes one tag-``tag`` SpMV streams through this
+        layout: every padded slot's value segment + packed colidx, the
+        output row permutation, and the shared-exponent table."""
+        return (
+            self.slots * _SLOT_BYTES[tag]
+            + self.perm.shape[0] * 4
+            + self.table.size * 4
+        )
+
+    def tree_flatten(self):
+        leaves = (
+            self.colpak, self.head, self.tail1, self.tail2,
+            self.gather, self.perm, self.unperm, self.row_ids, self.table,
+        )
+        aux = (self.widths, self.c, self.sigma, self.lane, self.ei_bit,
+               self.shape)
+        return leaves, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, *aux)
 
 
 def from_coo(rows, cols, vals, shape) -> CSR:
@@ -220,7 +372,8 @@ def vector_stream_bytes(op, dtype=jnp.float64) -> int:
     return (m + n) * jnp.dtype(dtype).itemsize
 
 
-def iteration_stream_bytes(op, tag, precond=None, nrhs: int = 1) -> int:
+def iteration_stream_bytes(op, tag, precond=None, nrhs: int = 1,
+                           layout=None) -> int:
     """Modeled HBM bytes ONE stepped solver iteration streams at ``tag``.
 
     Sums the operator's matrix streams (``op.bytes_touched``) with the
@@ -239,10 +392,20 @@ def iteration_stream_bytes(op, tag, precond=None, nrhs: int = 1) -> int:
     The first column's vector traffic stays excluded exactly as before
     (it is format-independent and cancels in format comparisons), so
     ``nrhs=1`` reproduces the single-RHS figure identically.
+
+    ``layout`` selects the padding-honest account (DESIGN.md §12): a
+    ``GSESellC`` or ``ELLLayout`` charges the operator's ACTUAL padded
+    slots instead of nnz only.  Passing a ``GSESellC`` as ``op`` itself is
+    equivalent -- its ``bytes_touched`` is already slot-honest.  The
+    default (``layout=None``) keeps the nnz-only mode the format-
+    comparison figures use, unchanged.
     """
     if nrhs < 1:
         raise ValueError(f"nrhs must be >= 1, got {nrhs}")
-    total = op.bytes_touched(tag)
+    if layout is not None:
+        total = layout.bytes_touched(tag)
+    else:
+        total = op.bytes_touched(tag)
     if precond is not None:
         if tag not in (1, 2, 3):
             raise ValueError(
@@ -254,6 +417,52 @@ def iteration_stream_bytes(op, tag, precond=None, nrhs: int = 1) -> int:
     return total
 
 
+def scatter_rows(rowptr, sources, width: int, row_subset=None):
+    """Scatter CSR-ordered entry streams into zero-padded (rows, width)
+    arrays -- the ONE owner of the row-scatter (``to_ell``,
+    ``ops.ell_pack_gsecsr`` and the SELL-C-σ bucket packer all call this;
+    they used to carry drifting copies).
+
+    ``sources`` is a sequence of ``(array, dtype)`` pairs sharing the CSR
+    entry order; each comes back as its own padded array at the requested
+    dtype (padding slots are zero).  ``row_subset`` selects AND orders the
+    rows to scatter (a SELL bucket's permuted slice rows); ``-1`` entries
+    are empty padding rows.  Default: all rows in natural order.
+
+    Returns ``(outs, csr_pos, dest)`` where ``csr_pos`` are the CSR entry
+    indices scattered (in scatter order) and ``dest`` their flat slots in
+    the padded array -- packed layouts record these to recover entries
+    without a rescan.
+    """
+    rowptr = np.asarray(rowptr, np.int64)
+    per_row = np.diff(rowptr)
+    if row_subset is None:
+        row_subset = np.arange(per_row.size)
+    row_subset = np.asarray(row_subset, np.int64)
+    valid = row_subset >= 0
+    safe = np.where(valid, row_subset, 0)
+    lens = np.where(valid, per_row[safe], 0)
+    if lens.size and int(lens.max(initial=0)) > width:
+        raise ValueError(
+            f"row of {int(lens.max())} entries does not fit width {width}"
+        )
+    total = int(lens.sum())
+    starts = np.where(valid, rowptr[safe], 0)
+    # Slot-within-row for every scattered entry, vectorized over rows.
+    offs = np.arange(total, dtype=np.int64) - np.repeat(
+        np.cumsum(lens) - lens, lens
+    )
+    csr_pos = np.repeat(starts, lens) + offs
+    dest = np.repeat(np.arange(row_subset.size, dtype=np.int64) * width,
+                     lens) + offs
+    outs = []
+    for src, dtype in sources:
+        out = np.zeros(row_subset.size * width, dtype)
+        out[dest] = np.asarray(src)[csr_pos]
+        outs.append(out.reshape(row_subset.size, width))
+    return outs, csr_pos, dest
+
+
 def to_ell(a: CSR, lane: int = 128) -> Tuple[np.ndarray, np.ndarray, int]:
     """CSR -> padded ELL (cols[m, L], vals[m, L]); L rounded up to ``lane``.
 
@@ -261,17 +470,124 @@ def to_ell(a: CSR, lane: int = 128) -> Tuple[np.ndarray, np.ndarray, int]:
     (cols, vals, L).  TPU kernels want lane-aligned dense tiles.
     """
     rowptr = np.asarray(a.rowptr, np.int64)
-    col = np.asarray(a.col, np.int64)
-    val = np.asarray(a.val, np.float64)
-    m = a.shape[0]
-    per_row = np.diff(rowptr)
-    L = int(max(1, per_row.max()))
+    L = int(max(1, np.diff(rowptr).max(initial=0)))
     L = ((L + lane - 1) // lane) * lane
-    cols = np.zeros((m, L), np.int32)
-    vals = np.zeros((m, L), np.float64)
-    # Scatter each row's entries into its padded slots.
-    idx_in_row = np.arange(col.shape[0]) - np.repeat(rowptr[:-1], per_row)
-    rows = np.repeat(np.arange(m), per_row)
-    cols[rows, idx_in_row] = col
-    vals[rows, idx_in_row] = val
+    (cols, vals), _, _ = scatter_rows(
+        rowptr, [(a.col, np.int32), (a.val, np.float64)], L
+    )
     return cols, vals, L
+
+
+def ell_layout(a, lane: int = 128) -> ELLLayout:
+    """Padding descriptor of the uniform-ELL pack of ``a`` (a ``GSECSR``
+    or ``CSR``): every row padded to the longest row's lane-aligned width.
+    ``ell_layout(g).padding_ratio`` vs ``pack_sell(g).padding_ratio`` is
+    the skew cost the SELL-C-σ layout removes (DESIGN.md §12)."""
+    per_row = np.diff(np.asarray(a.rowptr, np.int64))
+    L = int(max(1, per_row.max(initial=0)))
+    L = ((L + lane - 1) // lane) * lane
+    table = getattr(a, "table", None)
+    return ELLLayout(
+        rows=a.shape[0], width=L, nnz=a.nnz,
+        table_entries=int(table.size) if table is not None else 0,
+    )
+
+
+def sell_slices(rowptr, c: int = 8, sigma: int | None = None,
+                lane: int = 128):
+    """σ-window sort + slice/bucket plan (host-side static metadata).
+
+    Rows are sorted by DESCENDING length inside windows of ``sigma`` rows
+    (stable, so equal-length rows keep their order and the permutation
+    stays window-local); consecutive runs of ``c`` sorted rows form
+    slices.  Each slice's width is its longest row rounded up to ``lane``;
+    slices are binned into power-of-two multiples of ``lane`` so a
+    pathological width spread still dispatches a handful of kernel calls.
+
+    Returns ``(order, slice_bucket_w, sigma)``: the padded row
+    permutation (length ``ceil(m/c)*c``, ``-1`` marks padding rows),
+    each slice's bucket width, and the EFFECTIVE window size actually
+    sorted with (``None`` -> full sort, floor ``c``) -- the one value
+    callers should record.
+    """
+    per_row = np.diff(np.asarray(rowptr, np.int64))
+    m = per_row.size
+    if c < 1:
+        raise ValueError(f"slice height c must be >= 1, got {c}")
+    sigma = m if sigma is None else max(int(sigma), c)
+    order = np.arange(m, dtype=np.int64)
+    for w0 in range(0, m, sigma):
+        win = order[w0:w0 + sigma]
+        order[w0:w0 + sigma] = win[
+            np.argsort(-per_row[win], kind="stable")
+        ]
+    rows_pad = -(-max(m, 1) // c) * c
+    order = np.concatenate(
+        [order, np.full(rows_pad - m, -1, np.int64)]
+    )
+    lens = np.where(order >= 0, per_row[np.clip(order, 0, None)], 0)
+    slice_max = lens.reshape(-1, c).max(axis=1)
+    slice_w = np.maximum(-(-slice_max // lane) * lane, lane).astype(np.int64)
+    # Power-of-two width buckets: bounded bucket count however the widths
+    # spread, at worst <2x extra padding inside a bucket.
+    bucket_w = lane * (
+        2 ** np.ceil(np.log2(slice_w / lane)).astype(np.int64)
+    )
+    return order, bucket_w, sigma
+
+
+def pack_sell(a: GSECSR, c: int = 8, sigma: int | None = None,
+              lane: int = 128) -> GSESellC:
+    """GSE-SEM CSR -> SELL-C-σ packed layout (DESIGN.md §12).
+
+    ``c`` must divide into the kernels' sublane block (a multiple of 8) so
+    every width-bucket's row count tiles the (8, 128) grid exactly.
+    Prefer :func:`repro.kernels.ops.sell_pack_gsecsr`, which memoizes the
+    pack on the operator instance (solvers repack nothing per call).
+    """
+    if c % 8 != 0:
+        raise ValueError(f"slice height c must be a multiple of 8, got {c}")
+    m = a.shape[0]
+    order, bucket_w, sigma_eff = sell_slices(a.rowptr, c=c, sigma=sigma,
+                                             lane=lane)
+    widths = tuple(int(w) for w in sorted(set(bucket_w.tolist())))
+    segs = [
+        (a.colpak, np.uint32),
+        (a.head, np.uint16),
+        (a.tail1, np.uint16),
+        (a.tail2, np.uint32),
+    ]
+    gather = np.zeros(a.nnz, np.int64)
+    perm_parts, flat_off = [], 0
+    outs = {w: None for w in widths}
+    for w in widths:
+        slice_ids = np.nonzero(bucket_w == w)[0]
+        rows_sel = np.concatenate(
+            [order[s * c:(s + 1) * c] for s in slice_ids]
+        ) if slice_ids.size else np.zeros(0, np.int64)
+        arrs, csr_pos, dest = scatter_rows(a.rowptr, segs, int(w), rows_sel)
+        outs[w] = arrs
+        gather[csr_pos] = flat_off + dest
+        perm_parts.append(rows_sel)
+        flat_off += rows_sel.size * int(w)
+    perm = (np.concatenate(perm_parts) if perm_parts
+            else np.zeros(0, np.int64))
+    unperm = np.zeros(m, np.int64)
+    unperm[perm[perm >= 0]] = np.nonzero(perm >= 0)[0]
+    return GSESellC(
+        colpak=tuple(jnp.asarray(outs[w][0]) for w in widths),
+        head=tuple(jnp.asarray(outs[w][1]) for w in widths),
+        tail1=tuple(jnp.asarray(outs[w][2]) for w in widths),
+        tail2=tuple(jnp.asarray(outs[w][3]) for w in widths),
+        gather=jnp.asarray(gather, jnp.int32),
+        perm=jnp.asarray(perm, jnp.int32),
+        unperm=jnp.asarray(unperm, jnp.int32),
+        row_ids=a.row_ids,
+        table=a.table,
+        widths=widths,
+        c=c,
+        sigma=int(sigma_eff),
+        lane=lane,
+        ei_bit=a.ei_bit,
+        shape=a.shape,
+    )

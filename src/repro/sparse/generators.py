@@ -26,6 +26,7 @@ __all__ = [
     "convection_diffusion_2d",
     "random_spd",
     "circuit_like",
+    "skewed_spd",
     "diag_rescale",
     "ill_conditioned_spd",
     "mass_diagonal",
@@ -135,6 +136,68 @@ def circuit_like(n: int, seed: int = 0) -> CSR:
     r = np.concatenate([rows, np.arange(n)])
     c = np.concatenate([cols, np.arange(n)])
     v = np.concatenate([vals, np.full(n, 70.0)])  # dominant diagonal
+    return from_coo(r, c, v, (n, n))
+
+
+def skewed_spd(n: int = 2048, dense_rows: int = 4, base_halfwidth: int = 58,
+               tail_scale: float = 3.0, seed: int = 0) -> CSR:
+    """SPD with power-law row-length skew and a few DENSE rows -- the
+    uniform-ELL worst case the SELL-C-σ layout exists for (DESIGN.md §12).
+
+    Construction (R-MAT-flavored heavy hitters on a banded base):
+
+      * a symmetric PERIODIC band whose per-row halfwidth is
+        ``base_halfwidth`` plus a truncated Pareto tail -- entry
+        ``(i, (i+j) mod n)`` exists iff ``j <= min(h_i, h_{(i+j) mod n})``
+        (the min rule keeps the pattern symmetric without rescans; the
+        wrap keeps boundary rows full-width);
+      * ``dense_rows`` hub rows/columns touching EVERY column (the
+        heavy-hitter tail of a power-law degree distribution);
+      * clustered-exponent values + a diagonally dominant diagonal
+        (strict dominance -> SPD).
+
+    The base halfwidth keeps typical rows just under one 128-lane tile,
+    so both layouts pay the same lane-quantization padding and the
+    benchmark isolates the SKEW cost: uniform ELL pads every row to the
+    dense rows' width (padding_ratio ~0.94 at the defaults) while
+    SELL-C-σ quarantines the hubs in their own wide slice
+    (padding_ratio < 0.1) -- the ``run.py --quick`` CI gate asserts the
+    gap and that tag-1 modeled bytes stay within 10% of 6 B/nnz.
+    """
+    rng = np.random.default_rng(seed)
+    tail = np.minimum((rng.pareto(1.8, n) * tail_scale).astype(np.int64),
+                      n // 2)
+    h = np.minimum(base_halfwidth + tail, (n - 1) // 2)
+    # Periodic-band entries (positive offsets) under the min rule,
+    # vectorized; the transpose below supplies the negative offsets.
+    rows = np.repeat(np.arange(n), h)
+    offs = np.arange(h.sum()) - np.repeat(np.cumsum(h) - h, h) + 1
+    cols = (rows + offs) % n
+    keep = offs <= h[cols]
+    rows, cols = rows[keep], cols[keep]
+    # Dense hub rows (heavy hitters); off-diagonal only.
+    hubs = rng.choice(n, size=dense_rows, replace=False)
+    hr = np.repeat(hubs, n)
+    hc = np.tile(np.arange(n), dense_rows)
+    keep = hr != hc
+    rows = np.concatenate([rows, hr[keep]])
+    cols = np.concatenate([cols, hc[keep]])
+    # Clustered-exponent values (Fig-1 statistics hold here too).
+    bins = rng.choice([-2, -1, 0, 1], size=rows.size, p=[0.1, 0.2, 0.5, 0.2])
+    vals = rng.uniform(1.0, 2.0, rows.size) * np.exp2(bins)
+    vals *= rng.choice([-1.0, 1.0], size=vals.shape)
+    r = np.concatenate([rows, cols])
+    c = np.concatenate([cols, rows])
+    v = np.concatenate([vals, vals])
+    # Strictly dominant diagonal -> SPD.  Band/hub duplicates are summed
+    # by from_coo; add.at counts them twice, which only strengthens the
+    # dominance bound.
+    abssum = np.zeros(n)
+    np.add.at(abssum, r, np.abs(v))
+    diag = 2.0 * abssum + 1.0
+    r = np.concatenate([r, np.arange(n)])
+    c = np.concatenate([c, np.arange(n)])
+    v = np.concatenate([v, diag])
     return from_coo(r, c, v, (n, n))
 
 

@@ -16,9 +16,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import gse
-from repro.sparse.csr import CSR, GSECSR
+from repro.sparse.csr import CSR, GSECSR, GSESellC
 
-__all__ = ["spmv", "spmv_gse", "spmv_ell", "spmm", "spmm_gse", "decode_gsecsr"]
+__all__ = ["spmv", "spmv_gse", "spmv_ell", "spmm", "spmm_gse",
+           "decode_gsecsr", "decode_operand"]
 
 
 @partial(jax.jit, static_argnames=("store_dtype", "acc_dtype", "num_rows"))
@@ -77,6 +78,36 @@ def decode_gsecsr(a: GSECSR, tag: int, acc_dtype=jnp.float64):
     )
 
 
+def _sell_csr_segments(a: GSESellC):
+    """CSR-order (colpak, head, tail1, tail2) gathered out of the packed
+    SELL-C-σ bucket arrays.
+
+    The packed layout IS the value store: ``gather`` addresses every real
+    entry inside the flattened width-buckets, so the recovered segments
+    are bit-for-bit the ``GSECSR`` arrays and everything downstream of
+    this gather (decode, segment reduction, solver iterations) is exactly
+    the CSR reference arithmetic (DESIGN.md §12).
+    """
+    def take(parts):
+        return jnp.concatenate([p.reshape(-1) for p in parts])[a.gather]
+
+    return take(a.colpak), take(a.head), take(a.tail1), take(a.tail2)
+
+
+def decode_operand(a, tag: int, acc_dtype=jnp.float64):
+    """CSR-order ``(values, columns)`` decode of a ``GSECSR`` OR a packed
+    ``GSESellC`` at precision ``tag`` -- the one dispatch point the fused
+    solver steps and the reference SpMV/SpMM share, so every solver path
+    rides whichever layout the caller packed, bit-identically."""
+    if isinstance(a, GSESellC):
+        cp, hd, t1, t2 = _sell_csr_segments(a)
+        return _decode_gsecsr(cp, hd, t1, t2, a.table, a.ei_bit, tag,
+                              acc_dtype)
+    return _decode_gsecsr(
+        a.colpak, a.head, a.tail1, a.tail2, a.table, a.ei_bit, tag, acc_dtype
+    )
+
+
 @partial(jax.jit, static_argnames=("tag", "acc_dtype", "num_rows", "ei_bit"))
 def _spmv_gse(colpak, head, tail1, tail2, table, row_ids, x, ei_bit, tag,
               acc_dtype, num_rows):
@@ -87,19 +118,34 @@ def _spmv_gse(colpak, head, tail1, tail2, table, row_ids, x, ei_bit, tag,
     return jax.ops.segment_sum(prod, row_ids, num_segments=num_rows)
 
 
-def spmv_gse(a: GSECSR, x: jnp.ndarray, tag: int = 1, acc_dtype=jnp.float64):
+@partial(jax.jit, static_argnames=("tag", "acc_dtype"))
+def _spmv_gse_sell(a: GSESellC, x, tag, acc_dtype):
+    val, col = decode_operand(a, tag, acc_dtype)
+    prod = val * x.astype(acc_dtype)[col]
+    return jax.ops.segment_sum(prod, a.row_ids, num_segments=a.shape[0])
+
+
+def spmv_gse(a, x: jnp.ndarray, tag: int = 1, acc_dtype=jnp.float64):
     """Paper Algorithm 2 (+tails): GSE-SEM SpMV at precision ``tag`` 1/2/3.
 
+    ``a`` is a ``GSECSR`` or a SELL-C-σ packed ``GSESellC``; the two are
+    bit-identical here (the SELL path gathers the SAME segment bits back
+    to CSR order before the shared decode + segment reduction), they
+    differ only in what the kernels stream and what the byte model
+    charges (``a.bytes_touched(tag)``: nnz-only for ``GSECSR``, actual
+    padded slots for ``GSESellC``; DESIGN.md §12).
+
     Bytes touched for the value stream: 2/4/8 per nnz for tags 1/2/3 plus
-    4 per nnz of packed colidx -- vs 8+4 for FP64 CSR.  The exact modeled
-    per-call traffic is ``a.bytes_touched(tag)`` (6/8/12 bytes per nnz);
-    the TPU-tiled equivalent (``kernels/ops.gse_spmv_ell``) dispatches to
-    a tag-specialized Pallas kernel that provably streams only those
-    segments (DESIGN.md §2.4).  Inside CG prefer passing the ``GSECSR``
-    straight to ``solvers.solve_cg`` -- the fused iteration path decodes
-    the values once per step and folds the vector ops around this SpMV
-    (DESIGN.md §4).
+    4 per nnz of packed colidx -- vs 8+4 for FP64 CSR.  The TPU-tiled
+    equivalents (``kernels/ops.gse_spmv_ell`` / ``gse_spmv_sell``)
+    dispatch to tag-specialized Pallas kernels that provably stream only
+    those segments (DESIGN.md §2.4).  Inside CG prefer passing the
+    operand straight to ``solvers.solve_cg`` -- the fused iteration path
+    decodes the values once per step and folds the vector ops around this
+    SpMV (DESIGN.md §4).
     """
+    if isinstance(a, GSESellC):
+        return _spmv_gse_sell(a, x, tag, acc_dtype)
     return _spmv_gse(
         a.colpak, a.head, a.tail1, a.tail2, a.table, a.row_ids, x,
         a.ei_bit, tag, acc_dtype, a.shape[0]
@@ -148,19 +194,31 @@ def _spmm_gse(colpak, head, tail1, tail2, table, row_ids, x, ei_bit, tag,
     return jax.ops.segment_sum(prod, row_ids, num_segments=num_rows)
 
 
-def spmm_gse(a: GSECSR, x: jnp.ndarray, tag: int = 1, acc_dtype=jnp.float64):
+@partial(jax.jit, static_argnames=("tag", "acc_dtype"))
+def _spmm_gse_sell(a: GSESellC, x, tag, acc_dtype):
+    val, col = decode_operand(a, tag, acc_dtype)
+    prod = val[:, None] * x.astype(acc_dtype)[col]  # decode once, nrhs uses
+    return jax.ops.segment_sum(prod, a.row_ids, num_segments=a.shape[0])
+
+
+def spmm_gse(a, x: jnp.ndarray, tag: int = 1, acc_dtype=jnp.float64):
     """GSE-SEM SpMM at precision ``tag``: Y = A @ X, X dense (n, nrhs).
 
+    ``a`` is a ``GSECSR`` or a SELL-C-σ packed ``GSESellC`` (bit-identical
+    results; the layouts differ only in streamed bytes -- DESIGN.md §12).
     One decoded-value pass feeds every column, so the modeled matrix
     traffic is ``a.bytes_touched(tag)`` ONCE per call however many
     right-hand sides ride along -- ``csr.iteration_stream_bytes(...,
     nrhs=nrhs)`` is the per-iteration account (DESIGN.md §11).  The
-    TPU-tiled equivalent (``kernels/ops.gse_spmm_ell``) dispatches to a
-    tag-specialized Pallas kernel that provably streams only the segments
-    ``tag`` reads, exactly like the SpMV pipeline.
+    TPU-tiled equivalents (``kernels/ops.gse_spmm_ell`` /
+    ``gse_spmm_sell``) dispatch to tag-specialized Pallas kernels that
+    provably stream only the segments ``tag`` reads, exactly like the
+    SpMV pipeline.
     """
     if x.ndim != 2:
         raise ValueError(f"spmm_gse wants a (n, nrhs) block; got {x.shape}")
+    if isinstance(a, GSESellC):
+        return _spmm_gse_sell(a, x, tag, acc_dtype)
     return _spmm_gse(
         a.colpak, a.head, a.tail1, a.tail2, a.table, a.row_ids, x,
         a.ei_bit, tag, acc_dtype, a.shape[0]

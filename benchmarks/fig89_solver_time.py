@@ -117,13 +117,75 @@ def batched_case(a, g, nrhs: int, params=_PARAMS, tol=1e-6,
     )
 
 
-def run(precond: str = "none", nrhs: int = 1, layout: str = "nnz") -> dict:
+def dist_case(a, g, shards: int, wire: str = "gse", params=_PARAMS,
+              tol=1e-6, maxiter=1500, seed=0) -> dict:
+    """One distributed stepped-CG measurement over a row-sharded operator
+    (DESIGN.md §13).
+
+    Runs the fully-sharded loop twice -- ``wire="exact"`` for the parity
+    contract against single-device ``solve_cg`` (same iterate count,
+    trajectories to ~machine precision) and the requested ``wire`` for
+    the headline -- and reports the distributed byte model: per-shard
+    matrix streams (which sum EXACTLY to the single-device
+    ``iteration_stream_bytes``) plus the tag-aware halo wire ladder.
+    """
+    from repro.distributed.partition import partition_gsecsr
+    from repro.sparse.spmv import spmv
+
+    rng = np.random.default_rng(seed)
+    b = jnp.asarray(np.asarray(spmv(a, jnp.asarray(
+        rng.normal(size=a.shape[1])))))
+    kw = dict(tol=tol, maxiter=maxiter, params=params)
+    ref, t_ref = _timed(solve_cg, g, b, **kw)
+    part = partition_gsecsr(g, shards)
+    res_x, _ = _timed(solve_cg, part, b, wire="exact", **kw)
+    res, t = _timed(solve_cg, part, b, wire=wire, **kw)
+    scale = float(jnp.max(jnp.abs(ref.x)))
+    x_maxdiff = float(jnp.max(jnp.abs(res_x.x - ref.x))) / max(scale, 1e-300)
+    shard_bytes = {tag: list(part.shard_stream_bytes(tag)) for tag in
+                   (1, 2, 3)}
+    wire_bytes = {tag: part.halo_wire_bytes(tag, wire) for tag in (1, 2, 3)}
+    sum_identity = all(
+        sum(shard_bytes[tag]) + part.shared_stream_bytes()
+        == iteration_stream_bytes(g, tag)
+        for tag in (1, 2, 3)
+    )
+    return dict(
+        t=t,
+        t_ref=t_ref,
+        shards=shards,
+        wire=wire,
+        iters=int(res.iters),
+        relres=float(res.relres),
+        converged=bool(res.converged),
+        switch_iters=np.asarray(res.switch_iters).tolist(),
+        ref_iters=int(ref.iters),
+        ref_relres=float(ref.relres),
+        exact_iters=int(res_x.iters),
+        exact_x_maxdiff=x_maxdiff,
+        shard_bytes=shard_bytes,
+        shared_bytes=part.shared_stream_bytes(),
+        halo_wire_bytes=wire_bytes,
+        halo_entries=part.halo_entries,
+        byte_sum_identity=sum_identity,
+        iter_bytes={tag: part.iteration_stream_bytes(tag, wire)
+                    for tag in (1, 2, 3)},
+    )
+
+
+def run(precond: str = "none", nrhs: int = 1, layout: str = "nnz",
+        shards: int = 1) -> dict:
     """``layout="sell"`` switches the GSE rows' byte model to the
     padding-honest account: each case's operator is SELL-C-σ packed
     (``kernels.ops.sell_pack_gsecsr``) and every stepped iteration is
     charged the layout's ACTUAL padded slots (DESIGN.md §12) -- what the
     packed kernels really stream on skewed matrices.  The ``"nnz"``
-    default keeps the encoding-only figures unchanged."""
+    default keeps the encoding-only figures unchanged.
+
+    ``shards > 1`` adds row-sharded distributed rows (``dist_case``) to
+    the CG cases: the same matrix stream redistributed across shards plus
+    the tag-aware halo wire ladder (DESIGN.md §13; needs that many
+    devices -- ``run.py --shards`` forces host CPU devices)."""
     if layout not in ("nnz", "sell"):
         raise ValueError(f"unknown layout {layout!r}; expected 'nnz'/'sell'")
     out = {}
@@ -231,6 +293,18 @@ def run(precond: str = "none", nrhs: int = 1, layout: str = "nnz") -> dict:
                  f"ratio={bt['per_iter_ratio']:.2f} "
                  f"run_bytes={bt['run_bytes']}")
             rows["gse_batch"] = bt
+        if shards > 1 and kind == "cg":
+            # Distributed row: same matrix stream redistributed across
+            # shards + the tag-aware halo wire ladder (DESIGN.md §13).
+            dc = dist_case(a, g, shards, params=_PARAMS,
+                           maxiter=kw["maxiter"], seed=seed)
+            emit(f"fig89/cg/{name}/gse_dist{shards}", dc["t"] * 1e6,
+                 f"iters={dc['iters']} relres={dc['relres']:.2e} "
+                 f"wire_t1={dc['halo_wire_bytes'][1]} "
+                 f"wire_t3={dc['halo_wire_bytes'][3]} "
+                 f"byte_sum_identity={dc['byte_sum_identity']} "
+                 f"exact_dx={dc['exact_x_maxdiff']:.2e}")
+            rows["gse_dist"] = dc
         out[(kind, name)] = rows
     return out
 

@@ -24,11 +24,19 @@ column); with ``--quick`` it instead runs a trimmed batched solve and
 writes ``BENCH_batch.json`` -- per-request iterations/residual plus the
 bytes/iteration ratio vs nrhs=1 the acceptance bar bounds (< 2x at
 nrhs=4 on the stream-dominated smoke matrix).
+
+``--shards N`` (N > 1) adds row-sharded distributed stepped-CG rows to
+fig89 (per-shard matrix streams + tag-aware halo wire bytes, DESIGN.md
+section 13); with ``--quick`` it instead runs the distributed smoke and
+writes ``BENCH_dist.json``, gating exact-wire parity with ``solve_cg``,
+the per-shard byte-sum identity, and the tag-1 < 50% tag-3 halo wire
+ladder.  Forces ``N`` host CPU devices when XLA_FLAGS is unset.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
 import sys
 import traceback
@@ -121,6 +129,69 @@ def run_quick_batch(nrhs: int, out_path: pathlib.Path | None = None) -> dict:
     return payload
 
 
+def run_quick_dist(shards: int, out_path: pathlib.Path | None = None) -> dict:
+    """CI distributed smoke: row-sharded stepped CG -> BENCH_dist.json.
+
+    Runs ``fig89.dist_case`` (Poisson 24^2 over ``shards`` forced host
+    devices) and gates the distributed contracts (DESIGN.md §13):
+
+      * convergence (exact AND gse wire) with the exact-wire trajectory
+        within 1e-10 of single-device ``solve_cg``;
+      * the byte-model identity -- per-shard matrix streams + shared
+        terms sum EXACTLY to the single-device ``iteration_stream_bytes``;
+      * the halo wire ladder -- tag-1 wire bytes < 50% of tag-3's.
+
+    The JSON is written BEFORE the gates raise so a failing run still
+    uploads diagnostics.
+    """
+    from benchmarks import fig89_solver_time
+    from repro.core.precision import MonitorParams
+    from repro.sparse import generators as G
+    from repro.sparse.csr import pack_csr
+
+    a = G.poisson2d(24)
+    g = pack_csr(a, k=8)
+    params = MonitorParams(t=40, l=60, m=30, rsd_limit=0.5, reldec_limit=0.45)
+    case = fig89_solver_time.dist_case(a, g, shards, wire="gse",
+                                       params=params, tol=1e-8,
+                                       maxiter=2000, seed=7)
+    payload = {
+        "bench": "distributed_sharded_quick",
+        "schema": "row-sharded stepped CG over poisson2d_24: exact-wire "
+                  "parity vs solve_cg, per-shard byte model + halo wire "
+                  "ladder (DESIGN.md section 13)",
+        "matrix": "poisson2d_24",
+        "results": case,
+    }
+    path = out_path or (_REPO_ROOT / "BENCH_dist.json")
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {path}", file=sys.stderr)
+    if not case["converged"]:
+        raise SystemExit("dist smoke: gse-wire sharded run did not converge")
+    if case["exact_iters"] != case["ref_iters"]:
+        raise SystemExit(
+            f"dist smoke: exact-wire iters {case['exact_iters']} != "
+            f"single-device {case['ref_iters']}"
+        )
+    if case["exact_x_maxdiff"] > 1e-10:
+        raise SystemExit(
+            f"dist smoke: exact-wire trajectory strayed "
+            f"{case['exact_x_maxdiff']:.2e} > 1e-10 from single-device"
+        )
+    if not case["byte_sum_identity"]:
+        raise SystemExit(
+            "dist smoke: per-shard bytes + shared terms != single-device "
+            "iteration_stream_bytes"
+        )
+    w = case["halo_wire_bytes"]
+    if not w[1] < 0.5 * w[3]:
+        raise SystemExit(
+            f"dist smoke: tag-1 halo wire bytes {w[1]} not < 50% of "
+            f"tag-3's {w[3]}"
+        )
+    return payload
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -143,16 +214,37 @@ def main() -> None:
                     help="fig89 byte model: 'sell' charges the GSE rows "
                          "the SELL-C-sigma layout's actual padded slots "
                          "instead of nnz only (DESIGN.md section 12)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="shard count for the distributed rows: > 1 adds "
+                         "row-sharded stepped-CG rows to fig89, or (with "
+                         "--quick) runs the distributed smoke and writes "
+                         "BENCH_dist.json (forces that many host CPU "
+                         "devices if XLA_FLAGS is unset)")
     args = ap.parse_args()
     if args.quick and args.only:
         ap.error("--quick and --only are mutually exclusive")
     if args.nrhs < 1:
         ap.error("--nrhs must be >= 1")
+    if args.shards < 1:
+        ap.error("--shards must be >= 1")
+    if args.quick and args.shards > 1 and args.nrhs > 1:
+        ap.error("--quick runs ONE smoke: pass --shards or --nrhs, not "
+                 "both (the CI jobs run them separately)")
+    if args.shards > 1 and "xla_force_host_platform_device_count" not in (
+            os.environ.get("XLA_FLAGS", "")):
+        # Must land before jax initializes (all jax imports are lazy,
+        # below): the distributed rows need the forced host devices.
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.shards}"
+        ).strip()
 
     print("name,us_per_call,derived")
     if args.quick:
-        if args.nrhs > 1:  # batched smoke only; the SpMV sweep is the
-            run_quick_batch(args.nrhs)  # plain --quick job's work
+        if args.shards > 1:  # distributed smoke only; the SpMV sweep and
+            run_quick_dist(args.shards)  # batched smoke are other jobs
+        elif args.nrhs > 1:
+            run_quick_batch(args.nrhs)
         else:
             run_quick()
         return
@@ -170,7 +262,8 @@ def main() -> None:
         "fig6": fig6_spmv_formats.run,
         "tab34": tab34_solver_convergence.run,
         "fig89": partial(fig89_solver_time.run, precond=args.precond,
-                         nrhs=args.nrhs, layout=args.layout),
+                         nrhs=args.nrhs, layout=args.layout,
+                         shards=args.shards),
         "lm": lm_gse_serving.run,
         "roofline": roofline.run,
     }

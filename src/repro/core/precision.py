@@ -104,7 +104,12 @@ def metrics(state: MonitorState) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]
     """(RSD, nDec, relDec) over the trailing window (paper Eq. 3-6)."""
     w = _ordered(state)
     avg = jnp.mean(w)
-    rsd = jnp.sqrt(jnp.mean((w - avg) ** 2)) / jnp.maximum(avg, 1e-300)
+    # Division guard in the WINDOW's dtype: the literal 1e-300 underflows
+    # to 0 in a float32 history buffer, so an all-equal (or tiny) residual
+    # window divides 0/0 -> NaN RSD and silently disables condition C1.
+    rsd = jnp.sqrt(jnp.mean((w - avg) ** 2)) / jnp.maximum(
+        avg, jnp.finfo(w.dtype).tiny
+    )
     ndec = jnp.sum((w[:-1] > w[1:]).astype(jnp.int32))
     reldec = (w[0] - w[-1]) / jnp.where(w[0] == 0, 1.0, w[0])
     return rsd, ndec, reldec

@@ -22,7 +22,51 @@ import jax.numpy as jnp
 
 from repro.core import gse
 
-__all__ = ["compressed_psum"]
+__all__ = ["compressed_psum", "halo_all_gather"]
+
+
+def halo_all_gather(bnd: jnp.ndarray, axis_name: str, *, tag: int,
+                    wire: str = "gse", k: int = 8) -> jnp.ndarray:
+    """All-gather each shard's boundary buffer at the iteration's tag.
+
+    Must be called INSIDE shard_map with ``axis_name`` manual.  ``bnd`` is
+    this shard's packed boundary x-entries, shape ``(B,)`` or ``(B, nrhs)``
+    (padded slots are zero).  Returns the gathered pool with a leading
+    shard axis, ``(s, B[, nrhs])``, decoded back to ``bnd.dtype``.
+
+    This is the halo-exchange twin of :func:`compressed_psum` -- the GSE
+    segmentation applied to the SpMV's wire traffic (DESIGN.md §13):
+
+      * ``wire="gse"``, tag 1: the u16 HEAD segments cross the wire
+        (2 B/entry) plus each shard's tiny shared-exponent table;
+      * ``wire="gse"``, tag 2: head + tail1 (4 B/entry) + table;
+      * tag 3 or ``wire="exact"``: raw IEEE float64 (8 B/entry) -- at full
+        precision the segmented 63-bit mantissa costs the same bytes but
+        loses dynamic range, so exact bits ride the wire.
+
+    The modeled payload is ``PartitionedGSECSR.halo_wire_bytes``.
+    """
+    if wire not in ("gse", "exact"):
+        raise ValueError(f"unknown wire mode {wire!r}; 'gse' or 'exact'")
+    if wire == "exact" or tag == 3:
+        return jax.lax.all_gather(bnd, axis_name)
+    b32 = bnd.astype(jnp.float32)
+    table = gse.extract_shared_exponents_jnp(b32, k)
+    head, tail1 = gse.pack32_jnp(b32, table, k)
+    h_all = jax.lax.all_gather(head, axis_name)
+    tb_all = jax.lax.all_gather(table, axis_name)
+    if tag == 1:
+        dec = jax.vmap(
+            lambda h, tb: gse.decode32_jnp(
+                tb, h, jnp.zeros(h.shape, jnp.uint16), k, 1, jnp.float32
+            )
+        )(h_all, tb_all)
+    else:
+        t_all = jax.lax.all_gather(tail1, axis_name)
+        dec = jax.vmap(
+            lambda h, t, tb: gse.decode32_jnp(tb, h, t, k, 2, jnp.float32)
+        )(h_all, t_all, tb_all)
+    return dec.astype(bnd.dtype)
 
 
 def compressed_psum(grads: jnp.ndarray, axis_name: str, k: int = 8):

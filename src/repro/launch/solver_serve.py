@@ -72,6 +72,14 @@ class _Operator:
     csr: CSR
     gse: "object"     # GSECSR or GSESellC, packed once at registration
     precond: object   # precond object or None
+    part: object = None   # PartitionedGSECSR when registered sharded
+    wire: str = "exact"   # halo wire format for the sharded path
+
+    @property
+    def solve_op(self):
+        """The operand handed to the batched solvers: the partition when
+        sharded (distributed operator path), else the packed matrix."""
+        return self.part if self.part is not None else self.gse
 
 
 class SolverService:
@@ -102,7 +110,8 @@ class SolverService:
 
     def register(self, name: str, a: CSR, k: int = 8,
                  precond: str | object | None = None,
-                 layout: str = "csr") -> str:
+                 layout: str = "csr", sharded: bool = False,
+                 shards: int | None = None, wire: str = "exact") -> str:
         """Pack ``a`` (and optionally a preconditioner) once; returns the
         handle requests are submitted against.  ``precond`` is ``None``,
         ``"jacobi"``/``"spai0"``, or a ready :mod:`repro.solvers.precond`
@@ -113,12 +122,28 @@ class SolverService:
         SELL-C-σ sliced layout (``kernels.ops.sell_pack_gsecsr``, cached
         on the packed instance -- DESIGN.md §12): trajectories are
         bit-identical to the ``"csr"`` default, but byte reports charge
-        the layout's ACTUAL padded slots instead of nnz only."""
+        the layout's ACTUAL padded slots instead of nnz only.
+
+        ``sharded=True`` row-shards the packed operator across ``shards``
+        devices (default: all visible) and serves every request against
+        the handle through the distributed solver path (DESIGN.md §13);
+        ``wire`` picks the halo wire format (``"exact"`` f64 halos,
+        ``"gse"`` tag-aware compressed halos) and the byte reports add the
+        halo wire traffic per iteration."""
         if name in self._ops:
             raise ValueError(f"handle {name!r} already registered")
         if layout not in ("csr", "sell"):
             raise ValueError(
                 f"unknown layout {layout!r}; expected 'csr' or 'sell'"
+            )
+        if sharded and layout == "sell":
+            raise ValueError(
+                "sharded=True serves through the row-sharded CSR decode; "
+                "the SELL layout is single-device (pick one)"
+            )
+        if wire not in ("exact", "gse"):
+            raise ValueError(
+                f"unknown wire mode {wire!r}; expected 'exact' or 'gse'"
             )
         if isinstance(precond, str):
             try:
@@ -129,12 +154,19 @@ class SolverService:
                     f"{sorted(_PRECOND_FACTORY)}"
                 ) from None
         gse = pack_csr(a, k=k)
+        part = None
+        if sharded:
+            import jax
+
+            from repro.distributed.partition import partition_gsecsr
+
+            part = partition_gsecsr(gse, shards or jax.device_count())
         if layout == "sell":
             from repro.kernels.ops import sell_pack_gsecsr
 
             gse = sell_pack_gsecsr(gse)
         self._ops[name] = _Operator(
-            name=name, csr=a, gse=gse, precond=precond
+            name=name, csr=a, gse=gse, precond=precond, part=part, wire=wire
         )
         return name
 
@@ -204,11 +236,13 @@ class SolverService:
                 axis=1,
             )
         if op.precond is not None:
-            res = solve_pcg_batched(op.gse, b, op.precond, x0=x0, tol=tol,
-                                    maxiter=self.maxiter, params=self.params)
+            res = solve_pcg_batched(op.solve_op, b, op.precond, x0=x0,
+                                    tol=tol, maxiter=self.maxiter,
+                                    params=self.params, wire=op.wire)
         else:
-            res = solve_cg_batched(op.gse, b, x0=x0, tol=tol,
-                                   maxiter=self.maxiter, params=self.params)
+            res = solve_cg_batched(op.solve_op, b, x0=x0, tol=tol,
+                                   maxiter=self.maxiter, params=self.params,
+                                   wire=op.wire)
 
         iters = np.asarray(res.iters)
         sw = np.asarray(res.switch_iters)
@@ -248,21 +282,28 @@ class SolverService:
         shares AND their sum, which is exactly ``batched_run_bytes`` (each
         iteration adds ``iteration_stream_bytes(..., nrhs=n_active)``
         split evenly among the columns sharing the streaming pass)."""
-        from repro.sparse.csr import vector_stream_bytes
-
         nrhs = iters.shape[0]
         shares = np.zeros(nrhs, np.float64)
-        vec = vector_stream_bytes(op.csr)
         for it in range(int(iters.max(initial=0))):
             tags = column_tags_at(iters, sw, it)
             live = np.nonzero(tags > 0)[0]
             if live.size == 0:
                 continue
-            mat = iteration_stream_bytes(op.gse, int(tags.max()), op.precond)
-            # The iteration's batch total (matrix once + (n_active-1) vec
-            # streams, matching iteration_stream_bytes(..., nrhs=n_active))
-            # divides evenly among the columns sharing the pass.
-            shares[live] += (mat + (live.size - 1) * vec) / live.size
+            tag = int(tags.max())
+            if op.part is not None:
+                # Sharded handle: the canonical distributed account --
+                # single-device matrix stream redistributed + per-column
+                # halo wire traffic + per-extra-column vector streams.
+                tot = op.part.iteration_stream_bytes(tag, op.wire,
+                                                     nrhs=live.size)
+                if op.precond is not None:
+                    tot += op.precond.bytes_touched(tag)
+            else:
+                tot = iteration_stream_bytes(op.gse, tag, op.precond,
+                                             nrhs=live.size)
+            # The iteration's batch total divides evenly among the
+            # columns sharing the streaming pass.
+            shares[live] += tot / live.size
         return np.rint(shares).astype(np.int64), int(round(shares.sum()))
 
 
@@ -282,6 +323,14 @@ def main():
     ap.add_argument("--layout", default="csr", choices=["csr", "sell"],
                     help="operator pack: 'sell' rides the SELL-C-sigma "
                          "sliced layout (padding-honest byte reports)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="> 0: row-shard the operator and serve through "
+                         "the distributed path (needs that many devices; "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N on CPU)")
+    ap.add_argument("--wire", default="exact", choices=["exact", "gse"],
+                    help="halo wire format for --shards (DESIGN.md "
+                         "section 13)")
     ap.add_argument("--tol", type=float, default=1e-8)
     args = ap.parse_args()
 
@@ -291,7 +340,8 @@ def main():
     svc = SolverService(slots=args.slots, params=params, maxiter=20000)
     svc.register("poisson", a, k=8,
                  precond=None if args.precond == "none" else args.precond,
-                 layout=args.layout)
+                 layout=args.layout, sharded=args.shards > 0,
+                 shards=args.shards or None, wire=args.wire)
 
     rng = np.random.default_rng(0)
     ids = []

@@ -11,6 +11,12 @@ Batched multi-RHS subsystem (DESIGN.md §11): ``solve_cg_batched`` /
 schedules over one shared operand (matrix bytes charged once per
 iteration, ``batched_run_bytes``); ``launch.solver_serve`` is the
 request-batching front-end.
+
+Distributed subsystem (DESIGN.md §13): ``solve_cg_sharded`` /
+``solve_pcg_sharded`` run the whole stepped loop row-sharded under
+``shard_map`` with a tag-aware GSE halo exchange; ``solve_cg`` /
+``solve_pcg`` / the batched solvers dispatch there automatically when
+handed a ``distributed.partition.PartitionedGSECSR``.
 """
 from repro.solvers.batched import (
     BatchedCGResult,
@@ -30,6 +36,7 @@ from repro.solvers.operators import (
     make_gse_operator,
     make_precond_operator,
 )
+from repro.solvers.sharded import solve_cg_sharded, solve_pcg_sharded
 from repro.solvers.precond import (
     BlockJacobiGSEPrecond,
     DiagGSEPrecond,
@@ -48,6 +55,8 @@ __all__ = [
     "solve_cg_batched",
     "solve_pcg_batched",
     "solve_ir_batched",
+    "solve_cg_sharded",
+    "solve_pcg_sharded",
     "fused_cg_step",
     "fused_pcg_step",
     "gse_matvec",

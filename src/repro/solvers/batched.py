@@ -70,6 +70,19 @@ class BatchedIRResult(NamedTuple):
     history: list              # nrhs lists of outer residual trajectories
 
 
+def _maybe_sharded(apply_a, wire: str):
+    """Swap a ``PartitionedGSECSR`` operand for its memoized distributed
+    operator closure (generic-path callable); anything else passes
+    through untouched."""
+    from repro.distributed.partition import PartitionedGSECSR
+
+    if isinstance(apply_a, PartitionedGSECSR):
+        from repro.kernels.dist_spmv import make_sharded_operator
+
+        return make_sharded_operator(apply_a, wire)
+    return apply_a
+
+
 def _normalize_block(b, x0):
     """Accept ``b``/``x0`` as ``(n,)`` or ``(n, nrhs)`` blocks."""
     b = jnp.asarray(b)
@@ -215,6 +228,7 @@ def solve_cg_batched(
     tol: float = 1e-6,
     maxiter: int = 5000,
     params: P.MonitorParams | None = None,
+    wire: str = "exact",
 ) -> BatchedCGResult:
     """Stepped CG over an (n, nrhs) right-hand-side block.
 
@@ -226,16 +240,21 @@ def solve_cg_batched(
     iterations (tested in tests/test_batched.py).
 
     Passing a ``GSECSR`` selects the fused per-column iteration
-    (``fused_cg_step``), exactly as in single-RHS ``solve_cg``.  The
-    modeled per-iteration traffic of the batch is
-    ``iteration_stream_bytes(a, tag, nrhs=n_active)`` -- matrix bytes
-    once, vector bytes per active column; ``batched_run_bytes`` accounts
-    a whole run from the per-column results.
+    (``fused_cg_step``), exactly as in single-RHS ``solve_cg``.  Passing a
+    ``PartitionedGSECSR`` rides the row-sharded distributed operator
+    (``kernels.dist_spmv.make_sharded_operator``; ``wire`` picks the halo
+    wire format, DESIGN.md §13) through the generic per-column body --
+    column ``j`` stays bit-identical to the sharded single-RHS solve's
+    operator applications.  The modeled per-iteration traffic of the
+    batch is ``iteration_stream_bytes(a, tag, nrhs=n_active)`` -- matrix
+    bytes once, vector bytes per active column; ``batched_run_bytes``
+    accounts a whole run from the per-column results.
     """
     b, x0 = _normalize_block(b, x0)
     if params is None:
         params = P.MonitorParams.for_cg()
     tol_ = jnp.asarray(tol, b.dtype)
+    apply_a = _maybe_sharded(apply_a, wire)
     if isinstance(apply_a, (GSECSR, GSESellC)):
         return _solve_cg_batched_fused(apply_a, b, x0, tol_, maxiter, params)
     return _solve_cg_batched(apply_a, b, x0, tol_, maxiter, params)
@@ -301,6 +320,7 @@ def solve_pcg_batched(
     tol: float = 1e-6,
     maxiter: int = 5000,
     params: P.MonitorParams | None = None,
+    wire: str = "exact",
 ) -> BatchedCGResult:
     """Stepped preconditioned CG over an (n, nrhs) block.
 
@@ -308,11 +328,14 @@ def solve_pcg_batched(
     column's OWN tag schedule; the stored segments of both are charged
     once per iteration however many columns ride along.  Column ``j`` is
     bit-identical to ``solve_pcg(apply_a, b[:, j], precond, ...)``.
+    ``PartitionedGSECSR`` operands ride the distributed operator exactly
+    as in :func:`solve_cg_batched`.
     """
     b, x0 = _normalize_block(b, x0)
     if params is None:
         params = P.MonitorParams.for_cg()
     tol_ = jnp.asarray(tol, b.dtype)
+    apply_a = _maybe_sharded(apply_a, wire)
     if isinstance(apply_a, (GSECSR, GSESellC)) and hasattr(precond,
                                                            "apply_at"):
         return _solve_pcg_batched_fused(apply_a, precond, b, x0, tol_,
@@ -338,6 +361,7 @@ def solve_ir_batched(
     inner_maxiter: int = 2000,
     params: P.MonitorParams | None = None,
     precond=None,
+    wire: str = "exact",
 ) -> BatchedIRResult:
     """Batched stepped iterative refinement (the ``solve_ir`` outer loop
     over an (n, nrhs) block, inner solves batched).
@@ -358,6 +382,7 @@ def solve_ir_batched(
         params = P.MonitorParams.for_cg()
     nrhs = b.shape[1]
 
+    apply_a = _maybe_sharded(apply_a, wire)
     if isinstance(apply_a, (GSECSR, GSESellC)):
         from repro.solvers.cg import _gsecsr_operator
 

@@ -376,6 +376,7 @@ def solve_pcg(
     maxiter: int = 5000,
     params: P.MonitorParams | None = None,
     final_correction: bool = False,
+    wire: str = "exact",
 ) -> CGResult:
     """Preconditioned CG for SPD systems with stepped mixed precision.
 
@@ -387,11 +388,22 @@ def solve_pcg(
 
     Passing a ``GSECSR`` as ``apply_a`` together with a precond *object*
     selects the fused iteration path (``fused_pcg_step``) -- bit-identical
-    to the generic path, fewer kernel launches.
+    to the generic path, fewer kernel launches.  Passing a
+    ``PartitionedGSECSR`` selects the fully-sharded distributed loop
+    (``solvers.sharded``; ``wire`` picks the halo wire format and is
+    ignored otherwise).
 
     ``b``/``x0`` may be ``(n,)`` or ``(n, 1)``; the solution comes back in
     ``b``'s layout.
     """
+    from repro.distributed.partition import PartitionedGSECSR
+
+    if isinstance(apply_a, PartitionedGSECSR):
+        from repro.solvers.sharded import solve_pcg_sharded
+
+        return solve_pcg_sharded(apply_a, b, precond, x0=x0, tol=tol,
+                                 maxiter=maxiter, params=params, wire=wire,
+                                 final_correction=final_correction)
     b, x0, orig_shape = _normalize_b_x0(b, x0)
     if x0 is None:
         x0 = jnp.zeros_like(b)
@@ -436,6 +448,7 @@ def solve_cg(
     maxiter: int = 5000,
     params: P.MonitorParams | None = None,
     final_correction: bool = False,
+    wire: str = "exact",
 ) -> CGResult:
     """CG for SPD systems.  ``apply_a(x, tag)`` is the (possibly multi-
     precision) operator; fixed-precision baselines ignore ``tag``.
@@ -444,7 +457,9 @@ def solve_cg(
     iteration path (``fused_cg_step``): one decoded-value pass per
     iteration with the vector ops folded around the SpMV.  Trajectories
     are bit-identical to ``solve_cg(make_gse_operator(a), ...)``; only the
-    kernel-launch structure differs.
+    kernel-launch structure differs.  Passing a ``PartitionedGSECSR``
+    selects the fully-sharded distributed loop (``solvers.sharded``;
+    ``wire`` picks the halo wire format and is ignored otherwise).
 
     ``final_correction`` (beyond-paper safeguard): the recursive residual of
     a stepped run converges against the *perturbed* low-precision operator;
@@ -455,6 +470,14 @@ def solve_cg(
     ``b``/``x0`` may be ``(n,)`` or ``(n, 1)``; the solution comes back in
     ``b``'s layout.
     """
+    from repro.distributed.partition import PartitionedGSECSR
+
+    if isinstance(apply_a, PartitionedGSECSR):
+        from repro.solvers.sharded import solve_cg_sharded
+
+        return solve_cg_sharded(apply_a, b, x0=x0, tol=tol, maxiter=maxiter,
+                                params=params, wire=wire,
+                                final_correction=final_correction)
     b, x0, orig_shape = _normalize_b_x0(b, x0)
     if x0 is None:
         x0 = jnp.zeros_like(b)

@@ -30,17 +30,31 @@ class GMRESResult(NamedTuple):
 
 
 def _givens(a, b):
-    d = jnp.sqrt(a * a + b * b)
-    safe = d > 0
-    c = jnp.where(safe, a / jnp.where(safe, d, 1.0), 1.0)
-    s = jnp.where(safe, b / jnp.where(safe, d, 1.0), 0.0)
-    return c, s, d
+    """Rotation (c, s, d) with d = hypot(a, b), overflow/underflow-safe.
+
+    The naive ``sqrt(a*a + b*b)`` overflows to inf for |a| or |b| above
+    ~sqrt(max_float) (1e154 in f64, 1e19 in f32 -- guaranteed territory
+    for float32 sharded runs) and underflows to 0 below ~sqrt(tiny),
+    poisoning c/s and every later rotation.  Scale by max(|a|, |b|) first
+    so the squared terms stay in [0, 1]; c and s come from the SCALED
+    quotients (never touching the possibly-overflowing product d).
+    """
+    m = jnp.maximum(jnp.abs(a), jnp.abs(b))
+    safe = m > 0
+    scale = jnp.where(safe, m, 1.0)
+    an = a / scale
+    bn = b / scale
+    dn = jnp.sqrt(an * an + bn * bn)  # in [1, sqrt(2)]: exact-safe range
+    c = jnp.where(safe, an / dn, 1.0)
+    s = jnp.where(safe, bn / dn, 0.0)
+    return c, s, dn * scale
 
 
 @partial(jax.jit, static_argnames=("apply_a", "apply_m", "restart", "maxiter",
-                                   "params", "init_tag"))
+                                   "params", "init_tag", "return_monitor"))
 def _solve_gmres(apply_a, b, x0, tol, restart, maxiter,
-                 params: P.MonitorParams, init_tag: int = 1, apply_m=None):
+                 params: P.MonitorParams, init_tag: int = 1, apply_m=None,
+                 return_monitor: bool = False):
     """``apply_m`` (optional) right-preconditions: Arnoldi runs on
     ``A M^{-1}`` and the Krylov correction is mapped back through
     ``M^{-1}`` at the end of each cycle.  In exact arithmetic right
@@ -64,6 +78,19 @@ def _solve_gmres(apply_a, b, x0, tol, restart, maxiter,
     def cycle(x, it0, mon, switches):
         r = b - apply_a(x, mon.tag)
         beta = jnp.linalg.norm(r)
+        # Record the explicitly recomputed restart residual: it is the one
+        # TRUE residual per cycle, and skipping it hands the switch
+        # metrics a gapped window (RSD/nDec/relDec computed as if the
+        # restart re-anchor never happened).  Guarded on ``it0 > 0``: the
+        # first cycle's beta is the INITIAL residual, which precedes
+        # iteration 0 -- recording it would misalign the window with the
+        # per-iteration residual stream the paper's monitor watches.
+        mon = jax.lax.cond(
+            it0 > 0,
+            lambda m: P.record(m, beta / bnorm),
+            lambda m: m,
+            mon,
+        )
         v0 = r / jnp.where(beta == 0, 1.0, beta)
         V = jnp.zeros((restart + 1, n), dtype).at[0].set(v0)
         H = jnp.zeros((restart + 1, restart), dtype)
@@ -153,7 +180,7 @@ def _solve_gmres(apply_a, b, x0, tol, restart, maxiter,
     x, it, mon, switches, relres = jax.lax.while_loop(
         outer_cond, outer_body, state
     )
-    return GMRESResult(
+    res = GMRESResult(
         x=x,
         iters=it,
         relres=relres,
@@ -161,6 +188,9 @@ def _solve_gmres(apply_a, b, x0, tol, restart, maxiter,
         switch_iters=switches,
         converged=relres <= tol,
     )
+    if return_monitor:  # debug/test hook: expose the residual window
+        return res, mon
+    return res
 
 
 def solve_gmres(

@@ -54,6 +54,7 @@ def solve_ir(
     params: P.MonitorParams | None = None,
     precond=None,
     restart: int = 30,
+    wire: str = "exact",
 ) -> IRResult:
     """Iterative refinement with a stepped inner solver.
 
@@ -71,6 +72,13 @@ def solve_ir(
     if inner not in ("cg", "gmres"):
         raise ValueError(f"inner must be 'cg' or 'gmres', got {inner}")
 
+    from repro.solvers.batched import _maybe_sharded
+
+    # Row-sharded operands ride the distributed operator (DESIGN.md §13):
+    # the outer tag-3 residual reads and the inner solves all go through
+    # the memoized sharded apply; ``wire`` picks the halo wire format
+    # (ignored for non-partitioned operands, like the batched solvers).
+    apply_a = _maybe_sharded(apply_a, wire)
     if isinstance(apply_a, (GSECSR, GSESellC)):
         from repro.solvers.cg import _gsecsr_operator
 

@@ -205,3 +205,127 @@ def test_bf16_larger_error_than_gse_at_same_iters():
     res_gse = solve_cg(make_gse_operator(g), b, tol=1e-30, maxiter=it,
                        params=_fast_params())
     assert float(res_gse.relres) <= float(res_bf.relres) * 1.5
+
+
+# ---------------------------------------------------------------------------
+# Givens rotation robustness (hypot-style scaling)
+# ---------------------------------------------------------------------------
+
+def test_givens_extreme_magnitudes_f64():
+    """Regression: sqrt(a*a + b*b) overflows to inf above ~1e154 and
+    underflows to 0 below ~1e-162 in f64, poisoning c/s and every later
+    rotation.  The scaled form must stay finite and orthonormal."""
+    from repro.solvers.gmres import _givens
+
+    extremes = [1e-300, 1e-160, 1e-30, 1.0, 1e30, 1e160, 1e300]
+    for av in extremes:
+        for bv in extremes:
+            for sa in (1.0, -1.0):
+                a = jnp.asarray(sa * av, jnp.float64)
+                b = jnp.asarray(bv, jnp.float64)
+                c, s, d = _givens(a, b)
+                assert np.isfinite(float(c)) and np.isfinite(float(s))
+                assert np.isfinite(float(d)), (av, bv)
+                # Rotation annihilates b: -s*a + c*b == 0 (to roundoff).
+                m = max(av, bv)
+                assert abs(float(-s * a + c * b)) <= 1e-15 * m
+                assert float(c * a + s * b) == pytest.approx(float(d),
+                                                             rel=1e-14)
+                assert float(c * c + s * s) == pytest.approx(1.0, rel=1e-14)
+
+
+def test_givens_extreme_magnitudes_f32():
+    """float32 (the sharded deployment dtype) overflows sqrt(a*a+b*b)
+    already at ~1e19 -- guaranteed territory for real residual scales."""
+    from repro.solvers.gmres import _givens
+
+    for av, bv in [(3e19, 1.0), (1.0, 3e19), (3e19, 3e19),
+                   (1e-30, 1e-30), (0.0, 1e-38)]:
+        a = jnp.asarray(av, jnp.float32)
+        b = jnp.asarray(bv, jnp.float32)
+        c, s, d = _givens(a, b)
+        assert np.isfinite(float(c)) and np.isfinite(float(s))
+        assert np.isfinite(float(d))
+        assert float(d) == pytest.approx(float(np.hypot(av, bv)), rel=1e-6)
+
+
+def test_givens_zero_inputs():
+    from repro.solvers.gmres import _givens
+
+    c, s, d = _givens(jnp.asarray(0.0), jnp.asarray(0.0))
+    assert (float(c), float(s), float(d)) == (1.0, 0.0, 0.0)
+
+
+def test_givens_property_random_matches_hypot():
+    from repro.solvers.gmres import _givens
+
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=80, deadline=None)
+    @given(
+        st.floats(min_value=-1e300, max_value=1e300,
+                  allow_nan=False, allow_infinity=False),
+        st.floats(min_value=-1e300, max_value=1e300,
+                  allow_nan=False, allow_infinity=False),
+    )
+    def check(av, bv):
+        c, s, d = _givens(jnp.asarray(av, jnp.float64),
+                          jnp.asarray(bv, jnp.float64))
+        ref = np.hypot(av, bv)
+        assert np.isfinite(float(d))
+        if ref > 0:
+            assert float(d) == pytest.approx(ref, rel=1e-14)
+            assert float(c * c + s * s) == pytest.approx(1.0, rel=1e-13)
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# GMRES monitor fidelity: the restart residual is recorded
+# ---------------------------------------------------------------------------
+
+def test_gmres_monitor_records_restart_residual():
+    """The explicitly recomputed restart residual beta = ||b - A x|| is
+    the one TRUE residual per cycle; the monitor window must contain it
+    (and exactly one record per inner iteration plus one per restart,
+    none for the first cycle -- double-record guard)."""
+    from repro.solvers.gmres import _solve_gmres
+
+    a = G.convection_diffusion_2d(12)
+    b, _ = _b_for(a)
+    op = make_fixed_operator(a)
+    params = P.MonitorParams(t=16, l=10_000, m=10_000)  # never switches
+    restart, maxiter = 4, 8
+    tol = jnp.asarray(1e-14, b.dtype)  # unreachable: exactly 2 full cycles
+    x0 = jnp.zeros_like(b)
+    res, mon = _solve_gmres(op, b, x0, tol, restart, maxiter, params,
+                            return_monitor=True)
+    assert int(res.iters) == maxiter
+    # 8 inner records + 1 restart record (second cycle only).
+    assert int(mon.count) == maxiter + 1
+    # The recorded restart residual equals ||b - A x_1||/||b|| for the
+    # first cycle's iterate, recomputed independently here.
+    res1 = _solve_gmres(op, b, x0, tol, restart, restart, params)
+    bnorm = float(jnp.linalg.norm(b))
+    beta = float(jnp.linalg.norm(b - op(res1.x, jnp.int32(1)))) / bnorm
+    window = np.asarray(mon.hist, np.float64)
+    assert np.isclose(window, beta, rtol=1e-12, atol=0.0).any(), (
+        f"restart residual {beta} missing from monitor window {window}"
+    )
+
+
+def test_gmres_monitor_no_restart_record_single_cycle():
+    """A solve that converges inside the first cycle records ONLY the
+    inner-iteration residuals (first-cycle guard: the initial residual
+    precedes iteration 0 and must not enter the window)."""
+    from repro.solvers.gmres import _solve_gmres
+
+    a = G.convection_diffusion_2d(8)
+    b, _ = _b_for(a)
+    op = make_fixed_operator(a)
+    params = P.MonitorParams(t=16, l=10_000, m=10_000)
+    res, mon = _solve_gmres(op, b, jnp.zeros_like(b),
+                            jnp.asarray(1e-14, b.dtype), 80, 80, params,
+                            return_monitor=True)
+    assert int(mon.count) == int(res.iters)

@@ -84,11 +84,28 @@ def init(params: MonitorParams, dtype=jnp.float64, tag: int = 1) -> MonitorState
 
 
 def record(state: MonitorState, resid: jnp.ndarray) -> MonitorState:
-    """Push one residual into the ring buffer."""
+    """Push one residual into the ring buffer.
+
+    Non-finite residuals are clamped to a huge finite sentinel before
+    entering the window: a single NaN would otherwise propagate through
+    mean/RSD and return NaN metrics FOREVER (every comparison in
+    C1/C2/C3 goes False), silently disabling switching for the rest of
+    the run -- the one regime where stepping the tag up is the fix
+    (DESIGN.md §14).  The sentinel is ``finfo.max ** 0.25`` (~1e77 in
+    f64): astronomically above any real relative residual, yet small
+    enough that the window mean and the squared deviations in RSD cannot
+    overflow to inf.  A breakdown iteration therefore reads as a huge
+    residual spike, which is exactly what C1 (stall-with-oscillation)
+    keys on.
+    """
     t = state.hist.shape[0]
     idx = state.count % t
+    r = resid.astype(state.hist.dtype)
+    big = jnp.asarray(jnp.finfo(state.hist.dtype).max ** 0.25,
+                      state.hist.dtype)
+    r = jnp.where(jnp.isfinite(r), r, big)
     return MonitorState(
-        hist=state.hist.at[idx].set(resid.astype(state.hist.dtype)),
+        hist=state.hist.at[idx].set(r),
         count=state.count + 1,
         tag=state.tag,
     )

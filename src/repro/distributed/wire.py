@@ -22,11 +22,54 @@ import jax.numpy as jnp
 
 from repro.core import gse
 
-__all__ = ["compressed_psum", "halo_all_gather"]
+__all__ = ["compressed_psum", "halo_all_gather", "set_wire_fault",
+           "wire_checksum"]
+
+
+# Wire fault-injection hook (robustness harness, DESIGN.md §14).  When
+# set, every halo payload passes through ``hook(name, arr)`` AFTER its
+# integrity checksum is computed and BEFORE the collective -- i.e. the
+# corruption happens "on the wire", which is exactly what the checksum
+# side-channel is meant to catch.  ``name`` is the wire segment
+# ("raw" for the exact/tag-3 float buffer; "head"/"tail1"/"table" for the
+# GSE-segmented payloads).  Production never sets this.
+_WIRE_FAULT = None
+
+
+def set_wire_fault(hook) -> None:
+    """Install (or clear, with ``None``) the wire fault-injection hook."""
+    global _WIRE_FAULT
+    _WIRE_FAULT = hook
+
+
+def _send(name: str, arr: jnp.ndarray) -> jnp.ndarray:
+    return arr if _WIRE_FAULT is None else _WIRE_FAULT(name, arr)
+
+
+def wire_checksum(arr: jnp.ndarray) -> jnp.ndarray:
+    """Traceable position-weighted uint32 checksum of a wire buffer.
+
+    Floats are bitcast to the same-width unsigned integers first, so the
+    checksum covers the exact bit pattern on the wire.  Each element is
+    weighted by a Knuth-hash of its flat position before summing --
+    a plain sum would miss swapped or permuted elements.
+    """
+    a = jnp.asarray(arr)
+    if jnp.issubdtype(a.dtype, jnp.floating):
+        bits = {2: jnp.uint16, 4: jnp.uint32, 8: jnp.uint64}[a.dtype.itemsize]
+        a = jax.lax.bitcast_convert_type(a, bits)
+    a = a.astype(jnp.uint64).ravel()
+    # Fold the high half into the low 32 bits BEFORE weighting: the final
+    # mod-2^32 mask would otherwise erase any flip in bits 32-63 of a
+    # 64-bit element (2^b * w === 0 mod 2^32 for b >= 32).
+    a = a ^ (a >> jnp.uint64(32))
+    w = jnp.arange(a.shape[0], dtype=jnp.uint64) * jnp.uint64(2654435761) \
+        + jnp.uint64(1)
+    return ((a * w).sum() & jnp.uint64(0xFFFFFFFF)).astype(jnp.uint32)
 
 
 def halo_all_gather(bnd: jnp.ndarray, axis_name: str, *, tag: int,
-                    wire: str = "gse", k: int = 8) -> jnp.ndarray:
+                    wire: str = "gse", k: int = 8, check: bool = False):
     """All-gather each shard's boundary buffer at the iteration's tag.
 
     Must be called INSIDE shard_map with ``axis_name`` manual.  ``bnd`` is
@@ -45,28 +88,53 @@ def halo_all_gather(bnd: jnp.ndarray, axis_name: str, *, tag: int,
         loses dynamic range, so exact bits ride the wire.
 
     The modeled payload is ``PartitionedGSECSR.halo_wire_bytes``.
+
+    With ``check=True`` returns ``(gathered, ok)``: each sender computes
+    a :func:`wire_checksum` of every payload segment before it leaves,
+    the tiny u32 checksums ride alongside, and every receiver recomputes
+    them on the gathered buffers -- ``ok`` is a replicated bool that goes
+    False if ANY shard's payload was corrupted in flight (DESIGN.md §14).
     """
     if wire not in ("gse", "exact"):
         raise ValueError(f"unknown wire mode {wire!r}; 'gse' or 'exact'")
     if wire == "exact" or tag == 3:
-        return jax.lax.all_gather(bnd, axis_name)
+        if not check:
+            return jax.lax.all_gather(_send("raw", bnd), axis_name)
+        ref = jax.lax.all_gather(wire_checksum(bnd), axis_name)
+        out = jax.lax.all_gather(_send("raw", bnd), axis_name)
+        got = jax.vmap(wire_checksum)(out)
+        return out, (got == ref).all()
     b32 = bnd.astype(jnp.float32)
     table = gse.extract_shared_exponents_jnp(b32, k)
     head, tail1 = gse.pack32_jnp(b32, table, k)
-    h_all = jax.lax.all_gather(head, axis_name)
-    tb_all = jax.lax.all_gather(table, axis_name)
+    sums, refs = [], []
+    if check:
+        sums = [wire_checksum(head), wire_checksum(table)]
+        if tag != 1:
+            sums.append(wire_checksum(tail1))
+        refs = [jax.lax.all_gather(c, axis_name) for c in sums]
+    h_all = jax.lax.all_gather(_send("head", head), axis_name)
+    tb_all = jax.lax.all_gather(_send("table", table), axis_name)
     if tag == 1:
         dec = jax.vmap(
             lambda h, tb: gse.decode32_jnp(
                 tb, h, jnp.zeros(h.shape, jnp.uint16), k, 1, jnp.float32
             )
         )(h_all, tb_all)
+        gathered = (h_all, tb_all)
     else:
-        t_all = jax.lax.all_gather(tail1, axis_name)
+        t_all = jax.lax.all_gather(_send("tail1", tail1), axis_name)
         dec = jax.vmap(
             lambda h, t, tb: gse.decode32_jnp(tb, h, t, k, 2, jnp.float32)
         )(h_all, t_all, tb_all)
-    return dec.astype(bnd.dtype)
+        gathered = (h_all, tb_all, t_all)
+    dec = dec.astype(bnd.dtype)
+    if not check:
+        return dec
+    ok = jnp.bool_(True)
+    for buf, ref in zip(gathered, refs):
+        ok = ok & (jax.vmap(wire_checksum)(buf) == ref).all()
+    return dec, ok
 
 
 def compressed_psum(grads: jnp.ndarray, axis_name: str, k: int = 8):

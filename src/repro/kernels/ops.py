@@ -6,6 +6,8 @@ interpret-mode selection (interpret=True on CPU, compiled on TPU).
 from __future__ import annotations
 
 import functools
+import zlib
+from collections import OrderedDict
 
 import jax
 import jax.numpy as jnp
@@ -27,8 +29,30 @@ __all__ = ["gse_decode", "gse_matmul", "gse_spmv_ell", "gse_spmm_ell",
 # Operand-pack cache accounting: one entry per (operator instance, layout
 # key).  ``hits``/``misses`` are module-global so tests (and the solve
 # service) can assert that repeated solves against one registered operator
-# perform ZERO host-side re-packing.
-PACK_STATS = {"hits": 0, "misses": 0}
+# perform ZERO host-side re-packing; ``evictions`` counts LRU drops and
+# ``corrupt`` counts checksum-mismatch detect-and-repack events
+# (DESIGN.md §14).
+PACK_STATS = {"hits": 0, "misses": 0, "evictions": 0, "corrupt": 0}
+
+# Per-operator-instance LRU bound.  Layout keys are few (one per
+# (layout, lane/c/sigma) combination a caller sweeps), but a long-lived
+# solve service re-registering layouts must not grow host memory without
+# limit; exceeding the bound evicts least-recently-used entries.
+PACK_CACHE_MAX = 8
+
+
+def _entry_checksum(entry) -> int:
+    """CRC32 over every array leaf of a packed-operand entry.
+
+    Computed once at build time and re-verified on every cache hit: a
+    silently corrupted pack (the fault model of DESIGN.md §14 -- host
+    memory bit-flips in long-lived service processes) is detected and
+    rebuilt instead of feeding garbage segments to every future solve.
+    """
+    ck = 0
+    for leaf in jax.tree_util.tree_leaves(entry):
+        ck = zlib.crc32(np.ascontiguousarray(np.asarray(leaf)).tobytes(), ck)
+    return ck
 
 
 def _cached_pack(a, key, build):
@@ -39,14 +63,30 @@ def _cached_pack(a, key, build):
     arrays live exactly as long as the operator, and every solver/benchmark
     path asking for the same layout gets the same arrays back without a
     numpy rescatter.
+
+    Entries are ``(packed, crc32)`` in an LRU ``OrderedDict`` bounded by
+    :data:`PACK_CACHE_MAX`; a hit re-verifies the checksum and a mismatch
+    counts in ``PACK_STATS['corrupt']`` and triggers a repack.
     """
-    cache = a.__dict__.setdefault("_pack_cache", {})
-    if key in cache:
-        PACK_STATS["hits"] += 1
-    else:
+    cache = a.__dict__.setdefault("_pack_cache", OrderedDict())
+    hit = key in cache
+    if hit:
+        entry, ck = cache[key]
+        if _entry_checksum(entry) != ck:
+            PACK_STATS["corrupt"] += 1
+            hit = False  # detected corruption: fall through to repack
+        else:
+            PACK_STATS["hits"] += 1
+            cache.move_to_end(key)
+    if not hit:
         PACK_STATS["misses"] += 1
-        cache[key] = build()
-    return cache[key]
+        entry = build()
+        cache[key] = (entry, _entry_checksum(entry))
+        cache.move_to_end(key)
+        while len(cache) > PACK_CACHE_MAX:
+            cache.popitem(last=False)
+            PACK_STATS["evictions"] += 1
+    return entry
 
 
 def _interpret_default() -> bool:

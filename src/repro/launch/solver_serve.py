@@ -25,18 +25,27 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 from typing import Dict, List, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import precision as P
+from repro.robustness.guards import (
+    DEFAULT_GUARDS,
+    GuardParams,
+    HEALTH_NONFINITE,
+    HEALTH_OK,
+    health_name,
+)
 from repro.sparse.csr import CSR, iteration_stream_bytes, pack_csr
 from repro.solvers.batched import (
     column_tags_at,
     solve_cg_batched,
     solve_pcg_batched,
 )
+from repro.solvers.cg import solve_cg, solve_pcg
 from repro.solvers.precond import make_jacobi, make_spai0
 
 __all__ = ["SolveRequest", "SolveReport", "SolverService"]
@@ -51,6 +60,8 @@ class SolveRequest:
     b: jnp.ndarray
     tol: float
     x0: Optional[jnp.ndarray] = None
+    deadline_s: Optional[float] = None  # wall-clock budget from submit()
+    t_submit: float = 0.0               # time.monotonic() at intake
 
 
 @dataclasses.dataclass
@@ -64,6 +75,15 @@ class SolveReport:
     switch_iters: np.ndarray  # (2,)
     est_bytes: int            # modeled byte share of the batch
     batch_size: int           # real requests in the slot it ran in
+    # Degradation reporting (DESIGN.md §14): structured health string
+    # (robustness.guards.HEALTH_NAMES, or "error" when the slot's solve
+    # itself raised), the first guard-trip iteration within the batched
+    # run (-1: never), how many bounded tag-3 retries this request
+    # consumed, and whether its deadline lapsed before recovery finished.
+    health: str = "ok"
+    trip_iter: int = -1
+    retries: int = 0
+    deadline_exceeded: bool = False
 
 
 @dataclasses.dataclass
@@ -93,18 +113,25 @@ class SolverService:
 
     def __init__(self, slots: int = 4,
                  params: P.MonitorParams | None = None,
-                 maxiter: int = 5000):
+                 maxiter: int = 5000,
+                 guards: GuardParams | None = DEFAULT_GUARDS,
+                 max_retries: int = 1):
         if slots < 1:
             raise ValueError(f"slots must be >= 1, got {slots}")
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
         self.slots = slots
         self.params = params or P.MonitorParams.for_cg()
         self.maxiter = maxiter
+        self.guards = guards
+        self.max_retries = max_retries
         self._ops: Dict[str, _Operator] = {}
         self._pending: List[SolveRequest] = []
         self._ids = itertools.count()
         self._solutions: Dict[int, jnp.ndarray] = {}
         self.stats = dict(batches=0, requests=0, padded_cols=0,
-                          modeled_bytes=0)
+                          modeled_bytes=0, retries=0, errors=0,
+                          deadline_exceeded=0)
 
     # -- registration ------------------------------------------------------
 
@@ -172,8 +199,18 @@ class SolverService:
 
     # -- request intake ----------------------------------------------------
 
-    def submit(self, handle: str, b, tol: float = 1e-8, x0=None) -> int:
-        """Queue one solve request; returns its request id."""
+    def submit(self, handle: str, b, tol: float = 1e-8, x0=None,
+               deadline_s: float | None = None) -> int:
+        """Queue one solve request; returns its request id.
+
+        Intake validation (DESIGN.md §14): ``b`` must match the handle's
+        dimension, be a floating dtype, and be entirely finite -- a NaN/Inf
+        right-hand side can never produce a meaningful solution, so it is
+        rejected HERE with ``ValueError`` instead of burning a batch slot
+        and coming back flagged ``nonfinite``.  ``deadline_s`` is a
+        wall-clock budget measured from submission; a lapsed deadline
+        suppresses tag-3 retry recovery for this request (the degraded
+        report still carries whatever the batched pass produced)."""
         op = self._ops.get(handle)
         if op is None:
             raise KeyError(f"unknown handle {handle!r}")
@@ -185,6 +222,16 @@ class SolverService:
                 f"b must be ({op.csr.shape[0]},) or ({op.csr.shape[0]}, 1) "
                 f"for handle {handle!r}; got {tuple(b.shape)}"
             )
+        if not jnp.issubdtype(b.dtype, jnp.floating):
+            raise ValueError(
+                f"b must have a floating dtype for handle {handle!r}; "
+                f"got {b.dtype}"
+            )
+        if not bool(jnp.isfinite(b).all()):
+            raise ValueError(
+                f"b contains non-finite entries (handle {handle!r}); "
+                "rejected at intake"
+            )
         if x0 is not None:
             x0 = jnp.asarray(x0)
             if x0.ndim == 2 and x0.shape[1] == 1:
@@ -193,8 +240,17 @@ class SolverService:
                 raise ValueError(
                     f"x0 shape {tuple(x0.shape)} != b shape {tuple(b.shape)}"
                 )
+            if not bool(jnp.isfinite(x0).all()):
+                raise ValueError(
+                    f"x0 contains non-finite entries (handle {handle!r}); "
+                    "rejected at intake"
+                )
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError(f"deadline_s must be > 0, got {deadline_s}")
         rid = next(self._ids)
-        self._pending.append(SolveRequest(rid, handle, b, float(tol), x0))
+        self._pending.append(SolveRequest(rid, handle, b, float(tol), x0,
+                                          deadline_s=deadline_s,
+                                          t_submit=time.monotonic()))
         return rid
 
     # -- batch execution ---------------------------------------------------
@@ -205,7 +261,13 @@ class SolverService:
 
         Solutions are retained only until the NEXT flush (claim them with
         :meth:`solution`), so a long-running service that only reads the
-        reports does not accumulate solved vectors without bound."""
+        reports does not accumulate solved vectors without bound.
+
+        Degradation contract (DESIGN.md §14): ``flush`` never raises out
+        of a slot -- a slot whose solve itself throws degrades to error
+        reports (``health="error"``, not converged, no solution) for its
+        requests, and every returned solution is either finite or flagged
+        by a non-ok health."""
         self._solutions.clear()
         buckets: Dict[tuple, List[SolveRequest]] = {}
         for req in self._pending:
@@ -217,7 +279,19 @@ class SolverService:
             op = self._ops[handle]
             for i in range(0, len(reqs), self.slots):
                 chunk = reqs[i:i + self.slots]
-                reports.update(self._run_slot(op, tol, chunk))
+                try:
+                    reports.update(self._run_slot(op, tol, chunk))
+                except Exception:  # degraded, never propagated
+                    self.stats["errors"] += 1
+                    for req in chunk:
+                        self._solutions.pop(req.id, None)
+                        reports[req.id] = SolveReport(
+                            id=req.id, handle=op.name, iters=0,
+                            relres=float("inf"), converged=False, tag=0,
+                            switch_iters=np.full(2, -1, np.int64),
+                            est_bytes=0, batch_size=len(chunk),
+                            health="error",
+                        )
         return reports
 
     def _run_slot(self, op: _Operator, tol: float,
@@ -238,33 +312,103 @@ class SolverService:
         if op.precond is not None:
             res = solve_pcg_batched(op.solve_op, b, op.precond, x0=x0,
                                     tol=tol, maxiter=self.maxiter,
-                                    params=self.params, wire=op.wire)
+                                    params=self.params, wire=op.wire,
+                                    guards=self.guards)
         else:
             res = solve_cg_batched(op.solve_op, b, x0=x0, tol=tol,
                                    maxiter=self.maxiter, params=self.params,
-                                   wire=op.wire)
+                                   wire=op.wire, guards=self.guards)
 
         iters = np.asarray(res.iters)
         sw = np.asarray(res.switch_iters)
+        nreal = len(reqs)
+        health = np.broadcast_to(
+            np.asarray(getattr(res, "health", 0)), iters.shape
+        ).astype(np.int64)
+        trip = np.broadcast_to(
+            np.asarray(getattr(res, "trip_iter", -1)), iters.shape
+        ).astype(np.int64)
         shares, total_bytes = self._byte_shares(op, iters, sw)
         self.stats["batches"] += 1
-        self.stats["requests"] += len(reqs)
+        self.stats["requests"] += nreal
         self.stats["padded_cols"] += pad
         self.stats["modeled_bytes"] += total_bytes
 
         out = {}
         for j, req in enumerate(reqs):
-            self._solutions[req.id] = res.x[:, j]
+            x = res.x[:, j]
+            it_j = int(iters[j])
+            relres_j = float(res.relres[j])
+            conv_j = bool(res.converged[j])
+            tag_j = int(res.tag[j])
+            sw_j = sw[j]
+            bytes_j = int(shares[j])
+            h_j = int(health[j])
+            trip_j = int(trip[j])
+            retries = 0
+            deadline_hit = False
+            x_finite = bool(jnp.isfinite(jnp.vdot(x, x)))
+            # Degraded column: bounded single-RHS retries at tag 3 (the
+            # exact path -- the strongest rung the escalation ladder has).
+            # A lapsed deadline suppresses retries; the degraded report
+            # still ships whatever the batched pass produced, flagged.
+            while (not conv_j or not x_finite) and retries < self.max_retries:
+                if req.deadline_s is not None and \
+                        time.monotonic() - req.t_submit > req.deadline_s:
+                    deadline_hit = True
+                    self.stats["deadline_exceeded"] += 1
+                    break
+                retries += 1
+                self.stats["retries"] += 1
+                warm = x if x_finite else req.x0
+                if op.precond is not None:
+                    r2 = solve_pcg(op.solve_op, req.b, op.precond, x0=warm,
+                                   tol=tol, maxiter=self.maxiter,
+                                   params=self.params, wire=op.wire,
+                                   guards=self.guards, init_tag=3)
+                else:
+                    r2 = solve_cg(op.solve_op, req.b, x0=warm, tol=tol,
+                                  maxiter=self.maxiter, params=self.params,
+                                  wire=op.wire, guards=self.guards,
+                                  init_tag=3)
+                rx_finite = bool(jnp.isfinite(jnp.vdot(r2.x, r2.x)))
+                r2_trip = int(getattr(r2, "trip_iter", -1))
+                if trip_j < 0 and r2_trip >= 0:
+                    trip_j = it_j + r2_trip
+                it_j += int(r2.iters)
+                relres_j = float(r2.relres)
+                conv_j = bool(r2.converged)
+                tag_j = int(r2.tag)
+                h_j = int(getattr(r2, "health", HEALTH_OK))
+                if rx_finite:
+                    x = r2.x
+                x_finite = x_finite or rx_finite
+                sh2, tot2 = self._byte_shares(
+                    op, np.asarray([int(r2.iters)]),
+                    np.asarray(r2.switch_iters).reshape(1, -1),
+                )
+                bytes_j += int(sh2[0])
+                self.stats["modeled_bytes"] += tot2
+            # Belt and braces: a non-finite solution NEVER leaves the
+            # service unflagged, whatever the solver reported.
+            if not x_finite and h_j == HEALTH_OK:
+                h_j = HEALTH_NONFINITE
+                conv_j = False
+            self._solutions[req.id] = x
             out[req.id] = SolveReport(
                 id=req.id,
                 handle=op.name,
-                iters=int(iters[j]),
-                relres=float(res.relres[j]),
-                converged=bool(res.converged[j]),
-                tag=int(res.tag[j]),
-                switch_iters=sw[j],
-                est_bytes=int(shares[j]),
-                batch_size=len(reqs),
+                iters=it_j,
+                relres=relres_j,
+                converged=conv_j,
+                tag=tag_j,
+                switch_iters=sw_j,
+                est_bytes=bytes_j,
+                batch_size=nreal,
+                health=health_name(h_j),
+                trip_iter=trip_j,
+                retries=retries,
+                deadline_exceeded=deadline_hit,
             )
         return out
 
@@ -358,7 +502,8 @@ def main():
             f"req {r.id}: iters={r.iters} relres={r.relres:.2e} "
             f"converged={r.converged} tag={r.tag} "
             f"switches={r.switch_iters.tolist()} "
-            f"est_bytes={r.est_bytes} batch={r.batch_size}/{args.slots}"
+            f"est_bytes={r.est_bytes} batch={r.batch_size}/{args.slots} "
+            f"health={r.health}"
         )
     s = svc.stats
     print(

@@ -1,0 +1,50 @@
+"""Robustness subsystem: solver guardrails, tag-escalation recovery, and
+fault injection (DESIGN.md §14).
+
+The paper's format makes precision promotion nearly free -- one packed
+copy readable at tags 1/2/3 -- but the solver stack was fast-when-healthy
+only: a tag-1 breakdown (p.Ap <= 0, NaN residual, stagnation) either
+burned the full ``maxiter`` budget or returned unflagged garbage.  This
+package supplies:
+
+  * :mod:`repro.robustness.guards` -- in-loop breakdown/divergence/
+    non-finite/stall detection for every solver loop, the structured
+    ``health`` status carried by every ``*Result``, and the host-side
+    tag-escalation recovery driver (roll back to the last finite
+    checkpoint, promote the tag, resume -- ultimately on the exact tag-3
+    path);
+  * :mod:`repro.robustness.faults` -- deterministic, seeded bit-flip
+    injection into GSE pack segments / shared-exponent tables / halo wire
+    buffers, segment checksums for silent-corruption detection, and
+    tag-dependent fault operators that break ONLY at low tags (the
+    recovery path's test harness).
+"""
+from repro.robustness.guards import (
+    DEFAULT_GUARDS,
+    GuardParams,
+    HEALTH_BREAKDOWN,
+    HEALTH_DIVERGED,
+    HEALTH_NONFINITE,
+    HEALTH_OK,
+    HEALTH_STALLED,
+    finalize_health,
+    guard_init,
+    guard_step,
+    health_name,
+    run_with_recovery,
+)
+
+__all__ = [
+    "DEFAULT_GUARDS",
+    "GuardParams",
+    "HEALTH_BREAKDOWN",
+    "HEALTH_DIVERGED",
+    "HEALTH_NONFINITE",
+    "HEALTH_OK",
+    "HEALTH_STALLED",
+    "finalize_health",
+    "guard_init",
+    "guard_step",
+    "health_name",
+    "run_with_recovery",
+]

@@ -17,7 +17,17 @@ Distributed subsystem (DESIGN.md §13): ``solve_cg_sharded`` /
 ``shard_map`` with a tag-aware GSE halo exchange; ``solve_cg`` /
 ``solve_pcg`` / the batched solvers dispatch there automatically when
 handed a ``distributed.partition.PartitionedGSECSR``.
+
+Robustness subsystem (DESIGN.md §14): every solver result carries a
+structured ``health`` status (``health_name`` renders it), the in-loop
+guardrails are tuned via ``GuardParams`` (``guards=None`` disables), and
+low-tag breakdowns recover by tag escalation on the same packed operand.
 """
+from repro.robustness.guards import (
+    DEFAULT_GUARDS,
+    GuardParams,
+    health_name,
+)
 from repro.solvers.batched import (
     BatchedCGResult,
     BatchedIRResult,
@@ -46,6 +56,9 @@ from repro.solvers.precond import (
 )
 
 __all__ = [
+    "DEFAULT_GUARDS",
+    "GuardParams",
+    "health_name",
     "CGResult",
     "BatchedCGResult",
     "BatchedIRResult",

@@ -38,6 +38,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import precision as P
+from repro.robustness.guards import (
+    DEFAULT_GUARDS,
+    GuardParams,
+    HEALTH_NONFINITE,
+    HEALTH_OK,
+    HEALTH_STALLED,
+    finalize_health,
+    guard_init,
+    guard_step,
+)
 from repro.sparse.csr import GSECSR, GSESellC, iteration_stream_bytes
 from repro.solvers.cg import _record_switch
 
@@ -59,6 +69,13 @@ class BatchedCGResult(NamedTuple):
     tag: jnp.ndarray           # (nrhs,) final precision tag per column
     switch_iters: jnp.ndarray  # (nrhs, 2) iteration of tag->2 / tag->3 (-1: never)
     converged: jnp.ndarray     # (nrhs,) bool
+    # Robustness (DESIGN.md §14): per-column health codes
+    # (robustness.guards.HEALTH_*) and first guard-trip iteration (-1:
+    # never).  A tripped column freezes (stops iterating) immediately;
+    # recovery for batched requests is the SERVING layer's bounded
+    # tag-3 retry (launch.solver_serve), not an in-batch escalation.
+    health: jnp.ndarray = HEALTH_OK    # (nrhs,) int32
+    trip_iter: jnp.ndarray = -1        # (nrhs,) int32
 
 
 class BatchedIRResult(NamedTuple):
@@ -68,6 +85,8 @@ class BatchedIRResult(NamedTuple):
     relres: np.ndarray         # (nrhs,) final TRUE (tag-3) relative residuals
     converged: np.ndarray      # (nrhs,) bool
     history: list              # nrhs lists of outer residual trajectories
+    # Per-column health codes, derived as in solvers.ir.IRResult.
+    health: np.ndarray = None  # (nrhs,) int
 
 
 def _maybe_sharded(apply_a, wire: str):
@@ -106,7 +125,7 @@ def _normalize_block(b, x0):
 
 
 def _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
-                         init_col, step_col):
+                         init_col, step_col, guards=None):
     """Shared batched while_loop: per-column monitors, masking, switches.
 
     ``init_col(b_j, x0_j, tag) -> dict`` builds one column's Krylov state
@@ -115,6 +134,15 @@ def _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
     single-RHS solver body at a traced per-column tag.  Everything else
     (monitor record/update, switch logging, convergence masking, per-
     column iteration counts) is identical across CG and PCG.
+
+    With ``guards`` (a ``GuardParams``), each column also carries its own
+    guard state (DESIGN.md §14): ``step_col`` surfaces the curvature
+    ``denom = p.Ap`` under key ``"denom"`` (popped before the carry so the
+    loop state stays fixed-shape across the guarded/unguarded cond
+    branches), PCG columns flag ``z.r < 0`` via their ``"rz"`` entry, and
+    a tripped column freezes exactly like a converged one.  Guards run
+    AFTER the iteration ops on scalars those ops already produced, so the
+    per-column bit-identity contract with single-RHS solves is untouched.
     """
     nrhs = b.shape[1]
     bnorms = []
@@ -125,6 +153,9 @@ def _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
         bnorms.append(bn)
         mon = P.init(params, dtype=b.dtype, tag=init_tag)
         c = init_col(b[:, j], x0[:, j], mon.tag)
+        c.pop("denom", None)
+        if guards is not None:
+            c["g"] = guard_init(jnp.sqrt(jnp.abs(c["rr"])) / bn)
         c.update(
             it=jnp.int32(0),
             mon=mon,
@@ -137,7 +168,10 @@ def _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
         return jnp.sqrt(jnp.abs(c["rr"])) / bnorms[j]
 
     def col_active(c, j):
-        return (col_relres(c, j) > tol) & (c["it"] < maxiter)
+        alive = (col_relres(c, j) > tol) & (c["it"] < maxiter)
+        if guards is not None:
+            alive = alive & (c["g"]["health"] == HEALTH_OK)
+        return alive
 
     def cond(cols):
         alive = [col_active(c, j) for j, c in enumerate(cols)]
@@ -146,8 +180,19 @@ def _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
     def step_one(j):
         def run(c):
             stepped = step_col(c, c["mon"].tag)
-            mon1 = P.record(c["mon"],
-                            jnp.sqrt(jnp.abs(stepped["rr"])) / bnorms[j])
+            denom = stepped.pop("denom", None)
+            relres_new = jnp.sqrt(jnp.abs(stepped["rr"])) / bnorms[j]
+            if guards is not None:
+                breakdown = False
+                finite_aux = ()
+                if "rz" in stepped:
+                    breakdown = stepped["rz"] < 0
+                    finite_aux = (stepped["rz"],)
+                stepped["g"] = guard_step(
+                    c["g"], c["it"], relres_new, guards,
+                    denom=denom, breakdown=breakdown, finite_aux=finite_aux,
+                )
+            mon1 = P.record(c["mon"], relres_new)
             mon2 = P.update_tag(mon1, params)
             sw = _record_switch(c["sw"], mon1, mon2, c["it"])
             stepped.update(it=c["it"] + 1, mon=mon2, sw=sw)
@@ -167,13 +212,34 @@ def _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
 
     cols = jax.lax.while_loop(cond, body, cols)
     relres = jnp.stack([col_relres(c, j) for j, c in enumerate(cols)])
+    if guards is not None:
+        per_col = [
+            finalize_health(
+                c["g"],
+                col_relres(c, j) <= tol,
+                col_relres(c, j),
+                x_finite=jnp.isfinite(jnp.vdot(c["x"], c["x"])),
+            )
+            for j, c in enumerate(cols)
+        ]
+        health = jnp.stack([h for h, _ in per_col])
+        trip_iter = jnp.stack([t for _, t in per_col])
+        converged = (relres <= tol) & jnp.stack(
+            [jnp.isfinite(jnp.vdot(c["x"], c["x"])) for c in cols]
+        )
+    else:
+        health = jnp.full((nrhs,), HEALTH_OK, jnp.int32)
+        trip_iter = jnp.full((nrhs,), -1, jnp.int32)
+        converged = relres <= tol
     return BatchedCGResult(
         x=jnp.stack([c["x"] for c in cols], axis=1),
         iters=jnp.stack([c["it"] for c in cols]),
         relres=relres,
         tag=jnp.stack([c["mon"].tag for c in cols]),
         switch_iters=jnp.stack([c["sw"] for c in cols]),
-        converged=relres <= tol,
+        converged=converged,
+        health=health,
+        trip_iter=trip_iter,
     )
 
 
@@ -181,9 +247,11 @@ def _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
 # Batched CG
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("maxiter", "params", "init_tag"))
-def _solve_cg_batched_fused(a, b, x0, tol, maxiter, params, init_tag=1):
-    from repro.solvers.fused_cg import fused_cg_step, gse_matvec
+@partial(jax.jit, static_argnames=("maxiter", "params", "init_tag", "guards"))
+def _solve_cg_batched_fused(a, b, x0, tol, maxiter, params, init_tag=1,
+                            guards=None):
+    from repro.solvers.fused_cg import (fused_cg_step, fused_cg_step_g,
+                                        gse_matvec)
 
     def init_col(bj, xj, tag):
         r0 = bj - gse_matvec(a, xj, tag)
@@ -191,15 +259,22 @@ def _solve_cg_batched_fused(a, b, x0, tol, maxiter, params, init_tag=1):
         return dict(x=xj, r=r0, p=r0, rr=rs)
 
     def step_col(c, tag):
-        x, r, p, rs = fused_cg_step(a, c["x"], c["r"], c["p"], c["rr"], tag)
-        return dict(x=x, r=r, p=p, rr=rs)
+        if guards is None:
+            x, r, p, rs = fused_cg_step(a, c["x"], c["r"], c["p"],
+                                        c["rr"], tag)
+            return dict(x=x, r=r, p=p, rr=rs)
+        x, r, p, rs, denom = fused_cg_step_g(a, c["x"], c["r"], c["p"],
+                                             c["rr"], tag)
+        return dict(x=x, r=r, p=p, rr=rs, denom=denom)
 
     return _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
-                                init_col, step_col)
+                                init_col, step_col, guards)
 
 
-@partial(jax.jit, static_argnames=("apply_a", "maxiter", "params", "init_tag"))
-def _solve_cg_batched(apply_a, b, x0, tol, maxiter, params, init_tag=1):
+@partial(jax.jit, static_argnames=("apply_a", "maxiter", "params", "init_tag",
+                                   "guards"))
+def _solve_cg_batched(apply_a, b, x0, tol, maxiter, params, init_tag=1,
+                      guards=None):
     def init_col(bj, xj, tag):
         r0 = bj - apply_a(xj, tag)
         rs = jnp.vdot(r0, r0)
@@ -215,10 +290,13 @@ def _solve_cg_batched(apply_a, b, x0, tol, maxiter, params, init_tag=1):
         rs_new = jnp.vdot(r, r)
         beta = rs_new / jnp.where(c["rr"] == 0, 1.0, c["rr"])
         p = r + beta * c["p"]
-        return dict(x=x, r=r, p=p, rr=rs_new)
+        out = dict(x=x, r=r, p=p, rr=rs_new)
+        if guards is not None:
+            out["denom"] = denom
+        return out
 
     return _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
-                                init_col, step_col)
+                                init_col, step_col, guards)
 
 
 def solve_cg_batched(
@@ -229,6 +307,7 @@ def solve_cg_batched(
     maxiter: int = 5000,
     params: P.MonitorParams | None = None,
     wire: str = "exact",
+    guards: GuardParams | None = DEFAULT_GUARDS,
 ) -> BatchedCGResult:
     """Stepped CG over an (n, nrhs) right-hand-side block.
 
@@ -249,6 +328,12 @@ def solve_cg_batched(
     batch is ``iteration_stream_bytes(a, tag, nrhs=n_active)`` -- matrix
     bytes once, vector bytes per active column; ``batched_run_bytes``
     accounts a whole run from the per-column results.
+
+    ``guards`` attaches per-column breakdown/divergence/non-finite/stall
+    detection (DESIGN.md §14); a tripped column freezes and reports its
+    health code.  There is no in-batch tag escalation -- the serving
+    layer retries flagged columns at tag 3 (``launch.solver_serve``).
+    ``guards=None`` compiles the pre-guard loop.
     """
     b, x0 = _normalize_block(b, x0)
     if params is None:
@@ -256,17 +341,21 @@ def solve_cg_batched(
     tol_ = jnp.asarray(tol, b.dtype)
     apply_a = _maybe_sharded(apply_a, wire)
     if isinstance(apply_a, (GSECSR, GSESellC)):
-        return _solve_cg_batched_fused(apply_a, b, x0, tol_, maxiter, params)
-    return _solve_cg_batched(apply_a, b, x0, tol_, maxiter, params)
+        return _solve_cg_batched_fused(apply_a, b, x0, tol_, maxiter, params,
+                                       guards=guards)
+    return _solve_cg_batched(apply_a, b, x0, tol_, maxiter, params,
+                             guards=guards)
 
 
 # ---------------------------------------------------------------------------
 # Batched PCG
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("maxiter", "params", "init_tag"))
-def _solve_pcg_batched_fused(a, m, b, x0, tol, maxiter, params, init_tag=1):
-    from repro.solvers.fused_cg import fused_pcg_step, gse_matvec
+@partial(jax.jit, static_argnames=("maxiter", "params", "init_tag", "guards"))
+def _solve_pcg_batched_fused(a, m, b, x0, tol, maxiter, params, init_tag=1,
+                             guards=None):
+    from repro.solvers.fused_cg import (fused_pcg_step, fused_pcg_step_g,
+                                        gse_matvec)
 
     def init_col(bj, xj, tag):
         r0 = bj - gse_matvec(a, xj, tag)
@@ -275,19 +364,24 @@ def _solve_pcg_batched_fused(a, m, b, x0, tol, maxiter, params, init_tag=1):
                     rr=jnp.vdot(r0, r0))
 
     def step_col(c, tag):
-        x, r, p, rz, rr = fused_pcg_step(
+        if guards is None:
+            x, r, p, rz, rr = fused_pcg_step(
+                a, m, c["x"], c["r"], c["p"], c["rz"], tag
+            )
+            return dict(x=x, r=r, p=p, rz=rz, rr=rr)
+        x, r, p, rz, rr, denom = fused_pcg_step_g(
             a, m, c["x"], c["r"], c["p"], c["rz"], tag
         )
-        return dict(x=x, r=r, p=p, rz=rz, rr=rr)
+        return dict(x=x, r=r, p=p, rz=rz, rr=rr, denom=denom)
 
     return _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
-                                init_col, step_col)
+                                init_col, step_col, guards)
 
 
 @partial(jax.jit, static_argnames=("apply_a", "apply_m", "maxiter", "params",
-                                   "init_tag"))
+                                   "init_tag", "guards"))
 def _solve_pcg_batched(apply_a, apply_m, b, x0, tol, maxiter, params,
-                       init_tag=1):
+                       init_tag=1, guards=None):
     def init_col(bj, xj, tag):
         r0 = bj - apply_a(xj, tag)
         z0 = apply_m(r0, tag)
@@ -306,10 +400,13 @@ def _solve_pcg_batched(apply_a, apply_m, b, x0, tol, maxiter, params,
         rr_new = jnp.vdot(r, r)
         beta = rz_new / jnp.where(c["rz"] == 0, 1.0, c["rz"])
         p = z + beta * c["p"]
-        return dict(x=x, r=r, p=p, rz=rz_new, rr=rr_new)
+        out = dict(x=x, r=r, p=p, rz=rz_new, rr=rr_new)
+        if guards is not None:
+            out["denom"] = denom
+        return out
 
     return _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
-                                init_col, step_col)
+                                init_col, step_col, guards)
 
 
 def solve_pcg_batched(
@@ -321,6 +418,7 @@ def solve_pcg_batched(
     maxiter: int = 5000,
     params: P.MonitorParams | None = None,
     wire: str = "exact",
+    guards: GuardParams | None = DEFAULT_GUARDS,
 ) -> BatchedCGResult:
     """Stepped preconditioned CG over an (n, nrhs) block.
 
@@ -329,7 +427,9 @@ def solve_pcg_batched(
     once per iteration however many columns ride along.  Column ``j`` is
     bit-identical to ``solve_pcg(apply_a, b[:, j], precond, ...)``.
     ``PartitionedGSECSR`` operands ride the distributed operator exactly
-    as in :func:`solve_cg_batched`.
+    as in :func:`solve_cg_batched`.  ``guards`` works as in
+    :func:`solve_cg_batched`, additionally flagging ``z.r < 0``
+    (indefinite-preconditioner breakdown) per column.
     """
     b, x0 = _normalize_block(b, x0)
     if params is None:
@@ -339,13 +439,14 @@ def solve_pcg_batched(
     if isinstance(apply_a, (GSECSR, GSESellC)) and hasattr(precond,
                                                            "apply_at"):
         return _solve_pcg_batched_fused(apply_a, precond, b, x0, tol_,
-                                        maxiter, params)
+                                        maxiter, params, guards=guards)
     apply_m = precond if callable(precond) else precond.apply
     if isinstance(apply_a, (GSECSR, GSESellC)):
         from repro.solvers.cg import _gsecsr_operator
 
         apply_a = _gsecsr_operator(apply_a)
-    return _solve_pcg_batched(apply_a, apply_m, b, x0, tol_, maxiter, params)
+    return _solve_pcg_batched(apply_a, apply_m, b, x0, tol_, maxiter, params,
+                              guards=guards)
 
 
 # ---------------------------------------------------------------------------
@@ -362,6 +463,7 @@ def solve_ir_batched(
     params: P.MonitorParams | None = None,
     precond=None,
     wire: str = "exact",
+    guards: GuardParams | None = DEFAULT_GUARDS,
 ) -> BatchedIRResult:
     """Batched stepped iterative refinement (the ``solve_ir`` outer loop
     over an (n, nrhs) block, inner solves batched).
@@ -411,10 +513,11 @@ def solve_ir_batched(
     x = jnp.zeros_like(b)
     total_inner = np.zeros(nrhs, np.int64)
     outer = np.zeros(nrhs, np.int64)
+    inner_health = np.zeros(nrhs, np.int64)
     r = b - apply3_block(x)
     relres = col_norms(r) / bnorms
     history = [[float(v)] for v in relres]
-    active = (relres > tol) & (outer < max_outer)
+    active = (relres > tol) & np.isfinite(relres) & (outer < max_outer)
     while active.any():
         mask = jnp.asarray(active)
         # Converged columns drop out of the inner batch NOW: zeroing their
@@ -425,29 +528,45 @@ def solve_ir_batched(
         r_in = jnp.where(mask[None, :], r, 0.0)
         if precond is not None:
             res = solve_pcg_batched(apply_a, r_in, precond, tol=inner_tol,
-                                    maxiter=inner_maxiter, params=params)
+                                    maxiter=inner_maxiter, params=params,
+                                    guards=guards)
         else:
             res = solve_cg_batched(apply_a, r_in, tol=inner_tol,
-                                   maxiter=inner_maxiter, params=params)
-        x = jnp.where(mask[None, :], x + res.x, x)  # correct active cols only
+                                   maxiter=inner_maxiter, params=params,
+                                   guards=guards)
+        inner_health[active] = np.asarray(res.health)[active]
+        # A non-finite correction column is never folded into x -- that
+        # column deactivates carrying its inner health code.
+        col_fin = np.asarray(jnp.isfinite(res.x).all(axis=0))
+        take = mask & jnp.asarray(col_fin)
+        x = jnp.where(take[None, :], x + res.x, x)
         iters = np.asarray(res.iters)
         conv = np.asarray(res.converged)
         total_inner[active] += iters[active]
-        outer[active] += 1
+        outer[active & col_fin] += 1
         r = b - apply3_block(x)
         relres = col_norms(r) / bnorms
         for j in range(nrhs):
-            if active[j]:
+            if active[j] and col_fin[j]:
                 history[j].append(float(relres[j]))
         stalled = (~conv) & (iters == 0)  # no-progress guard, per column
-        active = active & (relres > tol) & ~stalled & (outer < max_outer)
+        active = (active & (relres > tol) & np.isfinite(relres) & ~stalled
+                  & col_fin & (outer < max_outer))
+    converged = (relres <= tol) & np.isfinite(relres)
+    health = np.where(
+        converged, HEALTH_OK,
+        np.where(~np.isfinite(relres), HEALTH_NONFINITE,
+                 np.where(inner_health != HEALTH_OK, inner_health,
+                          HEALTH_STALLED)),
+    ).astype(np.int64)
     return BatchedIRResult(
         x=x,
         outer_iters=outer,
         inner_iters=total_inner,
         relres=relres,
-        converged=relres <= tol,
+        converged=converged,
         history=[np.asarray(h) for h in history],
+        health=health,
     )
 
 

@@ -24,6 +24,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import precision as P
+from repro.robustness.guards import (
+    DEFAULT_GUARDS,
+    GuardParams,
+    HEALTH_OK,
+    finalize_health,
+    guard_init,
+    guard_step,
+    run_with_recovery,
+)
 from repro.sparse.csr import GSECSR, GSESellC
 
 __all__ = ["CGResult", "solve_cg", "solve_pcg"]
@@ -81,11 +90,62 @@ class CGResult(NamedTuple):
     tag: jnp.ndarray         # final precision tag
     switch_iters: jnp.ndarray  # (2,) iteration of tag->2 and tag->3 (-1: never)
     converged: jnp.ndarray
+    # Robustness (DESIGN.md §14): structured health code
+    # (robustness.guards.HEALTH_*, name via ``health_name``) and the first
+    # iteration a guard tripped (-1: never; >= 0 with health == ok means
+    # "tripped, then recovered via tag escalation").
+    health: jnp.ndarray = HEALTH_OK
+    trip_iter: jnp.ndarray = -1
 
 
-@partial(jax.jit, static_argnames=("apply_a", "maxiter", "params", "init_tag"))
+def _guarded_init(state, relres0, guards):
+    """Attach guard state + last-finite checkpoint to a loop state dict."""
+    if guards is not None:
+        state["g"] = guard_init(relres0)
+        state["ckpt"] = state["x"]
+    return state
+
+
+def _guarded_cond(s, ok, guards):
+    """AND the guard's health into a loop condition (no-op with guards off)."""
+    if guards is not None:
+        ok = ok & (s["g"]["health"] == HEALTH_OK)
+    return ok
+
+
+def _guarded_body(s, out, relres_new, guards, *, denom=None, breakdown=False,
+                  finite_aux=()):
+    """Run the guard over an iteration's new state and roll the checkpoint.
+
+    Called AFTER the update arithmetic (which is identical with guards on
+    or off -- the bit-identity contracts); records health/trip and keeps
+    ``ckpt`` at the last state the guard judged healthy, which is what
+    tag-escalation recovery rolls back to.
+    """
+    if guards is None:
+        return out
+    g = guard_step(s["g"], s["it"], relres_new, guards, denom=denom,
+                   breakdown=breakdown, finite_aux=finite_aux)
+    out["g"] = g
+    out["ckpt"] = jnp.where(g["health"] == HEALTH_OK, out["x"], s["ckpt"])
+    return out
+
+
+def _guarded_result(out, relres, tol, guards, make):
+    """Finalize health/trip and build ``(result, ckpt)`` from a loop exit."""
+    conv = relres <= tol
+    g = out.get("g") if guards is not None else None
+    health, trip = finalize_health(g, conv, relres)
+    res = make(conv, health, trip)
+    ckpt = out["ckpt"] if guards is not None else out["x"]
+    return res, ckpt
+
+
+@partial(jax.jit, static_argnames=("apply_a", "maxiter", "params", "init_tag",
+                                   "guards", "return_ckpt"))
 def _solve_cg(apply_a, b, x0, tol, maxiter, params: P.MonitorParams,
-              init_tag: int = 1):
+              init_tag: int = 1, guards: GuardParams | None = None,
+              return_ckpt: bool = False):
     dtype = b.dtype
     bnorm = jnp.linalg.norm(b)
     bnorm = jnp.where(bnorm == 0, 1.0, bnorm)
@@ -105,8 +165,11 @@ def _solve_cg(apply_a, b, x0, tol, maxiter, params: P.MonitorParams,
     def relres(s):
         return jnp.sqrt(jnp.abs(s["rs"])) / bnorm
 
+    state = _guarded_init(state, relres(state), guards)
+
     def cond(s):
-        return (relres(s) > tol) & (s["it"] < maxiter)
+        return _guarded_cond(s, (relres(s) > tol) & (s["it"] < maxiter),
+                             guards)
 
     def body(s):
         tag = s["mon"].tag
@@ -121,19 +184,27 @@ def _solve_cg(apply_a, b, x0, tol, maxiter, params: P.MonitorParams,
         switches = _record_switch(s["switches"], mon, mon2, s["it"])
         beta = rs_new / jnp.where(s["rs"] == 0, 1.0, s["rs"])
         p = r + beta * s["p"]
-        return dict(
+        out = dict(
             x=x, r=r, p=p, rs=rs_new, it=s["it"] + 1, mon=mon2, switches=switches
         )
+        return _guarded_body(s, out, jnp.sqrt(jnp.abs(rs_new)) / bnorm,
+                             guards, denom=denom)
 
     out = jax.lax.while_loop(cond, body, state)
-    return CGResult(
-        x=out["x"],
-        iters=out["it"],
-        relres=relres(out),
-        tag=out["mon"].tag,
-        switch_iters=out["switches"],
-        converged=relres(out) <= tol,
+    res, ckpt = _guarded_result(
+        out, relres(out), tol, guards,
+        lambda conv, health, trip: CGResult(
+            x=out["x"],
+            iters=out["it"],
+            relres=relres(out),
+            tag=out["mon"].tag,
+            switch_iters=out["switches"],
+            converged=conv,
+            health=health,
+            trip_iter=trip,
+        ),
     )
+    return (res, ckpt) if return_ckpt else res
 
 
 def _record_switch(switches, mon, mon2, it):
@@ -149,17 +220,21 @@ def _record_switch(switches, mon, mon2, it):
     return jnp.where(stepped, switches.at[slot].set(it + 1), switches)
 
 
-@partial(jax.jit, static_argnames=("maxiter", "params", "init_tag"))
+@partial(jax.jit, static_argnames=("maxiter", "params", "init_tag", "guards",
+                                   "return_ckpt"))
 def _solve_cg_fused(a, b, x0, tol, maxiter, params: P.MonitorParams,
-                    init_tag: int = 1):
+                    init_tag: int = 1, guards: GuardParams | None = None,
+                    return_ckpt: bool = False):
     """Fused-path CG over a ``GSECSR`` operand (DESIGN.md §4).
 
     Same trajectory as ``_solve_cg`` with the GSE operator -- each
     iteration is one ``fused_cg_step``: the values are decoded once at the
     monitor's current tag and the dots/axpys/residual norm ride the same
-    sweep as the SpMV.
+    sweep as the SpMV.  With guards the step also surfaces the curvature
+    ``p.Ap`` it already computed (``fused_cg_step_g``) -- the update
+    arithmetic is unchanged either way.
     """
-    from repro.solvers.fused_cg import fused_cg_step, gse_matvec
+    from repro.solvers.fused_cg import fused_cg_step, fused_cg_step_g, gse_matvec
 
     dtype = b.dtype
     bnorm = jnp.linalg.norm(b)
@@ -180,35 +255,53 @@ def _solve_cg_fused(a, b, x0, tol, maxiter, params: P.MonitorParams,
     def relres(s):
         return jnp.sqrt(jnp.abs(s["rs"])) / bnorm
 
+    state = _guarded_init(state, relres(state), guards)
+
     def cond(s):
-        return (relres(s) > tol) & (s["it"] < maxiter)
+        return _guarded_cond(s, (relres(s) > tol) & (s["it"] < maxiter),
+                             guards)
 
     def body(s):
-        x, r, p, rs_new = fused_cg_step(
-            a, s["x"], s["r"], s["p"], s["rs"], s["mon"].tag
-        )
+        if guards is None:
+            x, r, p, rs_new = fused_cg_step(
+                a, s["x"], s["r"], s["p"], s["rs"], s["mon"].tag
+            )
+            denom = None
+        else:
+            x, r, p, rs_new, denom = fused_cg_step_g(
+                a, s["x"], s["r"], s["p"], s["rs"], s["mon"].tag
+            )
         mon = P.record(s["mon"], jnp.sqrt(jnp.abs(rs_new)) / bnorm)
         mon2 = P.update_tag(mon, params)
         switches = _record_switch(s["switches"], mon, mon2, s["it"])
-        return dict(
+        out = dict(
             x=x, r=r, p=p, rs=rs_new, it=s["it"] + 1, mon=mon2, switches=switches
         )
+        return _guarded_body(s, out, jnp.sqrt(jnp.abs(rs_new)) / bnorm,
+                             guards, denom=denom)
 
     out = jax.lax.while_loop(cond, body, state)
-    return CGResult(
-        x=out["x"],
-        iters=out["it"],
-        relres=relres(out),
-        tag=out["mon"].tag,
-        switch_iters=out["switches"],
-        converged=relres(out) <= tol,
+    res, ckpt = _guarded_result(
+        out, relres(out), tol, guards,
+        lambda conv, health, trip: CGResult(
+            x=out["x"],
+            iters=out["it"],
+            relres=relres(out),
+            tag=out["mon"].tag,
+            switch_iters=out["switches"],
+            converged=conv,
+            health=health,
+            trip_iter=trip,
+        ),
     )
+    return (res, ckpt) if return_ckpt else res
 
 
 @partial(jax.jit, static_argnames=("apply_a", "apply_m", "maxiter", "params",
-                                   "init_tag"))
+                                   "init_tag", "guards", "return_ckpt"))
 def _solve_pcg(apply_a, apply_m, b, x0, tol, maxiter, params: P.MonitorParams,
-               init_tag: int = 1):
+               init_tag: int = 1, guards: GuardParams | None = None,
+               return_ckpt: bool = False):
     """Preconditioned CG: ``z = M^{-1} r`` at the monitor's current tag.
 
     The recurrence runs on ``rz = r.z``; the monitor sees the plain
@@ -236,8 +329,11 @@ def _solve_pcg(apply_a, apply_m, b, x0, tol, maxiter, params: P.MonitorParams,
     def relres(s):
         return jnp.sqrt(jnp.abs(s["rr"])) / bnorm
 
+    state = _guarded_init(state, relres(state), guards)
+
     def cond(s):
-        return (relres(s) > tol) & (s["it"] < maxiter)
+        return _guarded_cond(s, (relres(s) > tol) & (s["it"] < maxiter),
+                             guards)
 
     def body(s):
         tag = s["mon"].tag
@@ -254,32 +350,45 @@ def _solve_pcg(apply_a, apply_m, b, x0, tol, maxiter, params: P.MonitorParams,
         switches = _record_switch(s["switches"], mon, mon2, s["it"])
         beta = rz_new / jnp.where(s["rz"] == 0, 1.0, s["rz"])
         p = z + beta * s["p"]
-        return dict(
+        out = dict(
             x=x, r=r, p=p, rz=rz_new, rr=rr_new, it=s["it"] + 1, mon=mon2,
             switches=switches,
         )
+        # z.r < 0 breaks PCG's M-SPD contract: an extra breakdown predicate.
+        return _guarded_body(s, out, jnp.sqrt(jnp.abs(rr_new)) / bnorm,
+                             guards, denom=denom, breakdown=rz_new < 0,
+                             finite_aux=(rz_new,))
 
     out = jax.lax.while_loop(cond, body, state)
-    return CGResult(
-        x=out["x"],
-        iters=out["it"],
-        relres=relres(out),
-        tag=out["mon"].tag,
-        switch_iters=out["switches"],
-        converged=relres(out) <= tol,
+    res, ckpt = _guarded_result(
+        out, relres(out), tol, guards,
+        lambda conv, health, trip: CGResult(
+            x=out["x"],
+            iters=out["it"],
+            relres=relres(out),
+            tag=out["mon"].tag,
+            switch_iters=out["switches"],
+            converged=conv,
+            health=health,
+            trip_iter=trip,
+        ),
     )
+    return (res, ckpt) if return_ckpt else res
 
 
-@partial(jax.jit, static_argnames=("maxiter", "params", "init_tag"))
+@partial(jax.jit, static_argnames=("maxiter", "params", "init_tag", "guards",
+                                   "return_ckpt"))
 def _solve_pcg_fused(a, m, b, x0, tol, maxiter, params: P.MonitorParams,
-                     init_tag: int = 1):
+                     init_tag: int = 1, guards: GuardParams | None = None,
+                     return_ckpt: bool = False):
     """Fused-path PCG over a ``GSECSR`` operand and a pytree preconditioner.
 
     Each iteration is one ``fused_pcg_step``: operator decode and
     preconditioner apply ride the same tag branch (DESIGN.md §10), with
     the exact arithmetic of ``_solve_pcg`` -- bit-identical trajectories.
     """
-    from repro.solvers.fused_cg import fused_pcg_step, gse_matvec
+    from repro.solvers.fused_cg import (fused_pcg_step, fused_pcg_step_g,
+                                        gse_matvec)
 
     dtype = b.dtype
     bnorm = jnp.linalg.norm(b)
@@ -302,30 +411,48 @@ def _solve_pcg_fused(a, m, b, x0, tol, maxiter, params: P.MonitorParams,
     def relres(s):
         return jnp.sqrt(jnp.abs(s["rr"])) / bnorm
 
+    state = _guarded_init(state, relres(state), guards)
+
     def cond(s):
-        return (relres(s) > tol) & (s["it"] < maxiter)
+        return _guarded_cond(s, (relres(s) > tol) & (s["it"] < maxiter),
+                             guards)
 
     def body(s):
-        x, r, p, rz_new, rr_new = fused_pcg_step(
-            a, m, s["x"], s["r"], s["p"], s["rz"], s["mon"].tag
-        )
+        if guards is None:
+            x, r, p, rz_new, rr_new = fused_pcg_step(
+                a, m, s["x"], s["r"], s["p"], s["rz"], s["mon"].tag
+            )
+            denom = None
+        else:
+            x, r, p, rz_new, rr_new, denom = fused_pcg_step_g(
+                a, m, s["x"], s["r"], s["p"], s["rz"], s["mon"].tag
+            )
         mon = P.record(s["mon"], jnp.sqrt(jnp.abs(rr_new)) / bnorm)
         mon2 = P.update_tag(mon, params)
         switches = _record_switch(s["switches"], mon, mon2, s["it"])
-        return dict(
+        out = dict(
             x=x, r=r, p=p, rz=rz_new, rr=rr_new, it=s["it"] + 1, mon=mon2,
             switches=switches,
         )
+        return _guarded_body(s, out, jnp.sqrt(jnp.abs(rr_new)) / bnorm,
+                             guards, denom=denom, breakdown=rz_new < 0,
+                             finite_aux=(rz_new,))
 
     out = jax.lax.while_loop(cond, body, state)
-    return CGResult(
-        x=out["x"],
-        iters=out["it"],
-        relres=relres(out),
-        tag=out["mon"].tag,
-        switch_iters=out["switches"],
-        converged=relres(out) <= tol,
+    res, ckpt = _guarded_result(
+        out, relres(out), tol, guards,
+        lambda conv, health, trip: CGResult(
+            x=out["x"],
+            iters=out["it"],
+            relres=relres(out),
+            tag=out["mon"].tag,
+            switch_iters=out["switches"],
+            converged=conv,
+            health=health,
+            trip_iter=trip,
+        ),
     )
+    return (res, ckpt) if return_ckpt else res
 
 
 def _finish_with_correction(res, b, tol, maxiter, apply3, resume):
@@ -349,6 +476,9 @@ def _finish_with_correction(res, b, tol, maxiter, apply3, resume):
         tag=res2.tag,
         switch_iters=res.switch_iters,
         converged=res2.converged,
+        health=res2.health,
+        trip_iter=jnp.where(res2.trip_iter >= 0,
+                            res2.trip_iter + res.iters, res.trip_iter),
     )
 
 
@@ -377,6 +507,9 @@ def solve_pcg(
     params: P.MonitorParams | None = None,
     final_correction: bool = False,
     wire: str = "exact",
+    guards: GuardParams | None = DEFAULT_GUARDS,
+    recover: bool = True,
+    init_tag: int = 1,
 ) -> CGResult:
     """Preconditioned CG for SPD systems with stepped mixed precision.
 
@@ -393,6 +526,13 @@ def solve_pcg(
     (``solvers.sharded``; ``wire`` picks the halo wire format and is
     ignored otherwise).
 
+    ``guards`` (a :class:`repro.robustness.GuardParams`, default on; pass
+    ``None`` to compile the pre-guard loop) adds in-loop breakdown/
+    divergence/non-finite/stall detection; with ``recover`` a trip at
+    tag < 3 rolls back to the last finite checkpoint and escalates the
+    tag (DESIGN.md §14).  ``init_tag`` starts the monitor above tag 1
+    (e.g. 3 = the exact path -- the serving layer's fallback).
+
     ``b``/``x0`` may be ``(n,)`` or ``(n, 1)``; the solution comes back in
     ``b``'s layout.
     """
@@ -403,7 +543,9 @@ def solve_pcg(
 
         return solve_pcg_sharded(apply_a, b, precond, x0=x0, tol=tol,
                                  maxiter=maxiter, params=params, wire=wire,
-                                 final_correction=final_correction)
+                                 final_correction=final_correction,
+                                 guards=guards, recover=recover,
+                                 init_tag=init_tag)
     b, x0, orig_shape = _normalize_b_x0(b, x0)
     if x0 is None:
         x0 = jnp.zeros_like(b)
@@ -413,12 +555,22 @@ def solve_pcg(
     fused = (isinstance(apply_a, (GSECSR, GSESellC))
              and hasattr(precond, "apply_at"))
     if fused:
-        res = _solve_pcg_fused(apply_a, precond, b, x0, tol_, maxiter, params)
+        def run(x_start, budget, tag):
+            return _solve_pcg_fused(apply_a, precond, b, x_start, tol_,
+                                    budget, params, init_tag=tag,
+                                    guards=guards, return_ckpt=True)
     else:
         apply_m = precond if callable(precond) else precond.apply
         if isinstance(apply_a, (GSECSR, GSESellC)):
             apply_a = _gsecsr_operator(apply_a)
-        res = _solve_pcg(apply_a, apply_m, b, x0, tol_, maxiter, params)
+
+        def run(x_start, budget, tag):
+            return _solve_pcg(apply_a, apply_m, b, x_start, tol_, budget,
+                              params, init_tag=tag, guards=guards,
+                              return_ckpt=True)
+
+    res = run_with_recovery(run, x0, maxiter, init_tag=init_tag,
+                            recover=recover and guards is not None)
     if not final_correction:
         return _restore_shape(res, orig_shape)
     apply3_op = _gsecsr_operator(apply_a) if fused else apply_a
@@ -426,14 +578,9 @@ def solve_pcg(
     def apply3(v):
         return apply3_op(v, jnp.int32(3))
 
-    if fused:
-        def resume(xr, budget):
-            return _solve_pcg_fused(apply_a, precond, b, xr, tol_, budget,
-                                    params, init_tag=3)
-    else:
-        def resume(xr, budget):
-            return _solve_pcg(apply_a, apply_m, b, xr, tol_, budget,
-                              params, init_tag=3)
+    def resume(xr, budget):
+        return run(xr, budget, 3)[0]
+
     return _restore_shape(
         _finish_with_correction(res, b, tol, maxiter, apply3, resume),
         orig_shape,
@@ -449,6 +596,9 @@ def solve_cg(
     params: P.MonitorParams | None = None,
     final_correction: bool = False,
     wire: str = "exact",
+    guards: GuardParams | None = DEFAULT_GUARDS,
+    recover: bool = True,
+    init_tag: int = 1,
 ) -> CGResult:
     """CG for SPD systems.  ``apply_a(x, tag)`` is the (possibly multi-
     precision) operator; fixed-precision baselines ignore ``tag``.
@@ -467,6 +617,10 @@ def solve_cg(
     verifies the tag-3 residual after convergence and, if needed, resumes
     at full precision until the TRUE residual meets ``tol``.
 
+    ``guards``/``recover``/``init_tag``: see :func:`solve_pcg` -- in-loop
+    guardrails plus checkpoint-rollback tag-escalation recovery
+    (DESIGN.md §14).
+
     ``b``/``x0`` may be ``(n,)`` or ``(n, 1)``; the solution comes back in
     ``b``'s layout.
     """
@@ -477,7 +631,9 @@ def solve_cg(
 
         return solve_cg_sharded(apply_a, b, x0=x0, tol=tol, maxiter=maxiter,
                                 params=params, wire=wire,
-                                final_correction=final_correction)
+                                final_correction=final_correction,
+                                guards=guards, recover=recover,
+                                init_tag=init_tag)
     b, x0, orig_shape = _normalize_b_x0(b, x0)
     if x0 is None:
         x0 = jnp.zeros_like(b)
@@ -486,7 +642,13 @@ def solve_cg(
     tol_ = jnp.asarray(tol, b.dtype)
     fused = isinstance(apply_a, (GSECSR, GSESellC))
     solve = _solve_cg_fused if fused else _solve_cg
-    res = solve(apply_a, b, x0, tol_, maxiter, params)
+
+    def run(x_start, budget, tag):
+        return solve(apply_a, b, x_start, tol_, budget, params,
+                     init_tag=tag, guards=guards, return_ckpt=True)
+
+    res = run_with_recovery(run, x0, maxiter, init_tag=init_tag,
+                            recover=recover and guards is not None)
     if not final_correction:
         return _restore_shape(res, orig_shape)
     apply3_op = _gsecsr_operator(apply_a) if fused else apply_a
@@ -495,7 +657,7 @@ def solve_cg(
         return apply3_op(v, jnp.int32(3))
 
     def resume(xr, budget):
-        return solve(apply_a, b, xr, tol_, budget, params, init_tag=3)
+        return run(xr, budget, 3)[0]
 
     return _restore_shape(
         _finish_with_correction(res, b, tol, maxiter, apply3, resume),

@@ -30,10 +30,11 @@ import jax.numpy as jnp
 
 from repro.sparse.spmv import decode_operand
 
-__all__ = ["fused_cg_step", "fused_pcg_step", "gse_matvec"]
+__all__ = ["fused_cg_step", "fused_cg_step_g", "fused_pcg_step",
+           "fused_pcg_step_g", "gse_matvec"]
 
 
-def _step_at_tag(a, x, r, p, rs, *, tag: int, acc_dtype):
+def _step_at_tag(a, x, r, p, rs, *, tag: int, acc_dtype, with_denom=False):
     """One fused CG iteration at a fixed precision tag.
 
     ``a`` is a ``GSECSR`` or a SELL-C-σ packed ``GSESellC`` --
@@ -54,6 +55,8 @@ def _step_at_tag(a, x, r, p, rs, *, tag: int, acc_dtype):
     rs2 = jnp.vdot(r2, r2)                      # residual norm, same sweep
     beta = rs2 / jnp.where(rs == 0, 1.0, rs)
     p2 = r2 + beta * p
+    if with_denom:
+        return x2, r2, p2, rs2, denom
     return x2, r2, p2, rs2
 
 
@@ -75,7 +78,31 @@ def fused_cg_step(a, x, r, p, rs, tag, acc_dtype=jnp.float64):
     )
 
 
-def _pcg_step_at_tag(a, m, x, r, p, rz, *, tag: int, acc_dtype):
+def fused_cg_step_g(a, x, r, p, rs, tag, acc_dtype=jnp.float64):
+    """``fused_cg_step`` that ALSO returns the curvature ``denom = p.Ap``.
+
+    Same branch bodies, same op order -- the extra output is the scalar the
+    fused sweep already computed, exposed so the robustness guards
+    (DESIGN.md §14) can check the breakdown condition ``p.Ap <= 0``
+    without a second operator application (which would break the
+    fused/unfused bit-identity contract).
+    """
+    return jax.lax.switch(
+        jnp.clip(tag - 1, 0, 2),
+        [
+            partial(_step_at_tag, a, tag=1, acc_dtype=acc_dtype,
+                    with_denom=True),
+            partial(_step_at_tag, a, tag=2, acc_dtype=acc_dtype,
+                    with_denom=True),
+            partial(_step_at_tag, a, tag=3, acc_dtype=acc_dtype,
+                    with_denom=True),
+        ],
+        x, r, p, rs,
+    )
+
+
+def _pcg_step_at_tag(a, m, x, r, p, rz, *, tag: int, acc_dtype,
+                     with_denom=False):
     """One fused preconditioned-CG iteration at a fixed precision tag.
 
     The operator decode AND the preconditioner apply run at the same
@@ -98,6 +125,8 @@ def _pcg_step_at_tag(a, m, x, r, p, rz, *, tag: int, acc_dtype):
     rr2 = jnp.vdot(r2, r2)                     # monitor sees sqrt(rr)/||b||
     beta = rz2 / jnp.where(rz == 0, 1.0, rz)
     p2 = z2 + beta * p
+    if with_denom:
+        return x2, r2, p2, rz2, rr2, denom
     return x2, r2, p2, rz2, rr2
 
 
@@ -115,6 +144,23 @@ def fused_pcg_step(a, m, x, r, p, rz, tag, acc_dtype=jnp.float64):
             partial(_pcg_step_at_tag, a, m, tag=1, acc_dtype=acc_dtype),
             partial(_pcg_step_at_tag, a, m, tag=2, acc_dtype=acc_dtype),
             partial(_pcg_step_at_tag, a, m, tag=3, acc_dtype=acc_dtype),
+        ],
+        x, r, p, rz,
+    )
+
+
+def fused_pcg_step_g(a, m, x, r, p, rz, tag, acc_dtype=jnp.float64):
+    """``fused_pcg_step`` that also returns ``denom = p.Ap`` (the guards'
+    breakdown predicate) -- same branch bodies, same op order."""
+    return jax.lax.switch(
+        jnp.clip(tag - 1, 0, 2),
+        [
+            partial(_pcg_step_at_tag, a, m, tag=1, acc_dtype=acc_dtype,
+                    with_denom=True),
+            partial(_pcg_step_at_tag, a, m, tag=2, acc_dtype=acc_dtype,
+                    with_denom=True),
+            partial(_pcg_step_at_tag, a, m, tag=3, acc_dtype=acc_dtype,
+                    with_denom=True),
         ],
         x, r, p, rz,
     )

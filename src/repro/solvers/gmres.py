@@ -15,6 +15,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import precision as P
+from repro.robustness.guards import (
+    DEFAULT_GUARDS,
+    GuardParams,
+    HEALTH_OK,
+    finalize_health,
+    guard_init,
+    guard_step,
+    run_with_recovery,
+)
 from repro.solvers.cg import _record_switch
 
 __all__ = ["GMRESResult", "solve_gmres"]
@@ -27,6 +36,10 @@ class GMRESResult(NamedTuple):
     tag: jnp.ndarray
     switch_iters: jnp.ndarray  # (2,) inner-iteration of tag->2 / tag->3
     converged: jnp.ndarray
+    # Robustness (DESIGN.md §14): health code (robustness.guards.HEALTH_*)
+    # and first guard-trip inner iteration (-1: never).
+    health: jnp.ndarray = HEALTH_OK
+    trip_iter: jnp.ndarray = -1
 
 
 def _givens(a, b):
@@ -51,10 +64,13 @@ def _givens(a, b):
 
 
 @partial(jax.jit, static_argnames=("apply_a", "apply_m", "restart", "maxiter",
-                                   "params", "init_tag", "return_monitor"))
+                                   "params", "init_tag", "return_monitor",
+                                   "guards", "return_ckpt"))
 def _solve_gmres(apply_a, b, x0, tol, restart, maxiter,
                  params: P.MonitorParams, init_tag: int = 1, apply_m=None,
-                 return_monitor: bool = False):
+                 return_monitor: bool = False,
+                 guards: GuardParams | None = None,
+                 return_ckpt: bool = False):
     """``apply_m`` (optional) right-preconditions: Arnoldi runs on
     ``A M^{-1}`` and the Krylov correction is mapped back through
     ``M^{-1}`` at the end of each cycle.  In exact arithmetic right
@@ -75,9 +91,15 @@ def _solve_gmres(apply_a, b, x0, tol, restart, maxiter,
     bnorm = jnp.where(bnorm == 0, 1.0, bnorm)
     abstol = tol * bnorm
 
-    def cycle(x, it0, mon, switches):
+    def cycle(x, it0, mon, switches, gd, ckpt):
         r = b - apply_a(x, mon.tag)
         beta = jnp.linalg.norm(r)
+        if guards is not None:
+            # The recomputed restart residual is the one TRUE residual per
+            # cycle: a previous cycle whose back-substitution went
+            # non-finite (huge y through a near-singular triangle) shows
+            # up here even though the recursive |g[j+1]| looked fine.
+            gd = guard_step(gd, it0, beta / bnorm, guards)
         # Record the explicitly recomputed restart residual: it is the one
         # TRUE residual per cycle, and skipping it hands the switch
         # metrics a gapped window (RSD/nDec/relDec computed as if the
@@ -99,11 +121,14 @@ def _solve_gmres(apply_a, b, x0, tol, restart, maxiter,
         g = jnp.zeros((restart + 1,), dtype).at[0].set(beta)
 
         def inner_cond(c):
-            j, _, _, _, _, _, resid, _, _ = c
-            return (j < restart) & (resid > abstol) & (it0 + j < maxiter)
+            j, resid = c[0], c[6]
+            ok = (j < restart) & (resid > abstol) & (it0 + j < maxiter)
+            if guards is not None:
+                ok = ok & (c[9]["health"] == HEALTH_OK)
+            return ok
 
         def inner_body(c):
-            j, V, H, cs, sn, g, resid, mon, switches = c
+            j, V, H, cs, sn, g, resid, mon, switches = c[:9]
             if apply_m is None:
                 w = apply_a(V[j], mon.tag)
             else:
@@ -141,13 +166,25 @@ def _solve_gmres(apply_a, b, x0, tol, restart, maxiter,
             mon1 = P.record(mon, resid / bnorm)
             mon2 = P.update_tag(mon1, params)
             switches = _record_switch(switches, mon1, mon2, it0 + j)
-            return (j + 1, V, H, cs, sn, g, resid, mon2, switches)
+            out = (j + 1, V, H, cs, sn, g, resid, mon2, switches)
+            if guards is not None:
+                # Unhappy breakdown: the Krylov space closed (hj1 == 0)
+                # with the residual still above tolerance.  (hj1 == 0 AND
+                # resid <= abstol is the HAPPY breakdown -- converged.)
+                out = out + (guard_step(
+                    c[9], it0 + j, resid / bnorm, guards,
+                    breakdown=(hj1 == 0) & (resid > abstol),
+                    finite_aux=(hj1,),
+                ),)
+            return out
 
-        j, V, H, cs, sn, g, resid, mon, switches = jax.lax.while_loop(
-            inner_cond,
-            inner_body,
-            (jnp.int32(0), V, H, cs, sn, g, beta, mon, switches),
-        )
+        carry = (jnp.int32(0), V, H, cs, sn, g, beta, mon, switches)
+        if guards is not None:
+            carry = carry + (gd,)
+        outc = jax.lax.while_loop(inner_cond, inner_body, carry)
+        j, V, H, cs, sn, g, resid, mon, switches = outc[:9]
+        if guards is not None:
+            gd = outc[9]
 
         # Back substitution on the leading j x j triangle (padded to full
         # size with identity rows so a single static solve works).
@@ -163,33 +200,52 @@ def _solve_gmres(apply_a, b, x0, tol, restart, maxiter,
         if apply_m is not None:  # x = x0 + M^{-1} (V y), right precond
             u = apply_m(u, mon.tag)
         x_new = x + u
-        return x_new, it0 + j, mon, switches, resid / bnorm
+        if guards is None:
+            return x_new, it0 + j, mon, switches, resid / bnorm
+        fin = jnp.isfinite(jnp.vdot(x_new, x_new))
+        ckpt = jnp.where((gd["health"] == HEALTH_OK) & fin, x_new, ckpt)
+        return x_new, it0 + j, mon, switches, resid / bnorm, gd, ckpt
 
     def outer_cond(s):
-        x, it, mon, switches, relres = s
-        return (relres > tol) & (it < maxiter)
+        ok = (s[4] > tol) & (s[1] < maxiter)
+        if guards is not None:
+            ok = ok & (s[5]["health"] == HEALTH_OK)
+        return ok
 
     def outer_body(s):
-        x, it, mon, switches, _ = s
-        return cycle(x, it, mon, switches)
+        if guards is None:
+            x, it, mon, switches, _ = s
+            return cycle(x, it, mon, switches, None, None)
+        x, it, mon, switches, _, gd, ckpt = s
+        return cycle(x, it, mon, switches, gd, ckpt)
 
     mon0 = P.init(params, dtype=dtype, tag=init_tag)
     r0 = b - apply_a(x0, mon0.tag)
-    state = (x0, jnp.int32(0), mon0, jnp.full((2,), -1, jnp.int32),
-             jnp.linalg.norm(r0) / bnorm)
-    x, it, mon, switches, relres = jax.lax.while_loop(
-        outer_cond, outer_body, state
-    )
+    relres0 = jnp.linalg.norm(r0) / bnorm
+    state = (x0, jnp.int32(0), mon0, jnp.full((2,), -1, jnp.int32), relres0)
+    if guards is not None:
+        state = state + (guard_init(relres0), x0)
+    outs = jax.lax.while_loop(outer_cond, outer_body, state)
+    x, it, mon, switches, relres = outs[:5]
+    gd = outs[5] if guards is not None else None
+    ckpt = outs[6] if guards is not None else x
+    x_fin = jnp.isfinite(jnp.vdot(x, x))
+    conv = (relres <= tol) & x_fin
+    health, trip = finalize_health(gd, conv, relres, x_finite=x_fin)
     res = GMRESResult(
         x=x,
         iters=it,
         relres=relres,
         tag=mon.tag,
         switch_iters=switches,
-        converged=relres <= tol,
+        converged=conv,
+        health=health,
+        trip_iter=trip,
     )
     if return_monitor:  # debug/test hook: expose the residual window
         return res, mon
+    if return_ckpt:
+        return res, ckpt
     return res
 
 
@@ -203,6 +259,9 @@ def solve_gmres(
     params: P.MonitorParams | None = None,
     final_correction: bool = False,
     precond=None,
+    guards: GuardParams | None = DEFAULT_GUARDS,
+    recover: bool = True,
+    init_tag: int = 1,
 ) -> GMRESResult:
     """Restarted GMRES; ``apply_a(x, tag)`` and ``final_correction`` as in
     :func:`repro.solvers.cg.solve_cg`.
@@ -211,6 +270,11 @@ def solve_gmres(
     preconditioner object from :mod:`repro.solvers.precond` or a callable
     ``apply_m(r, tag)``.  The preconditioner rides the monitor's tag
     schedule exactly like the operator (DESIGN.md §10).
+
+    ``guards``/``recover``/``init_tag``: in-loop guardrails plus
+    checkpoint-rollback tag-escalation recovery, as in
+    :func:`repro.solvers.cg.solve_cg` (DESIGN.md §14).  GMRES checkpoints
+    at restart-cycle granularity (x only changes at cycle ends).
 
     ``b``/``x0`` may be ``(n,)`` or ``(n, 1)``; the solution comes back in
     ``b``'s layout.
@@ -226,8 +290,14 @@ def solve_gmres(
     if precond is not None:
         apply_m = precond if callable(precond) else precond.apply
     tol_ = jnp.asarray(tol, b.dtype)
-    res = _solve_gmres(apply_a, b, x0, tol_, restart, maxiter, params,
-                       apply_m=apply_m)
+
+    def run(x_start, budget, tag):
+        return _solve_gmres(apply_a, b, x_start, tol_, restart, budget,
+                            params, init_tag=tag, apply_m=apply_m,
+                            guards=guards, return_ckpt=True)
+
+    res = run_with_recovery(run, x0, maxiter, init_tag=init_tag,
+                            recover=recover and guards is not None)
     if not final_correction:
         return _restore_shape(res, orig_shape)
     from repro.solvers.cg import _finish_with_correction
@@ -236,8 +306,7 @@ def solve_gmres(
         return apply_a(v, jnp.int32(3))
 
     def resume(xr, budget):
-        return _solve_gmres(apply_a, b, xr, tol_, restart, budget, params,
-                            init_tag=3, apply_m=apply_m)
+        return run(xr, budget, 3)[0]
 
     return _restore_shape(
         _finish_with_correction(res, b, tol, maxiter, apply3, resume),

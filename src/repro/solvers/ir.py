@@ -27,6 +27,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import precision as P
+from repro.robustness.guards import (
+    DEFAULT_GUARDS,
+    GuardParams,
+    HEALTH_NONFINITE,
+    HEALTH_OK,
+    HEALTH_STALLED,
+)
 from repro.sparse.csr import GSECSR, GSESellC
 from repro.solvers.cg import solve_cg, solve_pcg
 from repro.solvers.gmres import solve_gmres
@@ -41,6 +48,11 @@ class IRResult(NamedTuple):
     relres: float             # final TRUE (tag-3) relative residual
     converged: bool
     history: np.ndarray       # (outer_iters+1,) outer residual trajectory
+    # Robustness (DESIGN.md §14): HEALTH_OK when converged; otherwise the
+    # failing inner solve's health code, HEALTH_NONFINITE if the outer
+    # tag-3 residual itself went non-finite, or HEALTH_STALLED on plain
+    # max_outer exhaustion.
+    health: int = HEALTH_OK
 
 
 def solve_ir(
@@ -55,6 +67,7 @@ def solve_ir(
     precond=None,
     restart: int = 30,
     wire: str = "exact",
+    guards: GuardParams | None = DEFAULT_GUARDS,
 ) -> IRResult:
     """Iterative refinement with a stepped inner solver.
 
@@ -65,6 +78,10 @@ def solve_ir(
     parameterizes the inner residual monitor (``MonitorParams``); each
     correction restarts the monitor at tag 1, so late corrections --
     whose right-hand sides are tiny -- get the cheap tags again.
+
+    ``guards`` threads the in-loop guardrails (DESIGN.md §14) into every
+    inner solve; a non-finite correction is never folded into ``x`` and
+    the report's ``health`` names the failing stage.
     """
     if params is None:
         params = (P.MonitorParams.for_cg() if inner == "cg"
@@ -103,31 +120,47 @@ def solve_ir(
     r = b - apply3(x)
     relres = float(jnp.linalg.norm(r)) / bnorm
     history = [relres]
-    while relres > tol and outer < max_outer:
+    inner_health = HEALTH_OK
+    while relres > tol and np.isfinite(relres) and outer < max_outer:
         if inner == "cg":
             if precond is not None:
                 res = solve_pcg(apply_a, r, precond, tol=inner_tol,
-                                maxiter=inner_maxiter, params=params)
+                                maxiter=inner_maxiter, params=params,
+                                guards=guards)
             else:
                 res = solve_cg(apply_a, r, tol=inner_tol,
-                               maxiter=inner_maxiter, params=params)
+                               maxiter=inner_maxiter, params=params,
+                               guards=guards)
         else:
             res = solve_gmres(apply_tagged, r, tol=inner_tol, restart=restart,
                               maxiter=inner_maxiter, params=params,
-                              precond=precond)
-        x = x + res.x          # full-precision correction
+                              precond=precond, guards=guards)
+        inner_health = int(getattr(res, "health", HEALTH_OK))
         total_inner += int(res.iters)
+        if not bool(jnp.isfinite(jnp.vdot(res.x, res.x))):
+            break  # never fold a non-finite correction into x
+        x = x + res.x          # full-precision correction
         outer += 1
         r = b - apply3(x)      # tag-3 residual: the one-copy high read
         relres = float(jnp.linalg.norm(r)) / bnorm
         history.append(relres)
         if not bool(res.converged) and int(res.iters) == 0:
             break  # inner solver made no progress; avoid spinning
+    converged = relres <= tol
+    if converged:
+        health = HEALTH_OK
+    elif not np.isfinite(relres):
+        health = HEALTH_NONFINITE
+    elif inner_health != HEALTH_OK:
+        health = inner_health
+    else:
+        health = HEALTH_STALLED
     return IRResult(
         x=x,
         outer_iters=outer,
         inner_iters=total_inner,
         relres=relres,
-        converged=relres <= tol,
+        converged=converged,
         history=np.asarray(history),
+        health=health,
     )

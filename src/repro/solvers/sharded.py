@@ -44,9 +44,18 @@ from repro.kernels.dist_spmv import (
     make_sharded_operator,
     shard_mesh,
 )
+from repro.robustness.guards import (
+    DEFAULT_GUARDS,
+    GuardParams,
+    finalize_health,
+    run_with_recovery,
+)
 from repro.solvers.cg import (
     CGResult,
     _finish_with_correction,
+    _guarded_body,
+    _guarded_cond,
+    _guarded_init,
     _normalize_b_x0,
     _record_switch,
     _restore_shape,
@@ -105,15 +114,18 @@ def _diag_apply_dispatch(m_parts, ei_bit_m, frac_bits_m):
 
 def _sharded_loop_fn(part: PartitionedGSECSR, kind: str, wire: str,
                      maxiter: int, params, init_tag: int,
-                     precond_meta=None):
+                     precond_meta=None, guards=None):
     """Build (and memoize on the partition) the jitted shard_map solver.
 
     The per-device body mirrors ``_solve_cg_fused``/``_solve_pcg_fused``
     op for op; only the dots go through ``psum`` and the operator is the
-    shard's local block + halo.
+    shard's local block + halo.  The guard state (DESIGN.md §14) runs on
+    the psum'd replicated scalars -- every shard latches the SAME health
+    code at the same iteration -- while the last-finite checkpoint stays
+    row-sharded alongside x.
     """
     key = ("_sharded_solve", kind, wire, maxiter, params, init_tag,
-           precond_meta)
+           precond_meta, guards)
     fn = part.__dict__.get(key)
     if fn is not None:
         return fn
@@ -135,6 +147,7 @@ def _sharded_loop_fn(part: PartitionedGSECSR, kind: str, wire: str,
             state = dict(x=x0, r=r0, p=r0, rs=_pdot(r0, r0),
                          it=jnp.int32(0), mon=mon,
                          switches=jnp.full((2,), -1, jnp.int32))
+            state = _guarded_init(state, relres(state["rs"]), guards)
 
             def body(s):
                 # EXACTLY fused_cg_step's op order, dots psum'd.
@@ -150,11 +163,15 @@ def _sharded_loop_fn(part: PartitionedGSECSR, kind: str, wire: str,
                 sw = _record_switch(s["switches"], mon1, mon2, s["it"])
                 beta = rs2 / jnp.where(s["rs"] == 0, 1.0, s["rs"])
                 p = r + beta * s["p"]
-                return dict(x=x, r=r, p=p, rs=rs2, it=s["it"] + 1,
-                            mon=mon2, switches=sw)
+                out = dict(x=x, r=r, p=p, rs=rs2, it=s["it"] + 1,
+                           mon=mon2, switches=sw)
+                return _guarded_body(s, out, relres(rs2), guards,
+                                     denom=denom)
 
             def cond(s):
-                return (relres(s["rs"]) > tol) & (s["it"] < maxiter)
+                return _guarded_cond(
+                    s, (relres(s["rs"]) > tol) & (s["it"] < maxiter), guards
+                )
 
             out = jax.lax.while_loop(cond, body, state)
             final_rel = relres(out["rs"])
@@ -167,6 +184,7 @@ def _sharded_loop_fn(part: PartitionedGSECSR, kind: str, wire: str,
             state = dict(x=x0, r=r0, p=z0, rz=_pdot(r0, z0),
                          rr=_pdot(r0, r0), it=jnp.int32(0), mon=mon,
                          switches=jnp.full((2,), -1, jnp.int32))
+            state = _guarded_init(state, relres(state["rr"]), guards)
 
             def step_at(s, tag: int):
                 # EXACTLY _pcg_step_at_tag's op order, dots psum'd; the
@@ -183,35 +201,49 @@ def _sharded_loop_fn(part: PartitionedGSECSR, kind: str, wire: str,
                 rr2 = _pdot(r, r)
                 beta = rz2 / jnp.where(s["rz"] == 0, 1.0, s["rz"])
                 p = z + beta * s["p"]
-                return dict(x=x, r=r, p=p, rz=rz2, rr=rr2)
+                stepped = dict(x=x, r=r, p=p, rz=rz2, rr=rr2)
+                if guards is not None:
+                    stepped["denom"] = denom
+                return stepped
 
             def body(s):
+                krylov = {k_: s[k_] for k_ in ("x", "r", "p", "rz", "rr")}
                 stepped = jax.lax.switch(
                     jnp.clip(s["mon"].tag - 1, 0, 2),
                     [partial(step_at, tag=t) for t in (1, 2, 3)],
-                    s,
+                    krylov,
                 )
+                denom = stepped.pop("denom", None)
                 mon1 = Prec.record(s["mon"], relres(stepped["rr"]))
                 mon2 = Prec.update_tag(mon1, params)
                 sw = _record_switch(s["switches"], mon1, mon2, s["it"])
+                rz2 = stepped["rz"]
                 stepped.update(it=s["it"] + 1, mon=mon2, switches=sw)
-                return stepped
+                return _guarded_body(s, stepped, relres(stepped["rr"]),
+                                     guards, denom=denom,
+                                     breakdown=rz2 < 0, finite_aux=(rz2,))
 
             def cond(s):
-                return (relres(s["rr"]) > tol) & (s["it"] < maxiter)
+                return _guarded_cond(
+                    s, (relres(s["rr"]) > tol) & (s["it"] < maxiter), guards
+                )
 
             out = jax.lax.while_loop(cond, body, state)
             final_rel = relres(out["rr"])
 
+        conv = final_rel <= tol
+        g = out.get("g") if guards is not None else None
+        health, trip = finalize_health(g, conv, final_rel)
+        ckpt = out["ckpt"] if guards is not None else out["x"]
         return (out["x"], out["it"], final_rel, out["mon"].tag,
-                out["switches"], final_rel <= tol)
+                out["switches"], conv, health, trip, ckpt)
 
     sharded = P(AXIS)
     fn = jax.jit(shard_map(
         run, mesh=mesh,
         in_specs=(sharded,) * 7 + (P(),) + (sharded,) * 3 + (P(),)
         + (sharded, sharded, P(), P()),
-        out_specs=(sharded, P(), P(), P(), P(), P()),
+        out_specs=(sharded, P(), P(), P(), P(), P(), P(), P(), sharded),
         check_rep=False,
     ))
     part.__dict__[key] = fn
@@ -224,7 +256,7 @@ def _empty_diag(part):
 
 
 def _run_sharded(part, kind, b, x0, tol, maxiter, params, init_tag, wire,
-                 precond=None):
+                 precond=None, guards=None, return_ckpt=False):
     n = part.shape[0]
     if precond is None:
         m_head, m_tail1, m_tail2, m_table = _empty_diag(part)
@@ -247,18 +279,20 @@ def _run_sharded(part, kind, b, x0, tol, maxiter, params, init_tag, wire,
         m_table = pk.table
         precond_meta = (pk.ei_bit, pk.frac_bits)
     fn = _sharded_loop_fn(part, kind, wire, maxiter, params, init_tag,
-                          precond_meta)
+                          precond_meta, guards)
     bnorm = jnp.linalg.norm(b)           # computed on the FULL vector so
     bnorm = jnp.where(bnorm == 0, 1.0, bnorm)  # it matches single-device
-    x, it, rel, tag, sw, conv = fn(
+    x, it, rel, tag, sw, conv, health, trip, ckpt = fn(
         part.colpak, part.head, part.tail1, part.tail2, part.row_ids,
         part.bnd_idx, part.halo_idx, part.table,
         m_head, m_tail1, m_tail2, m_table,
         _pad_to(b, part.n_padded), _pad_to(x0, part.n_padded),
         jnp.asarray(tol, b.dtype), bnorm,
     )
-    return CGResult(x=x[:n], iters=it, relres=rel, tag=tag,
-                    switch_iters=sw, converged=conv)
+    res = CGResult(x=x[:n], iters=it, relres=rel, tag=tag,
+                   switch_iters=sw, converged=conv, health=health,
+                   trip_iter=trip)
+    return (res, ckpt[:n]) if return_ckpt else res
 
 
 def solve_cg_sharded(
@@ -270,6 +304,9 @@ def solve_cg_sharded(
     params: Prec.MonitorParams | None = None,
     wire: str = "exact",
     final_correction: bool = False,
+    guards: GuardParams | None = DEFAULT_GUARDS,
+    recover: bool = True,
+    init_tag: int = 1,
 ) -> CGResult:
     """Distributed stepped CG over a row-sharded operator (DESIGN.md §13).
 
@@ -279,13 +316,25 @@ def solve_cg_sharded(
     every tag -- the parity-contract mode; ``"gse"``: tag-1/2 halos ship
     head(+tail1) segments, shrinking wire bytes with the SAME monitor
     schedule that shrinks HBM bytes).
+
+    ``guards``/``recover``/``init_tag`` mirror :func:`repro.solvers.cg.
+    solve_cg` (DESIGN.md §14): the guard runs on the psum'd replicated
+    scalars inside the shard_map, the checkpoint stays row-sharded, and
+    escalation restarts the whole sharded loop from the gathered
+    checkpoint at the promoted tag.
     """
     b, x0, orig_shape = _normalize_b_x0(b, x0)
     if x0 is None:
         x0 = jnp.zeros_like(b)
     if params is None:
         params = Prec.MonitorParams.for_cg()
-    res = _run_sharded(part, "cg", b, x0, tol, maxiter, params, 1, wire)
+
+    def run(x_start, budget, tag):
+        return _run_sharded(part, "cg", b, x_start, tol, budget, params,
+                            tag, wire, guards=guards, return_ckpt=True)
+
+    res = run_with_recovery(run, x0, maxiter, init_tag=init_tag,
+                            recover=recover and guards is not None)
     if not final_correction:
         return _restore_shape(res, orig_shape)
     op = make_sharded_operator(part, wire)
@@ -294,7 +343,7 @@ def solve_cg_sharded(
         return op(v, jnp.int32(3))
 
     def resume(xr, budget):
-        return _run_sharded(part, "cg", b, xr, tol, budget, params, 3, wire)
+        return run(xr, budget, 3)[0]
 
     return _restore_shape(
         _finish_with_correction(res, b, tol, maxiter, apply3, resume),
@@ -312,6 +361,9 @@ def solve_pcg_sharded(
     params: Prec.MonitorParams | None = None,
     wire: str = "exact",
     final_correction: bool = False,
+    guards: GuardParams | None = DEFAULT_GUARDS,
+    recover: bool = True,
+    init_tag: int = 1,
 ) -> CGResult:
     """Distributed stepped PCG.  Diagonal GSE preconditioners (Jacobi /
     SPAI-0) shard with the operator -- each device decodes its slice of
@@ -319,6 +371,7 @@ def solve_pcg_sharded(
     branch as the operator decode (the sharded twin of
     ``fused_pcg_step``).  Non-diagonal preconditioners fall back to the
     generic path over ``make_sharded_operator`` (full-vector apply).
+    ``guards``/``recover``/``init_tag``: see :func:`solve_cg_sharded`.
     """
     from repro.solvers.precond import DiagGSEPrecond
 
@@ -333,9 +386,16 @@ def solve_pcg_sharded(
         op = make_sharded_operator(part, wire)
         return solve_pcg(op, b.reshape(orig_shape), precond, x0=x0, tol=tol,
                          maxiter=maxiter, params=params,
-                         final_correction=final_correction)
-    res = _run_sharded(part, "pcg", b, x0, tol, maxiter, params, 1, wire,
-                       precond=precond)
+                         final_correction=final_correction, guards=guards,
+                         recover=recover, init_tag=init_tag)
+
+    def run(x_start, budget, tag):
+        return _run_sharded(part, "pcg", b, x_start, tol, budget, params,
+                            tag, wire, precond=precond, guards=guards,
+                            return_ckpt=True)
+
+    res = run_with_recovery(run, x0, maxiter, init_tag=init_tag,
+                            recover=recover and guards is not None)
     if not final_correction:
         return _restore_shape(res, orig_shape)
     op = make_sharded_operator(part, wire)
@@ -344,8 +404,7 @@ def solve_pcg_sharded(
         return op(v, jnp.int32(3))
 
     def resume(xr, budget):
-        return _run_sharded(part, "pcg", b, xr, tol, budget, params, 3,
-                            wire, precond=precond)
+        return run(xr, budget, 3)[0]
 
     return _restore_shape(
         _finish_with_correction(res, b, tol, maxiter, apply3, resume),

@@ -3,30 +3,34 @@
 Imported by every benchmark module -- enables float64 FIRST (the paper's
 reference arithmetic; without it everything silently degrades to f32 and
 the format-comparison errors drown in accumulation noise).
+
+ALL benchmark timing routes through ``repro.perf.timing`` (PR 7): best-of-k
+minimum with ``block_until_ready`` on every output.  The pre-PR-7 median
+estimator tracked host noise instead of kernel cost -- it is what made
+``gse_h`` look slower than the fp64 baseline in BENCH_spmv.json
+(DESIGN.md §15).
 """
 from __future__ import annotations
 
-import time
 from typing import Callable
 
 import jax
 
 jax.config.update("jax_enable_x64", True)
 
+from repro.perf import timing  # noqa: E402  (import after x64 setup)
+
 
 def time_fn(fn: Callable, *args, iters: int = 20, warmup: int = 3) -> float:
-    """Median wall time (us) of jitted fn over ``iters`` runs."""
-    for _ in range(warmup):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2] * 1e6
+    """Best-of-``iters`` wall time (us) of jitted fn (min over runs,
+    every output blocked on)."""
+    return timing.best_seconds(fn, *args, iters=iters, warmup=warmup) * 1e6
+
+
+def timed(fn: Callable, *args, iters: int = 2, warmup: int = 1, **kwargs):
+    """(output, best_seconds) of ``fn`` -- the shared helper for solver
+    benchmarks that need the result AND the time (fig89, robust_bench)."""
+    return timing.measure(fn, *args, iters=iters, warmup=warmup, **kwargs)
 
 
 def emit(name: str, us: float, derived: str = "") -> None:

@@ -19,13 +19,10 @@ the stream, under 2x -- of the nrhs=1 figure (DESIGN.md §11).
 """
 from __future__ import annotations
 
-import time
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, timed
 from repro.core.precision import MonitorParams
 from repro.sparse import generators as G
 from repro.sparse.csr import iteration_stream_bytes, pack_csr
@@ -47,12 +44,9 @@ _PRECOND_FACTORY = {"jacobi": make_jacobi, "spai0": make_spai0}
 
 
 def _timed(solver, op, b, **kw):
-    res = solver(op, b, **kw)  # warm compile
-    jax.block_until_ready(res.x)
-    t0 = time.perf_counter()
-    res = solver(op, b, **kw)
-    jax.block_until_ready(res.x)
-    return res, time.perf_counter() - t0
+    # Shared best-of-k min timing (benchmarks.common.timed -> perf.timing):
+    # warm compile + 2 timed runs, every result blocked on.
+    return timed(solver, op, b, iters=2, warmup=1, **kw)
 
 
 def _gse_run_bytes(g, iters, switch_iters, precond=None, layout=None):
@@ -188,6 +182,11 @@ def run(precond: str = "none", nrhs: int = 1, layout: str = "nnz",
     devices -- ``run.py --shards`` forces host CPU devices)."""
     if layout not in ("nnz", "sell"):
         raise ValueError(f"unknown layout {layout!r}; expected 'nnz'/'sell'")
+    from repro.perf import roofline as rl
+
+    # Host roofline (persisted probe); solver rows report attainable /
+    # measured time for the SpMV-dominant stream (DESIGN.md §15).
+    roof = rl.host_roofline(quick=True)
     out = {}
     cases = []
     for i, (name, a) in enumerate(list(G.cg_suite(small=True).items())[:4]):
@@ -278,9 +277,17 @@ def run(precond: str = "none", nrhs: int = 1, layout: str = "nnz",
         for label, r in rows.items():
             modeled = run_bytes["fp64"] / max(run_bytes[label], 1)
             per_it = run_bytes[label] / max(r["iters"], 1) / max(a.nnz, 1)
+            # SpMV-dominant roofline fraction for the whole solve: useful
+            # FLOPs 2*nnz per iteration over the modeled run bytes (axpy
+            # and dot streams ride inside the fused iteration and are not
+            # credited -- a conservative floor).
+            frac = rl.fraction(2.0 * a.nnz * max(r["iters"], 1),
+                               run_bytes[label], max(r["t"], 1e-12), roof)
+            r["roofline_fraction"] = frac
             emit(f"fig89/{kind}/{name}/{label}", r["t"] * 1e6,
                  f"iters={r['iters']} speedup={base / max(r['t'],1e-12):.2f}"
-                 f" modeled_speedup={modeled:.2f} B/nnz/iter={per_it:.2f}")
+                 f" modeled_speedup={modeled:.2f} B/nnz/iter={per_it:.2f}"
+                 f" roofline={frac:.3f}")
         if nrhs > 1 and kind == "cg":
             # Batched multi-RHS row: matrix bytes once per iteration,
             # vector bytes per active column (DESIGN.md §11).

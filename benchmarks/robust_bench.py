@@ -21,11 +21,9 @@ skipped and reported as such.
 """
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, timed
 
 import jax  # noqa: E402  (common enables x64 first)
 import jax.numpy as jnp
@@ -176,20 +174,14 @@ def overhead(n=24, tol=1e-8, maxiter=2000, repeats=3) -> dict:
     b = spmv(csr, jnp.asarray(rng.normal(size=csr.shape[1])))
 
     def run_once(guards):
-        res = solve_cg(g, b, tol=tol, maxiter=maxiter, params=_params(),
-                       guards=guards, recover=False)
-        jax.block_until_ready(res.x)
-        return res
+        return solve_cg(g, b, tol=tol, maxiter=maxiter, params=_params(),
+                        guards=guards, recover=False)
 
     out = {}
     for name, guards in (("off", None), ("on", DEFAULT_GUARDS)):
-        run_once(guards)  # compile
-        times = []
-        for _ in range(repeats):
-            t0 = time.perf_counter()
-            res = run_once(guards)
-            times.append(time.perf_counter() - t0)
-        out[f"guards_{name}_s"] = min(times)
+        # Shared best-of-k min timing (benchmarks.common.timed).
+        res, best = timed(run_once, guards, iters=repeats, warmup=1)
+        out[f"guards_{name}_s"] = best
         out[f"guards_{name}_iters"] = int(res.iters)
     out["ratio"] = out["guards_on_s"] / out["guards_off_s"]
     return out

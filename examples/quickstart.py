@@ -225,6 +225,41 @@ def main():
           f"{health_name(int(res_d.health))} "
           f"(trip_iter={int(res_d.trip_iter)})")
 
+    # --- 10. launch-plan autotuner + roofline ledger ---------------------
+    # (DESIGN.md section 15) Every Pallas kernel launch resolves its
+    # blocks through one dispatcher: explicit > tuned cache > the
+    # historical (8, 128) default -- with an empty cache nothing changes,
+    # bit for bit.  ``autotune.get_or_tune`` sweeps the launch axes
+    # (BM/BL, SELL C/sigma, width buckets) for this operator's shape
+    # class ONCE and persists the winner (checksum-verified JSON, like
+    # the pack cache); ``planned_spmv`` then dispatches through it.  The
+    # ledger prices what each call SHOULD stream, and the roofline probe
+    # turns wall time into fraction-of-attainable -- the unit the CI
+    # perf gates use instead of microseconds.  Run the full sweep with:
+    #   PYTHONPATH=src python benchmarks/run.py --tune
+    from repro.kernels.ops import planned_spmv
+    from repro.perf import autotune, roofline
+    from repro.perf.ledger import achieved, spmv_ledger
+    from repro.perf.timing import best_seconds
+
+    plan, report, hit = autotune.get_or_tune(gsk, tag=1, layout="sell")
+    print(f"\nautotuned launch plan for the skewed operator "
+          f"(cache hit: {hit}):")
+    print(f"  default plan: {report['default_us']:8.1f} us/SpMV")
+    print(f"  tuned plan  : {report['us']:8.1f} us/SpMV  "
+          f"{plan.to_dict()}")
+    xs = jnp.ones((gsk.shape[1],), jnp.float32)
+    sec = best_seconds(planned_spmv, gsk, xs, tag=1, layout="sell",
+                      iters=5, warmup=2)
+    roof = roofline.host_roofline(quick=True)   # persisted probe
+    led = spmv_ledger(gsk, tag=1,
+                      layout=sell_pack_gsecsr(gsk, plan=plan))
+    rates = achieved(led, sec, roof)
+    print(f"  re-measured through the tuned dispatcher: "
+          f"{rates['us']:.1f} us, {rates['achieved_gbps']:.2f} GB/s "
+          f"physical ({rates['effective_gbps']:.2f} effective), "
+          f"roofline fraction {rates['roofline_fraction']:.3f}")
+
 
 if __name__ == "__main__":
     main()

@@ -106,7 +106,8 @@ class GSEPacked:
                 "f32-source packs (frac_bits=23) store no tail2; "
                 "tags 1 and 2 only"
             )
-        return {1: 2, 2: 4, 3: 8}[tag]
+        from repro.core.precision_table import TAG_VALUE_BYTES
+        return TAG_VALUE_BYTES[tag]
 
     def nbytes(self, tag: int) -> int:
         n = int(np.prod(self.head.shape))

@@ -1,0 +1,58 @@
+"""Single source of truth for per-tag and per-dtype byte constants.
+
+Before PR 7 these numbers were re-declared (and re-documented) in three
+places -- ``sparse/csr.py`` (``_SLOT_BYTES``), ``distributed/partition.py``
+(``WIRE_ENTRY_BYTES``), and ``launch/hlo.py`` (``_DTYPE_BYTES``) -- plus
+the 6/8/12 B/nnz literals scattered through docstrings.  They all derive
+from one fact about the GSE-SEM encoding (paper Section III.C):
+
+  tag 1 streams the u16 head            -> 2 value bytes / entry
+  tag 2 streams head + u16 tail1        -> 4 value bytes / entry
+  tag 3 streams head + tail1 + u32 tail2-> 8 value bytes / entry
+
+and every CSR/ELL/SELL entry additionally streams a packed u32 column
+index (``COLIDX_BYTES``), giving the paper's 6/8/12 B/nnz matrix-stream
+figures (``SLOT_BYTES``).  The halo wire ships only the *value* segments
+(the receiving shard already knows which boundary entries it asked for),
+so ``WIRE_ENTRY_BYTES == TAG_VALUE_BYTES``.
+
+The old names remain importable from their original modules as aliases of
+these tables; ``tests/test_precision_table.py`` pins the derived
+``bytes_touched`` figures so a drift here cannot pass silently.
+"""
+from __future__ import annotations
+
+__all__ = [
+    "TAG_VALUE_BYTES",
+    "COLIDX_BYTES",
+    "SLOT_BYTES",
+    "WIRE_ENTRY_BYTES",
+    "DTYPE_BYTES",
+    "TAGS",
+]
+
+# GSE tags in escalation order (head-only -> +tail1 -> +tail2).
+TAGS = (1, 2, 3)
+
+# Value-segment bytes ONE matrix entry (or one wire x-entry) costs at each
+# tag: u16 head / +u16 tail1 / +u32 tail2.
+TAG_VALUE_BYTES = {1: 2, 2: 4, 3: 8}
+
+# Every stored entry also streams one packed u32 column index (expIdx in
+# the top EI_BIT bits, column in the rest).
+COLIDX_BYTES = 4
+
+# Matrix-stream bytes one padded slot (or one nnz) costs at each tag:
+# the paper's 6/8/12 B/nnz format promise (DESIGN.md section 8).
+SLOT_BYTES = {t: TAG_VALUE_BYTES[t] + COLIDX_BYTES for t in TAGS}
+
+# Bytes ONE boundary x-entry costs on the halo wire at each tag
+# (DESIGN.md section 13): the wire ships value segments only.
+WIRE_ENTRY_BYTES = dict(TAG_VALUE_BYTES)
+
+# HLO shape-string dtype widths for the launch/hlo.py byte estimator.
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}

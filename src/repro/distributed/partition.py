@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import precision_table
 from repro.sparse.csr import (
     _SLOT_BYTES,
     GSECSR,
@@ -64,7 +65,8 @@ __all__ = [
 
 # Bytes ONE boundary x-entry costs on the wire at each tag (DESIGN.md §13):
 # tag 1 ships the u16 GSE head, tag 2 head+tail1, tag 3 raw float64.
-WIRE_ENTRY_BYTES = {1: 2, 2: 4, 3: 8}
+# Canonical table lives in core/precision_table.py.
+WIRE_ENTRY_BYTES = precision_table.WIRE_ENTRY_BYTES
 
 
 @jax.tree_util.register_pytree_node_class

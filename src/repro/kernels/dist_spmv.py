@@ -38,6 +38,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.distributed.partition import PartitionedGSECSR
 from repro.distributed.wire import halo_all_gather
+from repro.perf import plan as launch_plan
+from repro.perf.plan import KernelPlan
 from repro.sparse.spmv import _decode_gsecsr
 
 __all__ = ["shard_mesh", "local_matvec", "dist_spmv", "dist_spmm",
@@ -160,8 +162,24 @@ def _apply_padded(part: PartitionedGSECSR, x: jnp.ndarray, tag,
     return y[:n]
 
 
+def _resolve_dist_plan(part, tag, nrhs, plan) -> KernelPlan:
+    """Uniform launch-plan resolution for the distributed path (DESIGN.md
+    §15): explicit plan > tuned cache (layout key "dist") > default.  The
+    shard-local matvec rides the jnp segment-sum decode -- there is no
+    Pallas block knob here yet -- so the resolved plan records provenance
+    and reserves the slot a shard-local kernel will take its blocks from.
+    Resolution is skipped for traced tags (the solvers' escalation path
+    passes ``tag`` as a traced value)."""
+    static_tag = isinstance(tag, (int, np.integer))
+    return launch_plan.resolve(
+        part if static_tag else None,
+        tag=int(tag) if static_tag else None,
+        layout="dist", nrhs=nrhs, plan=plan)
+
+
 def dist_spmv(part: PartitionedGSECSR, x: jnp.ndarray, tag=1,
-              wire: str = "exact", acc_dtype=jnp.float64) -> jnp.ndarray:
+              wire: str = "exact", acc_dtype=jnp.float64,
+              plan: KernelPlan | None = None) -> jnp.ndarray:
     """Distributed y = A @ x at precision ``tag`` (traced or static).
 
     ``x`` is the full ``(n,)`` operand; each shard computes its row block
@@ -174,11 +192,13 @@ def dist_spmv(part: PartitionedGSECSR, x: jnp.ndarray, tag=1,
     """
     if x.ndim != 1:
         raise ValueError(f"dist_spmv wants (n,); got {x.shape}")
+    _resolve_dist_plan(part, tag, 1, plan)
     return _apply_padded(part, x, tag, wire, acc_dtype)
 
 
 def dist_spmm(part: PartitionedGSECSR, x: jnp.ndarray, tag=1,
-              wire: str = "exact", acc_dtype=jnp.float64) -> jnp.ndarray:
+              wire: str = "exact", acc_dtype=jnp.float64,
+              plan: KernelPlan | None = None) -> jnp.ndarray:
     """Distributed Y = A @ X over a dense ``(n, nrhs)`` block: the matrix
     segments stream once per shard and every column rides one shared halo
     exchange (boundary entries ship per column; this block path packs ONE
@@ -186,17 +206,19 @@ def dist_spmm(part: PartitionedGSECSR, x: jnp.ndarray, tag=1,
     ``halo_wire_bytes(tag, wire, nrhs)`` models)."""
     if x.ndim != 2:
         raise ValueError(f"dist_spmm wants (n, nrhs); got {x.shape}")
+    _resolve_dist_plan(part, tag, x.shape[1], plan)
     return _apply_padded(part, x, tag, wire, acc_dtype)
 
 
 def make_sharded_operator(part: PartitionedGSECSR, wire: str = "exact",
-                          acc_dtype=jnp.float64):
+                          acc_dtype=jnp.float64,
+                          plan: KernelPlan | None = None):
     """Tag-dispatched ``apply(v, tag)`` over the partition, memoized on the
     instance (the closure is a static jit argument in the solvers -- the
     sharded twin of ``solvers.cg._gsecsr_operator``).  Accepts ``(n,)``
     vectors and ``(n, nrhs)`` blocks; usable as the operator callable in
     every solver path (generic CG/PCG, GMRES, batched, IR)."""
-    key = ("_sharded_operator", wire, jnp.dtype(acc_dtype).name)
+    key = ("_sharded_operator", wire, jnp.dtype(acc_dtype).name, plan)
     op = part.__dict__.get(key)
     if op is None:
         def op(v, tag):

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.gse_spmv import LANE, decode_tile, spmv_operand_names
+from repro.perf import plan as launch_plan
 
 __all__ = ["gse_spmm_pallas", "gse_spmm_call", "gse_spmm_sell_call",
            "spmm_operand_names", "LANE"]
@@ -99,14 +100,17 @@ _BODIES = {1: _spmm_body_tag1, 2: _spmm_body_tag2, 3: _spmm_body_tag3}
 
 
 def gse_spmm_call(colpak, head, tail1, tail2, x, scales, *, ei_bit: int,
-                  tag: int, blocks=(8, 128), interpret: bool = True):
+                  tag: int, blocks=None, interpret: bool = True):
     """Unjitted tag-specialized SpMM (exported for jaxpr inspection).
 
     colpak/head (+tails the tag reads): (M, L); x: (N, nrhs) dense
     right-hand sides; scales: (1, k).  ``tail1``/``tail2`` may be ``None``
     when ``tag`` does not read them; arrays passed for unread segments are
-    ignored (not streamed).  Returns Y = A @ X as a (M, nrhs) f32 array.
+    ignored (not streamed).  ``blocks=None`` resolves through
+    ``perf.plan.resolve`` to the (8, 128) default (DESIGN.md §15).
+    Returns Y = A @ X as a (M, nrhs) f32 array.
     """
+    blocks = launch_plan.resolve(blocks=blocks).blocks
     m, L = colpak.shape
     bm, bl = blocks
     assert m % bm == 0 and L % bl == 0, (colpak.shape, blocks)
@@ -149,7 +153,7 @@ gse_spmm_pallas = functools.partial(
 
 
 def gse_spmm_sell_call(buckets, unperm, x, scales, *, ei_bit: int, tag: int,
-                       blocks=(8, 128), interpret: bool = True):
+                       blocks=None, interpret: bool = True):
     """Sliced-ELL SpMM: the multi-RHS twin of
     :func:`repro.kernels.gse_spmv.gse_spmv_sell_call` -- one tag-
     specialized ``pallas_call`` per width-bucket, same per-bucket operand

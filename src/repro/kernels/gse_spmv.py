@@ -43,6 +43,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.gse_decode import _select_scale
+from repro.perf import plan as launch_plan
 
 __all__ = ["gse_spmv_pallas", "gse_spmv_call", "gse_spmv_sell_call",
            "spmv_operand_names", "decode_tile", "LANE"]
@@ -124,14 +125,16 @@ _BODIES = {1: _spmv_body_tag1, 2: _spmv_body_tag2, 3: _spmv_body_tag3}
 
 
 def gse_spmv_call(colpak, head, tail1, tail2, x, scales, *, ei_bit: int,
-                  tag: int, blocks=(8, 128), interpret: bool = True):
+                  tag: int, blocks=None, interpret: bool = True):
     """Unjitted tag-specialized SpMV (exported for jaxpr inspection).
 
     colpak/head (+tails the tag reads): (M, L); x: (N,); scales: (1, k).
     ``tail1``/``tail2`` may be ``None`` when ``tag`` does not read them;
     arrays passed for unread segments are ignored (not streamed).
-    Returns y = A @ x as a (M,) f32 vector.
+    ``blocks=None`` resolves through ``perf.plan.resolve`` to the (8, 128)
+    default (DESIGN.md §15).  Returns y = A @ x as a (M,) f32 vector.
     """
+    blocks = launch_plan.resolve(blocks=blocks).blocks
     m, L = colpak.shape
     bm, bl = blocks
     assert m % bm == 0 and L % bl == 0, (colpak.shape, blocks)
@@ -173,7 +176,7 @@ gse_spmv_pallas = functools.partial(
 
 
 def gse_spmv_sell_call(buckets, unperm, x, scales, *, ei_bit: int, tag: int,
-                       blocks=(8, 128), interpret: bool = True):
+                       blocks=None, interpret: bool = True):
     """Sliced-ELL SpMV: one tag-specialized ``pallas_call`` per width-bucket
     (DESIGN.md §12), reusing the uniform-ELL kernel body (``decode_tile``)
     unchanged.

@@ -19,12 +19,15 @@ from repro.kernels.gse_decode import decode_pallas
 from repro.kernels.gse_matmul import gse_matmul_pallas
 from repro.kernels.gse_spmm import gse_spmm_pallas, gse_spmm_sell_call
 from repro.kernels.gse_spmv import gse_spmv_pallas, gse_spmv_sell_call
+from repro.perf import plan as launch_plan
+from repro.perf.plan import KernelPlan
 from repro.sparse.csr import GSECSR, GSESellC, pack_sell, scatter_rows
 
 __all__ = ["gse_decode", "gse_matmul", "gse_spmv_ell", "gse_spmm_ell",
            "gse_spmv_sell", "gse_spmm_sell", "ell_pack_gsecsr",
            "sell_pack_gsecsr", "spmv_kernel_for", "spmm_kernel_for",
-           "sell_kernel_for", "sell_spmm_kernel_for", "PACK_STATS"]
+           "sell_kernel_for", "sell_spmm_kernel_for", "PACK_STATS",
+           "planned_spmv", "planned_spmm"]
 
 # Operand-pack cache accounting: one entry per (operator instance, layout
 # key).  ``hits``/``misses`` are module-global so tests (and the solve
@@ -153,15 +156,20 @@ _SEGMENT_DTYPES = (
 )
 
 
-def ell_pack_gsecsr(a: GSECSR, lane: int = 128):
+def ell_pack_gsecsr(a: GSECSR, lane: int | None = None,
+                    plan: KernelPlan | None = None):
     """GSE-SEM CSR -> padded uniform-ELL segment arrays for the SpMV kernel.
 
     Returns (colpak, head, tail1, tail2) each (rows, L) with L lane-aligned.
     Padded slots: colpak=0, head=0 (mantissa 0 -> decodes to +0.0).  The
     scatter is ``csr.scatter_rows`` (shared with ``to_ell`` and the SELL
     packer) and the result is memoized on the operator instance -- repeat
-    callers re-scatter nothing.
+    callers re-scatter nothing.  ``lane`` resolves explicit arg > ``plan``
+    > the default 128 (DESIGN.md §15).
     """
+    if lane is None:
+        lane = (plan or launch_plan.DEFAULT_PLAN).lane
+
     def build():
         rowptr = np.asarray(a.rowptr, np.int64)
         L = int(max(1, np.diff(rowptr).max(initial=0)))
@@ -174,32 +182,48 @@ def ell_pack_gsecsr(a: GSECSR, lane: int = 128):
     return _cached_pack(a, ("ell", lane), build)
 
 
-def sell_pack_gsecsr(a: GSECSR, c: int = 8, sigma: int | None = None,
-                     lane: int = 128) -> GSESellC:
+def sell_pack_gsecsr(a: GSECSR, c: int | None = None,
+                     sigma: int | None = None, lane: int | None = None,
+                     bucket: str | None = None,
+                     plan: KernelPlan | None = None) -> GSESellC:
     """GSE-SEM CSR -> SELL-C-σ packed layout, memoized on the operator
     instance (DESIGN.md §12).
 
-    The cache key is the layout parameters; repeated solves, benchmark
-    sweeps, and the solve service all share ONE host-side pack per
-    operator -- asserted via :data:`PACK_STATS` in tests/test_sell.py.
+    Layout parameters resolve explicit args > ``plan`` > the pre-PR-7
+    defaults (C=8, full-sort σ, lane 128, pow2 width buckets).  The cache
+    key is the resolved parameters; repeated solves, benchmark sweeps, and
+    the solve service all share ONE host-side pack per operator --
+    asserted via :data:`PACK_STATS` in tests/test_sell.py.
     """
+    base = plan or launch_plan.DEFAULT_PLAN
+    c = base.sell_c if c is None else c
+    sigma = base.sell_sigma if sigma is None else sigma
+    lane = base.lane if lane is None else lane
+    bucket = base.sell_bucket if bucket is None else bucket
     return _cached_pack(
-        a, ("sell", c, sigma, lane),
-        lambda: pack_sell(a, c=c, sigma=sigma, lane=lane),
+        a, ("sell", c, sigma, lane, bucket),
+        lambda: pack_sell(a, c=c, sigma=sigma, lane=lane, bucket=bucket),
     )
 
 
-@functools.lru_cache(maxsize=None)
-def spmv_kernel_for(tag: int, ei_bit: int, blocks=(8, 128),
+def spmv_kernel_for(tag: int, ei_bit: int, blocks=None,
                     interpret: bool = True):
     """Tag-specialized SpMV dispatch: one cached ``pallas_call`` wrapper per
     ``(tag, ei_bit, blocks)`` (DESIGN.md §2.4).
 
-    The returned callable takes exactly the operands that ``tag`` streams --
+    ``blocks=None`` resolves through the launch-plan dispatcher
+    (``perf.plan.resolve``) to today's (8, 128) default; the returned
+    callable takes exactly the operands that ``tag`` streams --
     ``(colpak, head, x, scales)`` for tag 1, ``+ tail1`` for tag 2,
     ``+ tail2`` for tag 3 -- so the tag-1/-2 kernels provably never touch
     the tail arrays (6/8/12 bytes per nnz of HBM traffic for tags 1/2/3).
     """
+    blocks = launch_plan.resolve(blocks=blocks).blocks
+    return _spmv_kernel_cached(tag, ei_bit, blocks, interpret)
+
+
+@functools.lru_cache(maxsize=None)
+def _spmv_kernel_cached(tag: int, ei_bit: int, blocks, interpret: bool):
     if tag == 1:
         def call(colpak, head, x, scales):
             return gse_spmv_pallas(colpak, head, None, None, x, scales,
@@ -220,20 +244,26 @@ def spmv_kernel_for(tag: int, ei_bit: int, blocks=(8, 128),
     return call
 
 
-@functools.lru_cache(maxsize=None)
-def spmm_kernel_for(tag: int, ei_bit: int, blocks=(8, 128),
+def spmm_kernel_for(tag: int, ei_bit: int, blocks=None,
                     interpret: bool = True):
     """Tag-specialized SpMM dispatch: one cached ``pallas_call`` wrapper per
     ``(tag, ei_bit, blocks)`` -- the multi-RHS twin of ``spmv_kernel_for``
     (DESIGN.md §11).
 
-    The returned callable takes exactly the operands ``tag`` streams --
-    ``(colpak, head, x, scales)`` for tag 1, ``+ tail1`` for tag 2,
-    ``+ tail2`` for tag 3 -- with ``x`` a dense (n, nrhs) block.  The
-    matrix segments are streamed ONCE per call however many right-hand
-    sides ride along; the tag-1/-2 kernels provably never touch the tail
-    arrays.
+    ``blocks=None`` resolves through the launch-plan dispatcher to
+    today's (8, 128) default.  The returned callable takes exactly the
+    operands ``tag`` streams -- ``(colpak, head, x, scales)`` for tag 1,
+    ``+ tail1`` for tag 2, ``+ tail2`` for tag 3 -- with ``x`` a dense
+    (n, nrhs) block.  The matrix segments are streamed ONCE per call
+    however many right-hand sides ride along; the tag-1/-2 kernels
+    provably never touch the tail arrays.
     """
+    blocks = launch_plan.resolve(blocks=blocks).blocks
+    return _spmm_kernel_cached(tag, ei_bit, blocks, interpret)
+
+
+@functools.lru_cache(maxsize=None)
+def _spmm_kernel_cached(tag: int, ei_bit: int, blocks, interpret: bool):
     if tag == 1:
         def call(colpak, head, x, scales):
             return gse_spmm_pallas(colpak, head, None, None, x, scales,
@@ -255,7 +285,8 @@ def spmm_kernel_for(tag: int, ei_bit: int, blocks=(8, 128),
 
 
 def gse_spmm_ell(ell, table, x: jnp.ndarray, ei_bit: int, tag: int = 1,
-                 blocks=(8, 128), interpret: bool | None = None):
+                 blocks=None, interpret: bool | None = None,
+                 plan: KernelPlan | None = None):
     """Y = A @ X from ELL-packed GSE-SEM segments (Pallas SpMM kernel).
 
     ``x`` is a dense (n, nrhs) right-hand-side block.  Dispatches to the
@@ -263,10 +294,12 @@ def gse_spmm_ell(ell, table, x: jnp.ndarray, ei_bit: int, tag: int = 1,
     ``tag`` reads are padded, passed, and streamed -- and they are
     streamed ONCE for all ``nrhs`` columns, so the modeled per-iteration
     traffic is ``iteration_stream_bytes(a, tag, nrhs=nrhs)`` instead of
-    ``nrhs`` full SpMV passes (DESIGN.md §11).
+    ``nrhs`` full SpMV passes (DESIGN.md §11).  Launch blocks resolve
+    explicit ``blocks`` > ``plan`` > the (8, 128) default (§15).
     """
     if interpret is None:
         interpret = _interpret_default()
+    blocks = launch_plan.resolve(blocks=blocks, plan=plan).blocks
     colpak, head, t1, t2 = ell
     bm, bl = blocks
     m0 = colpak.shape[0]
@@ -280,6 +313,52 @@ def gse_spmm_ell(ell, table, x: jnp.ndarray, ei_bit: int, tag: int = 1,
         operands.append(_pad2(t2, bm, bl))
     out = kernel(*operands, x, scales)
     return out[:m0]
+
+
+def planned_spmv(a: GSECSR, x: jnp.ndarray, tag: int = 1,
+                 layout: str = "ell", plan: KernelPlan | None = None,
+                 interpret: bool | None = None):
+    """Operator-level SpMV with full launch-plan resolution (DESIGN.md §15).
+
+    Resolves ``plan`` (explicit > tuned cache keyed on the operator's
+    shape class > default), packs ``a`` with the plan's layout parameters
+    (memoized, :func:`ell_pack_gsecsr`/:func:`sell_pack_gsecsr`), and
+    dispatches the tag-specialized kernel with the plan's blocks.  This is
+    the entry point the autotuner sweeps and the solve service registers.
+    """
+    plan = launch_plan.resolve(a, tag=tag, layout=layout, nrhs=1,
+                               plan=plan)
+    if layout == "sell":
+        sell = sell_pack_gsecsr(a, plan=plan)
+        blocks = (plan.blocks if plan.compatible_with_sell(sell)
+                  else launch_plan.DEFAULT_BLOCKS)
+        return gse_spmv_sell(sell, x, tag=tag, blocks=blocks,
+                             interpret=interpret)
+    if layout != "ell":
+        raise ValueError(f"layout must be 'ell' or 'sell', got {layout!r}")
+    ell = ell_pack_gsecsr(a, plan=plan)
+    return gse_spmv_ell(ell, a.table, x, a.ei_bit, tag=tag,
+                        blocks=plan.blocks, interpret=interpret)
+
+
+def planned_spmm(a: GSECSR, x: jnp.ndarray, tag: int = 1,
+                 layout: str = "ell", plan: KernelPlan | None = None,
+                 interpret: bool | None = None):
+    """Multi-RHS twin of :func:`planned_spmv` (X dense (n, nrhs))."""
+    nrhs = x.shape[1]
+    plan = launch_plan.resolve(a, tag=tag, layout=layout, nrhs=nrhs,
+                               plan=plan)
+    if layout == "sell":
+        sell = sell_pack_gsecsr(a, plan=plan)
+        blocks = (plan.blocks if plan.compatible_with_sell(sell)
+                  else launch_plan.DEFAULT_BLOCKS)
+        return gse_spmm_sell(sell, x, tag=tag, blocks=blocks,
+                             interpret=interpret)
+    if layout != "ell":
+        raise ValueError(f"layout must be 'ell' or 'sell', got {layout!r}")
+    ell = ell_pack_gsecsr(a, plan=plan)
+    return gse_spmm_ell(ell, a.table, x, a.ei_bit, tag=tag,
+                        blocks=plan.blocks, interpret=interpret)
 
 
 def _sell_dispatch(sell_call, tag: int, ei_bit: int, blocks, interpret):
@@ -299,12 +378,12 @@ def _sell_dispatch(sell_call, tag: int, ei_bit: int, blocks, interpret):
     return jax.jit(call)
 
 
-@functools.lru_cache(maxsize=None)
-def sell_kernel_for(tag: int, ei_bit: int, blocks=(8, 128),
+def sell_kernel_for(tag: int, ei_bit: int, blocks=None,
                     interpret: bool = True):
     """Tag-specialized SELL-C-σ SpMV dispatch: one cached jitted wrapper
     per ``(tag, ei_bit, blocks)`` -- the sliced-layout twin of
-    ``spmv_kernel_for`` (DESIGN.md §12).
+    ``spmv_kernel_for`` (DESIGN.md §12).  ``blocks=None`` resolves
+    through the launch-plan dispatcher to today's (8, 128) default.
 
     The returned callable takes ``(buckets, unperm, x, scales)`` where
     ``buckets`` holds per-width-bucket segment tuples containing exactly
@@ -313,14 +392,26 @@ def sell_kernel_for(tag: int, ei_bit: int, blocks=(8, 128),
     own ``pallas_call`` with the same tag-specialized operand list as the
     uniform-ELL kernel, so tag-1/-2 still provably never touch the tails.
     """
-    return _sell_dispatch(gse_spmv_sell_call, tag, ei_bit, blocks, interpret)
+    blocks = launch_plan.resolve(blocks=blocks).blocks
+    return _sell_kernel_cached(tag, ei_bit, blocks, interpret)
 
 
 @functools.lru_cache(maxsize=None)
-def sell_spmm_kernel_for(tag: int, ei_bit: int, blocks=(8, 128),
+def _sell_kernel_cached(tag: int, ei_bit: int, blocks, interpret: bool):
+    return _sell_dispatch(gse_spmv_sell_call, tag, ei_bit, blocks, interpret)
+
+
+def sell_spmm_kernel_for(tag: int, ei_bit: int, blocks=None,
                          interpret: bool = True):
     """Multi-RHS twin of ``sell_kernel_for``: per-width-bucket SpMM
     dispatch with the same tag-specialized bucket operand lists."""
+    blocks = launch_plan.resolve(blocks=blocks).blocks
+    return _sell_spmm_kernel_cached(tag, ei_bit, blocks, interpret)
+
+
+@functools.lru_cache(maxsize=None)
+def _sell_spmm_kernel_cached(tag: int, ei_bit: int, blocks,
+                             interpret: bool):
     return _sell_dispatch(gse_spmm_sell_call, tag, ei_bit, blocks, interpret)
 
 
@@ -348,19 +439,40 @@ def _check_sell_blocks(sell: GSESellC, blocks) -> None:
         )
 
 
+def _resolve_sell_blocks(sell: GSESellC, tag: int, nrhs: int, blocks,
+                         plan: KernelPlan | None):
+    """SELL launch-block resolution (DESIGN.md §15): explicit args keep
+    today's validate-and-raise contract; a TUNED plan recorded for a
+    different pack (its C/widths don't tile this one) silently falls back
+    to the default blocks instead of raising."""
+    if blocks is not None or plan is not None:
+        resolved = launch_plan.resolve(blocks=blocks, plan=plan)
+        _check_sell_blocks(sell, resolved.blocks)
+        return resolved.blocks
+    resolved = launch_plan.resolve(sell, tag=tag, layout="sell", nrhs=nrhs)
+    if (resolved.source == "tuned"
+            and not resolved.compatible_with_sell(sell)):
+        resolved = launch_plan.DEFAULT_PLAN
+    _check_sell_blocks(sell, resolved.blocks)
+    return resolved.blocks
+
+
 def gse_spmv_sell(sell: GSESellC, x: jnp.ndarray, tag: int = 1,
-                  blocks=(8, 128), interpret: bool | None = None):
+                  blocks=None, interpret: bool | None = None,
+                  plan: KernelPlan | None = None):
     """y = A @ x from a SELL-C-σ packed GSE-SEM operand (Pallas kernels).
 
     One tag-specialized ``pallas_call`` per width-bucket; each slice
     streams only ITS lane-aligned width, so the modeled traffic is
     ``sell.bytes_touched(tag)`` -- actual padded slots, not the uniform-
     ELL max-width blowup (DESIGN.md §12).  Output is bitwise identical to
-    ``gse_spmv_ell`` on the same operator (tests/test_sell.py).
+    ``gse_spmv_ell`` on the same operator (tests/test_sell.py).  Launch
+    blocks resolve explicit ``blocks`` > ``plan`` > tuned cache entry >
+    the (8, 128) default (§15).
     """
     if interpret is None:
         interpret = _interpret_default()
-    _check_sell_blocks(sell, blocks)
+    blocks = _resolve_sell_blocks(sell, tag, 1, blocks, plan)
     bits_used = {1: 15, 2: 31, 3: 63}[tag]
     scales = ref.make_scales(sell.table, bits_used).reshape(1, -1)
     kernel = sell_kernel_for(tag, sell.ei_bit, blocks, interpret)
@@ -368,16 +480,20 @@ def gse_spmv_sell(sell: GSESellC, x: jnp.ndarray, tag: int = 1,
 
 
 def gse_spmm_sell(sell: GSESellC, x: jnp.ndarray, tag: int = 1,
-                  blocks=(8, 128), interpret: bool | None = None):
+                  blocks=None, interpret: bool | None = None,
+                  plan: KernelPlan | None = None):
     """Y = A @ X from a SELL-C-σ packed GSE-SEM operand, X dense (n, nrhs).
 
     The multi-RHS twin of ``gse_spmv_sell``: each width-bucket's matrix
     segments are streamed ONCE for all ``nrhs`` columns (DESIGN.md §11 +
     §12); bitwise identical to ``gse_spmm_ell`` on the same operator.
+    Launch blocks resolve explicit ``blocks`` > ``plan`` > tuned cache
+    entry > the (8, 128) default (§15).
     """
     if interpret is None:
         interpret = _interpret_default()
-    _check_sell_blocks(sell, blocks)
+    blocks = _resolve_sell_blocks(sell, tag, x.shape[1] if x.ndim > 1
+                                  else 1, blocks, plan)
     bits_used = {1: 15, 2: 31, 3: 63}[tag]
     scales = ref.make_scales(sell.table, bits_used).reshape(1, -1)
     kernel = sell_spmm_kernel_for(tag, sell.ei_bit, blocks, interpret)
@@ -385,17 +501,20 @@ def gse_spmm_sell(sell: GSESellC, x: jnp.ndarray, tag: int = 1,
 
 
 def gse_spmv_ell(ell, table, x: jnp.ndarray, ei_bit: int, tag: int = 1,
-                 blocks=(8, 128), interpret: bool | None = None):
+                 blocks=None, interpret: bool | None = None,
+                 plan: KernelPlan | None = None):
     """y = A @ x from ELL-packed GSE-SEM segments (Pallas kernel).
 
     Dispatches to the tag-specialized kernel (``spmv_kernel_for``): only the
     segment arrays ``tag`` reads are padded, passed, and streamed.  Modeled
     HBM traffic is bandwidth-proportional -- ``GSECSR.bytes_touched(tag)``
     gives the per-call byte count (6/8/12 bytes per nnz for tags 1/2/3
-    vs 12 for FP64 CSR).
+    vs 12 for FP64 CSR).  Launch blocks resolve explicit ``blocks`` >
+    ``plan`` > the (8, 128) default (DESIGN.md §15).
     """
     if interpret is None:
         interpret = _interpret_default()
+    blocks = launch_plan.resolve(blocks=blocks, plan=plan).blocks
     colpak, head, t1, t2 = ell
     bm, bl = blocks
     m0 = colpak.shape[0]

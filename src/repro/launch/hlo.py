@@ -17,11 +17,10 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
-    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
-    "s8": 1, "u8": 1, "pred": 1,
-}
+from repro.core import precision_table
+
+# Canonical table lives in core/precision_table.py.
+_DTYPE_BYTES = precision_table.DTYPE_BYTES
 
 _COLL_RE = re.compile(
     r"=\s+(?:\(([^)]*)\)|(\S+))\s+"
@@ -44,6 +43,43 @@ def _shape_bytes(shape_str: str) -> int:
             if d:
                 n *= int(d)
         total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_PARAM_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[\w\[\],\{\}]+))\s+parameter\(")
+
+
+def parameter_bytes(hlo_text: str, dtypes=None) -> int:
+    """Total bytes of the ENTRY computation's parameters.
+
+    ``dtypes`` optionally restricts to a set of HLO dtype names (e.g.
+    ``{"u16", "u32"}`` isolates the packed GSE matrix segments from the
+    float vector/table operands).  Used by ``perf.ledger`` to cross-check
+    the modeled matrix-stream bytes against what a compiled kernel
+    actually takes as inputs.
+    """
+    total = 0
+    in_entry = False
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace():
+            in_entry = line.lstrip().startswith("ENTRY")
+            continue
+        if not in_entry:
+            continue
+        m = _PARAM_RE.search(line)
+        if not m:
+            continue
+        for sm in _SHAPE_RE.finditer(m.group(1)):
+            dt = sm.group(1)
+            if dt not in _DTYPE_BYTES or (dtypes is not None
+                                          and dt not in dtypes):
+                continue
+            n = 1
+            for d in sm.group(2).split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES[dt]
     return total
 
 

@@ -94,6 +94,7 @@ class _Operator:
     precond: object   # precond object or None
     part: object = None   # PartitionedGSECSR when registered sharded
     wire: str = "exact"   # halo wire format for the sharded path
+    plan: object = None   # tuned/explicit KernelPlan attached at register
 
     @property
     def solve_op(self):
@@ -138,7 +139,8 @@ class SolverService:
     def register(self, name: str, a: CSR, k: int = 8,
                  precond: str | object | None = None,
                  layout: str = "csr", sharded: bool = False,
-                 shards: int | None = None, wire: str = "exact") -> str:
+                 shards: int | None = None, wire: str = "exact",
+                 plan=None, tune: bool = False) -> str:
         """Pack ``a`` (and optionally a preconditioner) once; returns the
         handle requests are submitted against.  ``precond`` is ``None``,
         ``"jacobi"``/``"spai0"``, or a ready :mod:`repro.solvers.precond`
@@ -156,7 +158,16 @@ class SolverService:
         the handle through the distributed solver path (DESIGN.md §13);
         ``wire`` picks the halo wire format (``"exact"`` f64 halos,
         ``"gse"`` tag-aware compressed halos) and the byte reports add the
-        halo wire traffic per iteration."""
+        halo wire traffic per iteration.
+
+        ``plan``/``tune`` attach a kernel launch plan to the handle
+        (DESIGN.md §15): an explicit :class:`repro.perf.plan.KernelPlan`
+        is used as-is; ``tune=True`` resolves one through the persisted
+        autotuner (``perf.autotune.get_or_tune`` -- a sweep on the first
+        registration of a matrix class, a pure cache hit afterwards).
+        The SELL pack then uses the plan's C/σ/lane/bucket parameters;
+        solve trajectories stay bit-identical (the stepped solvers decode
+        through the packed store, not the launch blocks)."""
         if name in self._ops:
             raise ValueError(f"handle {name!r} already registered")
         if layout not in ("csr", "sell"):
@@ -181,6 +192,11 @@ class SolverService:
                     f"{sorted(_PRECOND_FACTORY)}"
                 ) from None
         gse = pack_csr(a, k=k)
+        if tune and plan is None:
+            from repro.perf import autotune
+
+            plan, _, _ = autotune.get_or_tune(
+                gse, tag=1, layout="sell" if layout == "sell" else "ell")
         part = None
         if sharded:
             import jax
@@ -191,9 +207,10 @@ class SolverService:
         if layout == "sell":
             from repro.kernels.ops import sell_pack_gsecsr
 
-            gse = sell_pack_gsecsr(gse)
+            gse = sell_pack_gsecsr(gse, plan=plan)
         self._ops[name] = _Operator(
-            name=name, csr=a, gse=gse, precond=precond, part=part, wire=wire
+            name=name, csr=a, gse=gse, precond=precond, part=part,
+            wire=wire, plan=plan
         )
         return name
 

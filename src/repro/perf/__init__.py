@@ -1,0 +1,53 @@
+"""Performance subsystem: launch plans, FLOP/byte ledger, roofline, autotune.
+
+PR 7 (DESIGN.md section 15).  Import layering, bottom-up:
+
+  ``tunecache``  -- persisted tuned-plan store (stdlib only);
+  ``plan``       -- :class:`KernelPlan` + the single ``resolve`` dispatcher
+                    every kernel entry point routes its block defaults
+                    through (imports tunecache);
+  ``timing``     -- best-of-k ``block_until_ready`` wall timing;
+  ``ledger``     -- per-kernel FLOP + byte ledger, cross-validated against
+                    the byte models in ``sparse/csr.py``, jaxpr operand
+                    lists, and the HLO estimator in ``launch/hlo.py``;
+  ``roofline``   -- host stream-bandwidth / peak-FLOP probes and
+                    achieved-vs-roofline fractions;
+  ``autotune``   -- sweeps (BM, lane block, SELL C/sigma, width-bucket
+                    granularity) per matrix class and persists winners
+                    (imports ``kernels/ops`` -- keep it OUT of this
+                    module's eager imports so ``kernels/ops`` can import
+                    ``perf.plan`` without a cycle).
+"""
+from __future__ import annotations
+
+from repro.perf.plan import (  # noqa: F401
+    DEFAULT_BLOCKS,
+    DEFAULT_PLAN,
+    KernelPlan,
+    plan_key,
+    resolve,
+    shape_class,
+)
+from repro.perf.tunecache import TUNE_STATS  # noqa: F401
+
+__all__ = [
+    "KernelPlan",
+    "DEFAULT_PLAN",
+    "DEFAULT_BLOCKS",
+    "resolve",
+    "plan_key",
+    "shape_class",
+    "TUNE_STATS",
+]
+
+
+def __getattr__(name):
+    # autotune / ledger / roofline / timing import jax (and autotune imports
+    # kernels.ops); load them lazily so `import repro.perf` stays cheap and
+    # cycle-free.
+    if name in ("autotune", "ledger", "roofline", "timing", "tunecache",
+                "plan"):
+        import importlib
+
+        return importlib.import_module(f"repro.perf.{name}")
+    raise AttributeError(f"module 'repro.perf' has no attribute {name!r}")

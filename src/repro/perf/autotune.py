@@ -1,0 +1,152 @@
+"""Launch-plan autotuner: sweep, pick, persist (PR 7, DESIGN.md §15).
+
+Sweeps the launch axes the ISSUE names -- row block BM, lane block BL,
+SELL slice height C / sort window sigma, and width-bucket granularity --
+per (shape-class, tag, layout, nrhs), times each candidate best-of-k
+(``perf.timing``), and persists the winner in ``perf.tunecache`` so every
+later run (and every ``perf.plan.resolve`` dispatch) reuses it with ZERO
+re-sweeps (asserted via ``TUNE_STATS`` in tests/test_perf.py).
+
+The candidate lists always contain the default plan, so a tuned winner is
+never slower than untuned *on the sweep's own measurements*; the sweep
+report keeps both times for the roofline benchmark's tuned-vs-untuned
+gate.
+
+Decode-overhead crossover (satellite 6): on the jnp reference path the
+GSE decode adds per-nnz integer work, and below ``DECODE_BOUND_NNZ``
+entries wall time is launch/latency-bound -- byte savings cannot show up
+in microseconds even though the stream model halves (measured in
+DESIGN.md §15).  ``decode_bound(a)`` encodes that point; the tuner stores
+it with each winner so benchmark gates can pick the honest axis
+(wall-clock parity below the crossover, bandwidth dominance above).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.perf import timing, tunecache
+from repro.perf.plan import (
+    DEFAULT_PLAN,
+    KernelPlan,
+    plan_key,
+    shape_class,
+)
+
+__all__ = ["candidates", "tune", "get_or_tune", "decode_bound",
+           "DECODE_BOUND_NNZ"]
+
+# Measured on the dev host (DESIGN.md §15): below ~2e5 nnz the jnp-path
+# SpMV wall time is flat in the streamed bytes (launch/decode-bound);
+# above it the tag ladder's byte savings start tracking wall time.
+DECODE_BOUND_NNZ = 200_000
+
+
+def decode_bound(a) -> bool:
+    """True when ``a`` sits below the measured decode-overhead crossover
+    (format choice is latency-neutral there; gate on parity, not GB/s)."""
+    return int(a.nnz) < DECODE_BOUND_NNZ
+
+
+def candidates(layout: str) -> tuple:
+    """Candidate plans per layout; the default plan always leads.
+
+    ELL sweeps (BM, BL); BL is the lane block -- widening it pads the pack
+    (the tuner prices that in wall time).  SELL sweeps C/sigma/bucket with
+    BM tied to C (``c % bm == 0`` is a hard kernel constraint) and BL at
+    the lane width (bucket widths are lane multiples, wider BL would not
+    tile them).
+    """
+    if layout == "ell":
+        return (
+            DEFAULT_PLAN,
+            KernelPlan(blocks=(16, 128)),
+            KernelPlan(blocks=(32, 128)),
+            KernelPlan(blocks=(8, 256)),
+        )
+    if layout == "sell":
+        return (
+            DEFAULT_PLAN,
+            KernelPlan(blocks=(16, 128), sell_c=16),
+            KernelPlan(blocks=(16, 128), sell_c=16, sell_sigma=64),
+            KernelPlan(blocks=(8, 128), sell_c=8, sell_sigma=32),
+            KernelPlan(blocks=(8, 128), sell_bucket="exact"),
+        )
+    raise ValueError(f"layout must be 'ell' or 'sell', got {layout!r}")
+
+
+def _runner(a, x, tag: int, layout: str, plan: KernelPlan,
+            interpret: bool | None):
+    """Pack with the candidate's layout parameters and return a thunk
+    running the planned kernel (pack time excluded: packs are memoized
+    for the life of the operator, the steady state solvers see)."""
+    if layout == "sell":
+        sell = ops.sell_pack_gsecsr(a, plan=plan)
+        if not plan.compatible_with_sell(sell):
+            return None
+        if x.ndim == 1:
+            return lambda: ops.gse_spmv_sell(sell, x, tag=tag,
+                                             blocks=plan.blocks,
+                                             interpret=interpret)
+        return lambda: ops.gse_spmm_sell(sell, x, tag=tag,
+                                         blocks=plan.blocks,
+                                         interpret=interpret)
+    ell = ops.ell_pack_gsecsr(a, plan=plan)
+    if x.ndim == 1:
+        return lambda: ops.gse_spmv_ell(ell, a.table, x, a.ei_bit, tag=tag,
+                                        blocks=plan.blocks,
+                                        interpret=interpret)
+    return lambda: ops.gse_spmm_ell(ell, a.table, x, a.ei_bit, tag=tag,
+                                    blocks=plan.blocks, interpret=interpret)
+
+
+def tune(a, tag: int = 1, layout: str = "ell", nrhs: int = 1,
+         iters: int = 3, warmup: int = 1,
+         interpret: bool | None = None) -> dict:
+    """Sweep candidates for ``a`` at (tag, layout, nrhs); persist the
+    winner.  Returns the stored payload: ``{plan, us, default_us, sweep,
+    decode_bound}``."""
+    key = plan_key(shape_class(a), tag, layout, nrhs)
+    rng = np.random.default_rng(0)
+    n = a.shape[1]
+    x = jnp.asarray(rng.normal(size=(n, nrhs) if nrhs > 1 else n),
+                    jnp.float32)
+    sweep = []
+    best = None
+    for cand in candidates(layout):
+        run = _runner(a, x, tag, layout, cand, interpret)
+        if run is None:
+            continue
+        _, sec = timing.measure(run, iters=iters, warmup=warmup)
+        row = {"plan": cand.to_dict(), "us": sec * 1e6}
+        sweep.append(row)
+        if best is None or row["us"] < best[1]["us"]:
+            best = (cand, row)
+    tunecache.TUNE_STATS["sweeps"] += 1
+    plan, row = best
+    payload = {
+        "plan": plan.to_dict(),
+        "us": row["us"],
+        "default_us": sweep[0]["us"],  # candidates() leads with the default
+        "sweep": sweep,
+        "decode_bound": decode_bound(a),
+    }
+    tunecache.store(key, payload)
+    return payload
+
+
+def get_or_tune(a, tag: int = 1, layout: str = "ell", nrhs: int = 1,
+                **kwargs):
+    """Tuned plan for ``a``, sweeping only on a cache miss.
+
+    Returns ``(plan, payload, hit)``; on a hit the payload is the stored
+    sweep report and no kernel runs at all (the zero-re-sweep discipline
+    the CI roofline job asserts)."""
+    key = plan_key(shape_class(a), tag, layout, nrhs)
+    payload = tunecache.lookup(key)
+    hit = payload is not None
+    if not hit:
+        payload = tune(a, tag=tag, layout=layout, nrhs=nrhs, **kwargs)
+    plan = KernelPlan.from_dict(payload["plan"], source="tuned")
+    return plan, payload, hit

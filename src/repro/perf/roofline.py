@@ -1,0 +1,76 @@
+"""Host roofline probes: stream bandwidth + peak FLOP rate (PR 7).
+
+CI gates on *fraction of roofline* instead of absolute microseconds: the
+host's attainable rates are measured once per machine (a STREAM-triad
+bandwidth probe and an f32 matmul FLOP probe), persisted in the tune
+cache (``perf.tunecache``, checksum-verified like every other entry), and
+every benchmarked kernel reports
+
+    roofline_fraction = max(bytes / BW, flops / peak) / measured_seconds
+
+i.e. attainable-time over measured-time.  This is the stable currency
+across heterogeneous CI hosts -- a slow runner lowers the roof and the
+measurement together (DESIGN.md section 15).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.perf import timing, tunecache
+
+__all__ = ["probe_stream_gbps", "probe_peak_gflops", "host_roofline",
+           "attainable_seconds", "fraction"]
+
+
+def probe_stream_gbps(n: int = 1 << 23, iters: int = 5) -> float:
+    """STREAM-triad bandwidth: ``y = 2x + b`` over f64 arrays sized past
+    LLC (default 64 MiB per array, 3 streams)."""
+    x = jnp.asarray(np.random.default_rng(0).normal(size=n))
+    b = jnp.asarray(np.random.default_rng(1).normal(size=n))
+    triad = jax.jit(lambda x, b: 2.0 * x + b)
+    _, sec = timing.measure(triad, x, b, iters=iters, warmup=2)
+    return 3 * 8 * n / sec / 1e9
+
+
+def probe_peak_gflops(n: int = 1024, iters: int = 5) -> float:
+    """Peak-ish FLOP rate: f32 (n, n) matmul, 2n^3 FLOPs per call."""
+    a = jnp.asarray(np.random.default_rng(2).normal(size=(n, n)), jnp.float32)
+    b = jnp.asarray(np.random.default_rng(3).normal(size=(n, n)), jnp.float32)
+    mm = jax.jit(lambda a, b: a @ b)
+    _, sec = timing.measure(mm, a, b, iters=iters, warmup=2)
+    return 2 * n**3 / sec / 1e9
+
+
+def host_roofline(refresh: bool = False, quick: bool = False) -> dict:
+    """{stream_gbps, peak_gflops, probed} for this host.
+
+    Persisted in the tune cache so repeat benchmark runs re-probe nothing
+    (``probed=False`` on a cache hit); ``refresh=True`` forces a
+    re-measure.  ``quick`` shrinks the probe sizes for smoke jobs."""
+    if not refresh:
+        hit = tunecache.host_entry()
+        if hit is not None:
+            return {**hit, "probed": False}
+    payload = {
+        "stream_gbps": probe_stream_gbps(n=1 << 21 if quick else 1 << 23,
+                                         iters=3 if quick else 5),
+        "peak_gflops": probe_peak_gflops(n=512 if quick else 1024,
+                                         iters=3 if quick else 5),
+    }
+    tunecache.store_host(payload)
+    return {**payload, "probed": True}
+
+
+def attainable_seconds(flops: float, bytes_: float, roof: dict) -> float:
+    """Roofline lower bound on wall time for (flops, bytes) on ``roof``."""
+    return max(bytes_ / (roof["stream_gbps"] * 1e9),
+               flops / (roof["peak_gflops"] * 1e9))
+
+
+def fraction(flops: float, bytes_: float, seconds: float,
+             roof: dict) -> float:
+    """Attainable-time / measured-time (1.0 == at the roofline; >1 means
+    the working set sat in cache above the streamed-bandwidth roof)."""
+    return attainable_seconds(flops, bytes_, roof) / seconds

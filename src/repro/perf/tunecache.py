@@ -1,0 +1,130 @@
+"""Persisted tuned-plan store with checksum-on-hit discipline.
+
+The autotuner's winners survive the process in ONE JSON file (default
+``~/.cache/repro/tunecache.json``, override with ``REPRO_TUNE_CACHE``)
+keyed by the launch-plan key ``(shape-class | tag | layout | nrhs)``.
+Every entry carries a CRC32 over its canonical JSON payload, verified on
+every lookup exactly like the PR-4 pack cache (``kernels/ops.PACK_STATS``):
+a corrupted entry is dropped, counted in ``TUNE_STATS['corrupt']``, and
+the caller re-sweeps instead of launching a garbage plan.
+
+``TUNE_STATS`` is module-global so benchmarks and tests can assert that a
+repeat run re-sweeps NOTHING (``sweeps`` stays flat while ``hits`` grows).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import zlib
+
+__all__ = ["TUNE_STATS", "cache_path", "lookup", "store", "host_entry",
+           "store_host", "reset", "clear_memory"]
+
+TUNE_STATS = {"hits": 0, "misses": 0, "corrupt": 0, "sweeps": 0,
+              "stores": 0}
+
+# In-memory image of the cache file: {"plans": {key: entry}, "host": entry}
+# where entry = {"payload": <jsonable>, "crc": int}.  Reloaded whenever the
+# resolved path changes (tests point REPRO_TUNE_CACHE at tmp files).
+_MEM: dict | None = None
+_MEM_PATH: str | None = None
+
+
+def cache_path() -> str:
+    env = os.environ.get("REPRO_TUNE_CACHE")
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "tunecache.json")
+
+
+def _crc(payload) -> int:
+    return zlib.crc32(json.dumps(payload, sort_keys=True).encode())
+
+
+def _image() -> dict:
+    global _MEM, _MEM_PATH
+    path = cache_path()
+    if _MEM is None or _MEM_PATH != path:
+        try:
+            with open(path) as fh:
+                _MEM = json.load(fh)
+        except (OSError, ValueError):
+            _MEM = {"plans": {}, "host": None}
+        _MEM.setdefault("plans", {})
+        _MEM.setdefault("host", None)
+        _MEM_PATH = path
+    return _MEM
+
+
+def _flush() -> None:
+    path = cache_path()
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               prefix=".tunecache.")
+    try:
+        with os.fdopen(fd, "w") as fh:
+            json.dump(_MEM, fh, indent=1, sort_keys=True)
+        os.replace(tmp, path)  # atomic: readers never see a torn file
+    except OSError:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+
+
+def _verify(entry) -> bool:
+    return (isinstance(entry, dict) and "payload" in entry
+            and _crc(entry["payload"]) == entry.get("crc"))
+
+
+def lookup(key: str):
+    """Tuned payload for ``key`` or None; checksum-verified on every hit."""
+    img = _image()
+    entry = img["plans"].get(key)
+    if entry is None:
+        TUNE_STATS["misses"] += 1
+        return None
+    if not _verify(entry):
+        TUNE_STATS["corrupt"] += 1
+        del img["plans"][key]
+        _flush()
+        return None
+    TUNE_STATS["hits"] += 1
+    return entry["payload"]
+
+
+def store(key: str, payload) -> None:
+    """Persist a tuned payload under ``key`` (atomic rewrite)."""
+    img = _image()
+    img["plans"][key] = {"payload": payload, "crc": _crc(payload)}
+    TUNE_STATS["stores"] += 1
+    _flush()
+
+
+def host_entry():
+    """Persisted host roofline probe ({stream_gbps, peak_gflops}) or None."""
+    entry = _image()["host"]
+    if entry is None or not _verify(entry):
+        return None
+    return entry["payload"]
+
+
+def store_host(payload) -> None:
+    img = _image()
+    img["host"] = {"payload": payload, "crc": _crc(payload)}
+    _flush()
+
+
+def reset() -> None:
+    """Zero the counters (tests)."""
+    for k in TUNE_STATS:
+        TUNE_STATS[k] = 0
+
+
+def clear_memory() -> None:
+    """Drop the in-memory image so the next access re-reads the file."""
+    global _MEM, _MEM_PATH
+    _MEM = None
+    _MEM_PATH = None

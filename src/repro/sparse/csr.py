@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import gse
+from repro.core import gse, precision_table
 
 __all__ = [
     "CSR",
@@ -43,7 +43,9 @@ __all__ = [
 
 # Matrix-stream bytes one padded slot (or one nnz) costs at each GSE tag:
 # 2/4/8 value-segment bytes + 4 packed-colidx bytes (DESIGN.md §8).
-_SLOT_BYTES = {1: 2 + 4, 2: 4 + 4, 3: 8 + 4}
+# Canonical table lives in core/precision_table.py; this is the historical
+# alias other modules import.
+_SLOT_BYTES = precision_table.SLOT_BYTES
 
 
 @jax.tree_util.register_pytree_node_class
@@ -110,7 +112,7 @@ class GSECSR:
 
     def nbytes(self, tag: int) -> int:
         n = self.colpak.shape[0]
-        per = {1: 2, 2: 4, 3: 8}[tag]
+        per = precision_table.TAG_VALUE_BYTES[tag]
         return n * per + self.table.size * 4
 
     def bytes_per_nnz(self, tag: int) -> int:
@@ -120,7 +122,8 @@ class GSECSR:
         provably omit the rest): 2/4/8 value bytes + 4 packed-colidx bytes
         -> 6/8/12 for tags 1/2/3, vs 12 for FP64 CSR.
         """
-        return {1: 2, 2: 4, 3: 8}[tag] + 4
+        pt = precision_table
+        return pt.TAG_VALUE_BYTES[tag] + pt.COLIDX_BYTES
 
     def bytes_touched(self, tag: int, layout=None) -> int:
         """Modeled HBM bytes one tag-``tag`` SpMV touches in the matrix
@@ -494,7 +497,7 @@ def ell_layout(a, lane: int = 128) -> ELLLayout:
 
 
 def sell_slices(rowptr, c: int = 8, sigma: int | None = None,
-                lane: int = 128):
+                lane: int = 128, bucket: str = "pow2"):
     """σ-window sort + slice/bucket plan (host-side static metadata).
 
     Rows are sorted by DESCENDING length inside windows of ``sigma`` rows
@@ -528,16 +531,25 @@ def sell_slices(rowptr, c: int = 8, sigma: int | None = None,
     lens = np.where(order >= 0, per_row[np.clip(order, 0, None)], 0)
     slice_max = lens.reshape(-1, c).max(axis=1)
     slice_w = np.maximum(-(-slice_max // lane) * lane, lane).astype(np.int64)
-    # Power-of-two width buckets: bounded bucket count however the widths
-    # spread, at worst <2x extra padding inside a bucket.
-    bucket_w = lane * (
-        2 ** np.ceil(np.log2(slice_w / lane)).astype(np.int64)
-    )
+    # Width-bucket granularity (plan-tunable, DESIGN.md §15): "pow2" bins
+    # slice widths into power-of-two lane multiples -- bounded bucket count
+    # however the widths spread, at worst <2x extra padding inside a
+    # bucket; "exact" keeps every distinct lane-aligned width -- zero
+    # bucket padding at the cost of one kernel call per distinct width.
+    if bucket == "pow2":
+        bucket_w = lane * (
+            2 ** np.ceil(np.log2(slice_w / lane)).astype(np.int64)
+        )
+    elif bucket == "exact":
+        bucket_w = slice_w
+    else:
+        raise ValueError(
+            f"bucket must be 'pow2' or 'exact', got {bucket!r}")
     return order, bucket_w, sigma
 
 
 def pack_sell(a: GSECSR, c: int = 8, sigma: int | None = None,
-              lane: int = 128) -> GSESellC:
+              lane: int = 128, bucket: str = "pow2") -> GSESellC:
     """GSE-SEM CSR -> SELL-C-σ packed layout (DESIGN.md §12).
 
     ``c`` must divide into the kernels' sublane block (a multiple of 8) so
@@ -549,7 +561,7 @@ def pack_sell(a: GSECSR, c: int = 8, sigma: int | None = None,
         raise ValueError(f"slice height c must be a multiple of 8, got {c}")
     m = a.shape[0]
     order, bucket_w, sigma_eff = sell_slices(a.rowptr, c=c, sigma=sigma,
-                                             lane=lane)
+                                             lane=lane, bucket=bucket)
     widths = tuple(int(w) for w in sorted(set(bucket_w.tolist())))
     segs = [
         (a.colpak, np.uint32),

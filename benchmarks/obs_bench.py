@@ -1,0 +1,275 @@
+"""Observability bench: flight-recorder identity, overhead, serve replay.
+
+Three headline checks for the observability stack (DESIGN.md §16):
+
+  * ``bit_identity``  -- recorder-on vs recorder-off solves return
+    bit-identical ``x``/``iters`` across {CG fused, CG+guards, PCG,
+    GMRES, batched, sharded}: the flight ring is observation-only state
+    threaded through the same jitted loop, never feeding back into the
+    arithmetic.  Every on-case log is also cross-checked against the
+    solver's own monitor/guard report (``flight.assert_consistent``).
+  * ``overhead``      -- clean-path wall-time ratio of the stepped CG
+    loop with flight recording + span tracing active vs fully off (the
+    acceptance bar is <= 1.10, gated in ``run.py --obs``).
+  * ``serve``         -- a replayed :class:`SolverService` workload read
+    back entirely from the metrics registry: p50/p95/p99 flush latency,
+    bytes/request, queue-depth gauge, and the event counters.
+
+The sharded identity case needs >= 2 devices (``run.py --obs`` forces
+two host CPU devices when XLA_FLAGS is unset); with one device it is
+skipped and reported as such.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import timed
+
+import jax  # noqa: E402  (common enables x64 first)
+import jax.numpy as jnp
+
+_PARAMS = None  # built lazily: MonitorParams import must follow x64 setup
+
+
+def _step_params():
+    """Forced-stepping monitor: C2 fires at every due check, so the tag
+    walks 1 -> 2 -> 3 at deterministic iterations (10 and 15) -- the
+    telemetry columns under test are guaranteed non-trivial."""
+    global _PARAMS
+    if _PARAMS is None:
+        from repro.core.precision import MonitorParams
+        _PARAMS = MonitorParams(t=10, l=10, m=5, rsd_limit=0.5,
+                                reldec_limit=2.0)
+    return _PARAMS
+
+
+def _operand(n=12, k=8):
+    from repro.sparse import generators as G
+    from repro.sparse.csr import pack_csr
+
+    csr = G.poisson2d(n)
+    return csr, pack_csr(csr, k=k)
+
+
+def _log_of(state):
+    from repro.obs import flight as OF
+    return OF.FlightLog.from_state(state)
+
+
+def bit_identity(tol=1e-10, maxiter=400) -> dict:
+    """Recorder-on vs recorder-off bitwise identity per solver family.
+
+    Each case solves twice -- ``flight=None`` and ``flight=FlightParams``
+    -- and demands ``np.array_equal`` on the solution and the iteration
+    count, then validates the on-case telemetry against the result's own
+    monitor fields.  Returns per-case {identical, consistent, rows,
+    switch_iters, iters}.
+    """
+    from repro.obs import flight as OF
+    from repro.robustness.guards import DEFAULT_GUARDS
+    from repro.solvers.batched import solve_cg_batched
+    from repro.solvers.cg import solve_cg, solve_pcg
+    from repro.solvers.gmres import solve_gmres
+    from repro.solvers.operators import make_gse_operator
+    from repro.solvers.precond import make_jacobi
+
+    csr, g = _operand()
+    n = csr.shape[0]
+    rng = np.random.default_rng(3)
+    b = jnp.asarray(rng.standard_normal(n))
+    fp = OF.FlightParams(capacity=256)
+    params = _step_params()
+    pre = make_jacobi(csr)
+
+    def entry(off, on, log, res_on, consistent=None):
+        ident = (np.array_equal(np.asarray(off.x), np.asarray(on.x))
+                 and int(np.asarray(off.iters).max())
+                 == int(np.asarray(on.iters).max()))
+        if consistent is None:
+            try:
+                OF.assert_consistent(log, res_on)
+                consistent = True
+            except AssertionError:
+                consistent = False
+        return {
+            "identical": bool(ident),
+            "consistent": bool(consistent),
+            "rows": len(log),
+            "iters": int(np.asarray(on.iters).max()),
+            "switch_iters": [int(v) for v in log.switch_iters()],
+        }
+
+    cases = {}
+
+    # CG, fused fast path (guards off) and guarded generic path.
+    for name, gu in (("cg_fused", None), ("cg_guarded", DEFAULT_GUARDS)):
+        off = solve_cg(g, b, tol=tol, maxiter=maxiter, params=params,
+                       guards=gu, recover=False)
+        on = solve_cg(g, b, tol=tol, maxiter=maxiter, params=params,
+                      guards=gu, recover=False, flight=fp)
+        cases[name] = entry(off, on, _log_of(on.flight), on)
+
+    off = solve_pcg(g, b, pre, tol=tol, maxiter=maxiter, params=params,
+                    recover=False)
+    on = solve_pcg(g, b, pre, tol=tol, maxiter=maxiter, params=params,
+                   recover=False, flight=fp)
+    cases["pcg"] = entry(off, on, _log_of(on.flight), on)
+
+    op = make_gse_operator(g)
+    off = solve_gmres(op, b, tol=tol, restart=25, maxiter=maxiter,
+                      params=params, recover=False)
+    on = solve_gmres(op, b, tol=tol, restart=25, maxiter=maxiter,
+                     params=params, recover=False, flight=fp)
+    cases["gmres"] = entry(off, on, _log_of(on.flight), on)
+
+    # Batched: per-column rings; column 0's log must ALSO match the
+    # single-RHS solve of the same column bit-for-bit.
+    B = jnp.asarray(rng.standard_normal((n, 3)))
+    boff = solve_cg_batched(g, B, tol=tol, maxiter=maxiter, params=params)
+    bon = solve_cg_batched(g, B, tol=tol, maxiter=maxiter, params=params,
+                           flight=fp)
+    col0 = _log_of(OF.split_batched(bon.flight)[0])
+    single = solve_cg(g, B[:, 0], tol=tol, maxiter=maxiter, params=params,
+                      recover=False, flight=fp)
+    slog = _log_of(single.flight)
+    match0 = (np.array_equal(col0.it, slog.it)
+              and np.array_equal(col0.tag, slog.tag)
+              and np.array_equal(col0.relres, slog.relres))
+    cases["batched"] = entry(boff, bon, col0, bon, consistent=bool(match0))
+
+    cases["sharded"] = _bit_identity_sharded(b, tol, maxiter, fp, params)
+    return cases
+
+
+def _bit_identity_sharded(b, tol, maxiter, fp, params) -> dict:
+    """Sharded CG: replicated flight ring vs the single-device log."""
+    if jax.device_count() < 2:
+        return {"skipped": "needs >= 2 devices"}
+    from repro.distributed.partition import partition_gsecsr
+    from repro.obs import flight as OF
+    from repro.solvers.cg import solve_cg
+    from repro.solvers.sharded import solve_cg_sharded
+
+    _, g = _operand()
+    part = partition_gsecsr(g, min(jax.device_count(), 2))
+    off = solve_cg_sharded(part, b, tol=tol, maxiter=maxiter, params=params)
+    on = solve_cg_sharded(part, b, tol=tol, maxiter=maxiter, params=params,
+                          flight=fp)
+    log = _log_of(on.flight)
+    try:
+        OF.assert_consistent(log, on)
+        consistent = True
+    except AssertionError:
+        consistent = False
+    # The psum'd telemetry must equal the single-device recording exactly
+    # (exact wire: identical arithmetic, identical flight rows).
+    ref = solve_cg(g, b, tol=tol, maxiter=maxiter, params=params, flight=fp)
+    rlog = _log_of(ref.flight)
+    consistent = consistent and np.array_equal(log.it, rlog.it) \
+        and np.array_equal(log.tag, rlog.tag)
+    return {
+        "identical": bool(np.array_equal(np.asarray(off.x), np.asarray(on.x))
+                          and int(off.iters) == int(on.iters)),
+        "consistent": bool(consistent),
+        "rows": len(log),
+        "iters": int(on.iters),
+        "switch_iters": [int(v) for v in log.switch_iters()],
+    }
+
+
+def overhead(n=24, tol=1e-8, maxiter=2000, repeats=3) -> dict:
+    """Recorder+tracer-on vs fully-off wall time of the clean stepped CG.
+
+    Mirrors ``robust_bench.overhead`` (same operand, same best-of-k min
+    timing): the flight ring compiles into the same jitted loop, and the
+    host-side spans wrap only the solve entry point -- the bar is <= 1.10.
+    """
+    from repro.core.precision import MonitorParams
+    from repro.obs import flight as OF
+    from repro.obs import trace as OT
+    from repro.solvers.cg import solve_cg
+    from repro.sparse.spmv import spmv
+
+    csr, g = _operand(n=n)
+    rng = np.random.default_rng(7)
+    b = spmv(csr, jnp.asarray(rng.normal(size=csr.shape[1])))
+    params = MonitorParams(t=40, l=60, m=30, rsd_limit=0.5,
+                           reldec_limit=0.45)
+    fp = OF.FlightParams(capacity=1024)
+
+    def run_once(flight):
+        return solve_cg(g, b, tol=tol, maxiter=maxiter, params=params,
+                        recover=False, flight=flight)
+
+    out = {}
+    res, best = timed(run_once, None, iters=repeats, warmup=1,
+                      label="obs_overhead_off")
+    out["obs_off_s"] = best
+    out["obs_off_iters"] = int(res.iters)
+    tracer = OT.Tracer()
+    OT.install(tracer)
+    try:
+        res, best = timed(run_once, fp, iters=repeats, warmup=1,
+                          label="obs_overhead_on")
+    finally:
+        OT.uninstall()
+    out["obs_on_s"] = best
+    out["obs_on_iters"] = int(res.iters)
+    out["trace_events"] = len(tracer.events)
+    out["ratio"] = out["obs_on_s"] / out["obs_off_s"]
+    return out
+
+
+def serve_replay(requests=12, slots=4, waves=3) -> dict:
+    """Replay a SolverService workload; read it all back from the registry.
+
+    Submits ``requests`` solves against one registered operator in
+    ``waves`` flush waves, then reports ONLY what the metrics layer
+    recorded: flush-latency and bytes/request histogram summaries
+    (p50/p95/p99), the queue-depth gauge, and the per-service counters --
+    proving the exposition path carries the serving story end to end.
+    """
+    from repro.launch.solver_serve import SolverService
+    from repro.obs import metrics as OM
+
+    csr, _ = _operand()
+    n = csr.shape[0]
+    svc = SolverService(slots=slots, params=_step_params(), maxiter=800)
+    svc.register("op", csr, k=8)
+    rng = np.random.default_rng(11)
+    per_wave = max(1, requests // waves)
+    rids, depth_peak = [], 0
+    for _ in range(waves):
+        for _ in range(per_wave):
+            rids.append(svc.submit("op", rng.standard_normal(n), tol=1e-8))
+        depth_peak = max(depth_peak, int(svc.queue_depth.value))
+        reports = svc.flush()
+        assert all(r.converged for r in reports.values()), "replay solve"
+    flush_lat = svc.flush_latency.summary()
+    req_bytes = svc.request_bytes.summary()
+    reg = OM.REGISTRY.to_json()
+    return {
+        "requests": len(rids),
+        "waves": waves,
+        "queue_depth_peak": depth_peak,
+        "queue_depth_final": int(svc.queue_depth.value),
+        "flush_latency_s": flush_lat,
+        "request_bytes": req_bytes,
+        "stats": dict(svc.stats),
+        "registry_series": len(reg["metrics"]),
+    }
+
+
+def run(quick: bool = False) -> dict:
+    """Full observability sweep; returns the BENCH_obs.json payload."""
+    ident = bit_identity()
+    ovh = overhead(n=16 if quick else 24,
+                   maxiter=1500 if quick else 2000)
+    serve = serve_replay(requests=6 if quick else 12)
+    from repro.obs import metrics as OM
+    return {
+        "bit_identity": ident,
+        "overhead": ovh,
+        "serve": serve,
+        "metrics": OM.REGISTRY.to_json(),
+    }

@@ -46,6 +46,15 @@ on absolute microseconds.  Composes with ``--quick``.
 corruption and 100% recovery of the low-tag operator faults.  Forces two
 host CPU devices (for the wire-checksum harness) when XLA_FLAGS is
 unset.  Composes with ``--quick`` for the trimmed CI smoke.
+
+``--obs`` runs the observability sweep (benchmarks/obs_bench.py,
+DESIGN.md section 16) and writes ``BENCH_obs.json`` plus a span capture
+``TRACE_obs.jsonl``, gating recorder-on/off bit identity across every
+solver family, flight-vs-monitor telemetry consistency, the <= 1.10
+flight+span overhead ratio, and trace schema validity.  The serve-replay
+section reports p50/p95/p99 flush latency and bytes/request straight
+from the metrics registry.  Forces two host CPU devices (for the sharded
+identity case) when XLA_FLAGS is unset.  Composes with ``--quick``.
 """
 from __future__ import annotations
 
@@ -59,6 +68,21 @@ import traceback
 _REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 if str(_REPO_ROOT) not in sys.path:  # allow `python benchmarks/run.py`
     sys.path.insert(0, str(_REPO_ROOT))
+
+
+def _write_payload(payload: dict, path: pathlib.Path) -> None:
+    """Stamp the provenance header (DESIGN.md §16) and write the artifact.
+
+    Every BENCH_*.json carries WHAT produced it -- git sha, jax/jaxlib
+    versions, device kind, host roofline, UTC timestamp -- so a regression
+    diff can tell a code change from an environment change.  Written
+    BEFORE any gate raises so a failing run still uploads diagnostics.
+    """
+    from benchmarks import common
+
+    payload["provenance"] = common.provenance()
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {path}", file=sys.stderr)
 
 
 def run_quick(out_path: pathlib.Path | None = None) -> dict:
@@ -82,9 +106,7 @@ def run_quick(out_path: pathlib.Path | None = None) -> dict:
                   " bytes_per_nnz_tag1}",
         "results": results,
     }
-    path = out_path or (_REPO_ROOT / "BENCH_spmv.json")
-    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
-    print(f"wrote {path}", file=sys.stderr)
+    _write_payload(payload, out_path or (_REPO_ROOT / "BENCH_spmv.json"))
 
     lay = results["skewed_layouts"]["layouts"]
     sell, ell = lay["sell"], lay["ell"]
@@ -131,9 +153,7 @@ def run_quick_batch(nrhs: int, out_path: pathlib.Path | None = None) -> dict:
         "matrix": "random_spd_600",
         "results": case,
     }
-    path = out_path or (_REPO_ROOT / "BENCH_batch.json")
-    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
-    print(f"wrote {path}", file=sys.stderr)
+    _write_payload(payload, out_path or (_REPO_ROOT / "BENCH_batch.json"))
     if not all(case["converged"]):
         raise SystemExit("batched smoke: not all columns converged")
     if nrhs >= 2 and case["per_iter_ratio"] >= 2.0:
@@ -178,9 +198,7 @@ def run_quick_dist(shards: int, out_path: pathlib.Path | None = None) -> dict:
         "matrix": "poisson2d_24",
         "results": case,
     }
-    path = out_path or (_REPO_ROOT / "BENCH_dist.json")
-    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
-    print(f"wrote {path}", file=sys.stderr)
+    _write_payload(payload, out_path or (_REPO_ROOT / "BENCH_dist.json"))
     if not case["converged"]:
         raise SystemExit("dist smoke: gse-wire sharded run did not converge")
     if case["exact_iters"] != case["ref_iters"]:
@@ -229,9 +247,7 @@ def run_robust(quick: bool, out_path: pathlib.Path | None = None) -> dict:
                   "ratio} (DESIGN.md section 14)",
         "results": results,
     }
-    path = out_path or (_REPO_ROOT / "BENCH_robust.json")
-    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
-    print(f"wrote {path}", file=sys.stderr)
+    _write_payload(payload, out_path or (_REPO_ROOT / "BENCH_robust.json"))
 
     det = results["detection"]
     if det["wire_skipped"]:
@@ -294,9 +310,7 @@ def run_tune(quick: bool, out_path: pathlib.Path | None = None) -> dict:
                   "counters (DESIGN.md section 15)",
         "results": results,
     }
-    path = out_path or (_REPO_ROOT / "BENCH_roofline.json")
-    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
-    print(f"wrote {path}", file=sys.stderr)
+    _write_payload(payload, out_path or (_REPO_ROOT / "BENCH_roofline.json"))
 
     for row in results["kernels"]:
         if row["speedup"] < 1.0 - 1e-9:
@@ -331,6 +345,69 @@ def run_tune(quick: bool, out_path: pathlib.Path | None = None) -> dict:
             f"tune sweep: replay hit {rep['hits']}/{rep['configs']} plans "
             f"with {rep['sweeps']} re-sweeps (want all hits, zero sweeps)"
         )
+    return payload
+
+
+def run_obs(quick: bool, out_path: pathlib.Path | None = None,
+            trace_path: pathlib.Path | None = None) -> dict:
+    """Observability sweep -> BENCH_obs.json + TRACE_obs.jsonl (§16).
+
+    Runs ``benchmarks/obs_bench.py`` under a span capture and gates:
+
+      * every recorder-on solve is BIT-IDENTICAL to recorder-off (and its
+        telemetry consistent with the solver's own monitor/guard report)
+        across CG fused/guarded, PCG, GMRES, batched, and sharded;
+      * the clean-path overhead ratio with flight + spans active is
+        <= 1.10 (the observability twin of the guard-overhead bar);
+      * the captured trace JSONL round-trips through the schema
+        validator (``repro.obs.trace.validate_jsonl``).
+
+    The JSON and trace are written BEFORE the gates raise so a failing
+    run still uploads diagnostics.
+    """
+    from benchmarks import obs_bench
+    from repro.obs import trace as OT
+
+    tpath = trace_path or (_REPO_ROOT / "TRACE_obs.jsonl")
+    with OT.capture(str(tpath)):
+        results = obs_bench.run(quick=quick)
+    print(f"wrote {tpath}", file=sys.stderr)
+    payload = {
+        "bench": "observability",
+        "schema": "bit_identity -> case -> {identical, consistent, rows, "
+                  "switch_iters}; overhead -> {obs_on_s, obs_off_s, ratio}"
+                  "; serve -> {flush_latency_s, request_bytes, stats}; "
+                  "metrics -> registry exposition (DESIGN.md section 16)",
+        "results": results,
+    }
+    _write_payload(payload, out_path or (_REPO_ROOT / "BENCH_obs.json"))
+
+    n_events = OT.validate_jsonl(str(tpath))
+    if n_events < 1:
+        raise SystemExit("obs sweep: trace capture recorded no spans")
+    for name, case in results["bit_identity"].items():
+        if "skipped" in case:
+            raise SystemExit(
+                f"obs sweep: {name} identity case skipped ({case['skipped']}"
+                "; run.py forces 2 host devices when XLA_FLAGS is unset)"
+            )
+        if not case["identical"]:
+            raise SystemExit(
+                f"obs sweep: recorder-on solve NOT bit-identical on {name}"
+            )
+        if not case["consistent"]:
+            raise SystemExit(
+                f"obs sweep: flight telemetry inconsistent with the "
+                f"solver's own report on {name}"
+            )
+    if results["overhead"]["ratio"] > 1.10:
+        raise SystemExit(
+            f"obs sweep: flight+span overhead ratio "
+            f"{results['overhead']['ratio']:.3f} > 1.10"
+        )
+    lat = results["serve"]["flush_latency_s"]
+    if not lat["count"] or lat["p99"] is None:
+        raise SystemExit("obs sweep: serve replay recorded no flush latency")
     return payload
 
 
@@ -373,6 +450,13 @@ def main() -> None:
                          "sweep -> BENCH_robust.json, gating 100% "
                          "detection and recovery (DESIGN.md section 14; "
                          "forces 2 host CPU devices if XLA_FLAGS is unset)")
+    ap.add_argument("--obs", action="store_true",
+                    help="observability sweep -> BENCH_obs.json + "
+                         "TRACE_obs.jsonl, gating recorder-on/off bit "
+                         "identity, the <= 1.10 flight+span overhead "
+                         "ratio, and trace schema validity (DESIGN.md "
+                         "section 16; forces 2 host CPU devices if "
+                         "XLA_FLAGS is unset)")
     args = ap.parse_args()
     if args.quick and args.only:
         ap.error("--quick and --only are mutually exclusive")
@@ -389,8 +473,12 @@ def main() -> None:
                       or args.only):
         ap.error("--tune is its own sweep: drop "
                  "--robust/--shards/--nrhs/--only")
+    if args.obs and (args.robust or args.tune or args.shards > 1
+                     or args.nrhs > 1 or args.only):
+        ap.error("--obs is its own sweep: drop "
+                 "--robust/--tune/--shards/--nrhs/--only")
     force_devices = args.shards if args.shards > 1 else (
-        2 if args.robust else 0)
+        2 if args.robust or args.obs else 0)
     if force_devices and "xla_force_host_platform_device_count" not in (
             os.environ.get("XLA_FLAGS", "")):
         # Must land before jax initializes (all jax imports are lazy,
@@ -402,6 +490,9 @@ def main() -> None:
         ).strip()
 
     print("name,us_per_call,derived")
+    if args.obs:
+        run_obs(quick=args.quick)
+        return
     if args.robust:
         run_robust(quick=args.quick)
         return

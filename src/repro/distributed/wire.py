@@ -97,44 +97,49 @@ def halo_all_gather(bnd: jnp.ndarray, axis_name: str, *, tag: int,
     """
     if wire not in ("gse", "exact"):
         raise ValueError(f"unknown wire mode {wire!r}; 'gse' or 'exact'")
+    # Device-side attribution (DESIGN.md §16): the scope name lands in
+    # profiler traces for every halo exchange this call site emits.
+    scope = jax.named_scope(f"halo_all_gather.{wire}.tag{tag}")
     if wire == "exact" or tag == 3:
+        with scope:
+            if not check:
+                return jax.lax.all_gather(_send("raw", bnd), axis_name)
+            ref = jax.lax.all_gather(wire_checksum(bnd), axis_name)
+            out = jax.lax.all_gather(_send("raw", bnd), axis_name)
+            got = jax.vmap(wire_checksum)(out)
+            return out, (got == ref).all()
+    with scope:
+        b32 = bnd.astype(jnp.float32)
+        table = gse.extract_shared_exponents_jnp(b32, k)
+        head, tail1 = gse.pack32_jnp(b32, table, k)
+        sums, refs = [], []
+        if check:
+            sums = [wire_checksum(head), wire_checksum(table)]
+            if tag != 1:
+                sums.append(wire_checksum(tail1))
+            refs = [jax.lax.all_gather(c, axis_name) for c in sums]
+        h_all = jax.lax.all_gather(_send("head", head), axis_name)
+        tb_all = jax.lax.all_gather(_send("table", table), axis_name)
+        if tag == 1:
+            dec = jax.vmap(
+                lambda h, tb: gse.decode32_jnp(
+                    tb, h, jnp.zeros(h.shape, jnp.uint16), k, 1, jnp.float32
+                )
+            )(h_all, tb_all)
+            gathered = (h_all, tb_all)
+        else:
+            t_all = jax.lax.all_gather(_send("tail1", tail1), axis_name)
+            dec = jax.vmap(
+                lambda h, t, tb: gse.decode32_jnp(tb, h, t, k, 2, jnp.float32)
+            )(h_all, t_all, tb_all)
+            gathered = (h_all, tb_all, t_all)
+        dec = dec.astype(bnd.dtype)
         if not check:
-            return jax.lax.all_gather(_send("raw", bnd), axis_name)
-        ref = jax.lax.all_gather(wire_checksum(bnd), axis_name)
-        out = jax.lax.all_gather(_send("raw", bnd), axis_name)
-        got = jax.vmap(wire_checksum)(out)
-        return out, (got == ref).all()
-    b32 = bnd.astype(jnp.float32)
-    table = gse.extract_shared_exponents_jnp(b32, k)
-    head, tail1 = gse.pack32_jnp(b32, table, k)
-    sums, refs = [], []
-    if check:
-        sums = [wire_checksum(head), wire_checksum(table)]
-        if tag != 1:
-            sums.append(wire_checksum(tail1))
-        refs = [jax.lax.all_gather(c, axis_name) for c in sums]
-    h_all = jax.lax.all_gather(_send("head", head), axis_name)
-    tb_all = jax.lax.all_gather(_send("table", table), axis_name)
-    if tag == 1:
-        dec = jax.vmap(
-            lambda h, tb: gse.decode32_jnp(
-                tb, h, jnp.zeros(h.shape, jnp.uint16), k, 1, jnp.float32
-            )
-        )(h_all, tb_all)
-        gathered = (h_all, tb_all)
-    else:
-        t_all = jax.lax.all_gather(_send("tail1", tail1), axis_name)
-        dec = jax.vmap(
-            lambda h, t, tb: gse.decode32_jnp(tb, h, t, k, 2, jnp.float32)
-        )(h_all, t_all, tb_all)
-        gathered = (h_all, tb_all, t_all)
-    dec = dec.astype(bnd.dtype)
-    if not check:
-        return dec
-    ok = jnp.bool_(True)
-    for buf, ref in zip(gathered, refs):
-        ok = ok & (jax.vmap(wire_checksum)(buf) == ref).all()
-    return dec, ok
+            return dec
+        ok = jnp.bool_(True)
+        for buf, ref in zip(gathered, refs):
+            ok = ok & (jax.vmap(wire_checksum)(buf) == ref).all()
+        return dec, ok
 
 
 def compressed_psum(grads: jnp.ndarray, axis_name: str, k: int = 8):

@@ -15,6 +15,8 @@ import numpy as np
 
 from repro.core.gse import GSEPacked
 from repro.kernels import ref
+from repro.obs import metrics as OM
+from repro.obs import trace as OT
 from repro.kernels.gse_decode import decode_pallas
 from repro.kernels.gse_matmul import gse_matmul_pallas
 from repro.kernels.gse_spmm import gse_spmm_pallas, gse_spmm_sell_call
@@ -34,8 +36,13 @@ __all__ = ["gse_decode", "gse_matmul", "gse_spmv_ell", "gse_spmm_ell",
 # service) can assert that repeated solves against one registered operator
 # perform ZERO host-side re-packing; ``evictions`` counts LRU drops and
 # ``corrupt`` counts checksum-mismatch detect-and-repack events
-# (DESIGN.md §14).
-PACK_STATS = {"hits": 0, "misses": 0, "evictions": 0, "corrupt": 0}
+# (DESIGN.md §14).  Storage lives in the metrics registry (DESIGN.md §16)
+# -- this dict-shaped view keeps every historical call site working.
+PACK_STATS = OM.stats_view(
+    "repro_pack_cache_events_total",
+    ("hits", "misses", "evictions", "corrupt"),
+    help="Operand pack-cache events by outcome.",
+)
 
 # Per-operator-instance LRU bound.  Layout keys are few (one per
 # (layout, lane/c/sigma) combination a caller sweeps), but a long-lived
@@ -83,7 +90,8 @@ def _cached_pack(a, key, build):
             cache.move_to_end(key)
     if not hit:
         PACK_STATS["misses"] += 1
-        entry = build()
+        with OT.span("pack.build", key=str(key)):
+            entry = build()
         cache[key] = (entry, _entry_checksum(entry))
         cache.move_to_end(key)
         while len(cache) > PACK_CACHE_MAX:
@@ -120,8 +128,9 @@ def gse_decode(packed: GSEPacked, tag: int = 1, block=(8, 128),
     m_h = 15 - packed.ei_bit
     bits_used = {1: m_h, 2: m_h + 16, 3: m_h + 48}[tag]
     scales = ref.make_scales(packed.table, bits_used).reshape(1, -1)
-    out = decode_pallas(head2, t1, t2, scales, ei_bit=packed.ei_bit, tag=tag,
-                        block=block, interpret=interpret)
+    with jax.named_scope(f"gse_decode.tag{tag}"):
+        out = decode_pallas(head2, t1, t2, scales, ei_bit=packed.ei_bit,
+                            tag=tag, block=block, interpret=interpret)
     return out[:m0, :n0].reshape(shape)
 
 
@@ -311,7 +320,8 @@ def gse_spmm_ell(ell, table, x: jnp.ndarray, ei_bit: int, tag: int = 1,
         operands.append(_pad2(t1, bm, bl))
     if tag == 3:
         operands.append(_pad2(t2, bm, bl))
-    out = kernel(*operands, x, scales)
+    with jax.named_scope(f"gse_spmm_ell.tag{tag}"):
+        out = kernel(*operands, x, scales)
     return out[:m0]
 
 
@@ -476,7 +486,8 @@ def gse_spmv_sell(sell: GSESellC, x: jnp.ndarray, tag: int = 1,
     bits_used = {1: 15, 2: 31, 3: 63}[tag]
     scales = ref.make_scales(sell.table, bits_used).reshape(1, -1)
     kernel = sell_kernel_for(tag, sell.ei_bit, blocks, interpret)
-    return kernel(_sell_buckets(sell, tag), sell.unperm, x, scales)
+    with jax.named_scope(f"gse_spmv_sell.tag{tag}"):
+        return kernel(_sell_buckets(sell, tag), sell.unperm, x, scales)
 
 
 def gse_spmm_sell(sell: GSESellC, x: jnp.ndarray, tag: int = 1,
@@ -497,7 +508,8 @@ def gse_spmm_sell(sell: GSESellC, x: jnp.ndarray, tag: int = 1,
     bits_used = {1: 15, 2: 31, 3: 63}[tag]
     scales = ref.make_scales(sell.table, bits_used).reshape(1, -1)
     kernel = sell_spmm_kernel_for(tag, sell.ei_bit, blocks, interpret)
-    return kernel(_sell_buckets(sell, tag), sell.unperm, x, scales)
+    with jax.named_scope(f"gse_spmm_sell.tag{tag}"):
+        return kernel(_sell_buckets(sell, tag), sell.unperm, x, scales)
 
 
 def gse_spmv_ell(ell, table, x: jnp.ndarray, ei_bit: int, tag: int = 1,
@@ -526,5 +538,6 @@ def gse_spmv_ell(ell, table, x: jnp.ndarray, ei_bit: int, tag: int = 1,
         operands.append(_pad2(t1, bm, bl))
     if tag == 3:
         operands.append(_pad2(t2, bm, bl))
-    out = kernel(*operands, x, scales)
+    with jax.named_scope(f"gse_spmv_ell.tag{tag}"):
+        out = kernel(*operands, x, scales)
     return out[:m0]

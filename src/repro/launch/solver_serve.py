@@ -32,6 +32,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import precision as P
+from repro.obs import metrics as OM
+from repro.obs import trace as OT
 from repro.robustness.guards import (
     DEFAULT_GUARDS,
     GuardParams,
@@ -51,6 +53,11 @@ from repro.solvers.precond import make_jacobi, make_spai0
 __all__ = ["SolveRequest", "SolveReport", "SolverService"]
 
 _PRECOND_FACTORY = {"jacobi": make_jacobi, "spai0": make_spai0}
+
+# Distinguishes the metric series of multiple SolverService instances in
+# one process (tests build them freely); the id is a label value, so all
+# instances share ONE registered family per metric name.
+_SERVICE_IDS = itertools.count()
 
 
 @dataclasses.dataclass
@@ -130,9 +137,35 @@ class SolverService:
         self._pending: List[SolveRequest] = []
         self._ids = itertools.count()
         self._solutions: Dict[int, jnp.ndarray] = {}
-        self.stats = dict(batches=0, requests=0, padded_cols=0,
-                          modeled_bytes=0, retries=0, errors=0,
-                          deadline_exceeded=0)
+        # Registry-backed telemetry (DESIGN.md §16).  ``stats`` keeps the
+        # historical dict shape; the gauge tracks the live queue depth and
+        # the histograms feed the p50/p95/p99 flush-latency and
+        # bytes-per-request numbers ``run.py --obs`` reports.
+        self.service_id = str(next(_SERVICE_IDS))
+        const = {"service": self.service_id}
+        self.stats = OM.stats_view(
+            "repro_serve_events_total",
+            ("batches", "requests", "padded_cols", "modeled_bytes",
+             "retries", "errors", "deadline_exceeded"),
+            help="SolverService lifetime event counts by kind.",
+            const=const,
+        )
+        self.queue_depth = OM.REGISTRY.gauge(
+            "repro_serve_queue_depth",
+            "Requests waiting for the next flush.",
+            labelnames=("service",),
+        ).labels(**const)
+        self.flush_latency = OM.REGISTRY.histogram(
+            "repro_serve_flush_latency_seconds",
+            "Wall-clock seconds per SolverService.flush call.",
+            labelnames=("service",),
+        ).labels(**const)
+        self.request_bytes = OM.REGISTRY.histogram(
+            "repro_serve_request_bytes",
+            "Modeled streamed bytes charged to each served request.",
+            labelnames=("service",),
+            buckets=OM.DEFAULT_BYTE_BUCKETS,
+        ).labels(**const)
 
     # -- registration ------------------------------------------------------
 
@@ -268,6 +301,7 @@ class SolverService:
         self._pending.append(SolveRequest(rid, handle, b, float(tol), x0,
                                           deadline_s=deadline_s,
                                           t_submit=time.monotonic()))
+        self.queue_depth.set(len(self._pending))
         return rid
 
     # -- batch execution ---------------------------------------------------
@@ -285,30 +319,39 @@ class SolverService:
         reports (``health="error"``, not converged, no solution) for its
         requests, and every returned solution is either finite or flagged
         by a non-ok health."""
+        t0 = time.perf_counter()
         self._solutions.clear()
         buckets: Dict[tuple, List[SolveRequest]] = {}
         for req in self._pending:
             buckets.setdefault((req.handle, req.tol), []).append(req)
+        drained = len(self._pending)
         self._pending = []
+        self.queue_depth.set(0)
 
         reports: Dict[int, SolveReport] = {}
-        for (handle, tol), reqs in buckets.items():
-            op = self._ops[handle]
-            for i in range(0, len(reqs), self.slots):
-                chunk = reqs[i:i + self.slots]
-                try:
-                    reports.update(self._run_slot(op, tol, chunk))
-                except Exception:  # degraded, never propagated
-                    self.stats["errors"] += 1
-                    for req in chunk:
-                        self._solutions.pop(req.id, None)
-                        reports[req.id] = SolveReport(
-                            id=req.id, handle=op.name, iters=0,
-                            relres=float("inf"), converged=False, tag=0,
-                            switch_iters=np.full(2, -1, np.int64),
-                            est_bytes=0, batch_size=len(chunk),
-                            health="error",
-                        )
+        with OT.span("serve.flush", service=self.service_id,
+                     requests=drained) as attrs:
+            for (handle, tol), reqs in buckets.items():
+                op = self._ops[handle]
+                for i in range(0, len(reqs), self.slots):
+                    chunk = reqs[i:i + self.slots]
+                    try:
+                        reports.update(self._run_slot(op, tol, chunk))
+                    except Exception:  # degraded, never propagated
+                        self.stats["errors"] += 1
+                        for req in chunk:
+                            self._solutions.pop(req.id, None)
+                            reports[req.id] = SolveReport(
+                                id=req.id, handle=op.name, iters=0,
+                                relres=float("inf"), converged=False, tag=0,
+                                switch_iters=np.full(2, -1, np.int64),
+                                est_bytes=0, batch_size=len(chunk),
+                                health="error",
+                            )
+            attrs["bytes"] = sum(r.est_bytes for r in reports.values())
+        for rep in reports.values():
+            self.request_bytes.observe(rep.est_bytes)
+        self.flush_latency.observe(time.perf_counter() - t0)
         return reports
 
     def _run_slot(self, op: _Operator, tol: float,

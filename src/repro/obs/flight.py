@@ -1,0 +1,332 @@
+"""Device-side solver flight recorder (DESIGN.md section 16).
+
+A fixed-size ring buffer carried through the solver ``lax.while_loop``
+state.  Each iteration appends one row — iteration index, recursive
+relative residual, the precision tag the iteration RAN at, the guard
+health code after the update, and three solver-specific auxiliaries
+(CG/PCG: alpha, beta, the curvature ``p.Ap``; GMRES: the Givens magnitude
+``d``, the subdiagonal ``H[j+1,j]``, 0).  For sharded runs the recorded
+scalars are the psum'd (replicated) dots, so every shard carries an
+identical buffer.
+
+Contracts:
+
+* **Zero host syncs in-loop** — recording is pure ``Array.at[].set`` on
+  buffer rows; nothing is pulled to the host until the post-solve decode.
+* **Bit-identity** — the recorder only *observes* values the iteration
+  already computed (same discipline as the PR 6 guards, which observe
+  after the update arithmetic); recorder-on trajectories and solutions
+  are bit-identical to recorder-off.
+* **Ring semantics** — row ``i`` lands at slot ``count % capacity``;
+  once ``count > capacity`` the oldest rows are overwritten and the
+  decode reports them as ``dropped``.
+
+Post-solve, :meth:`FlightLog.from_state` decodes the buffer on the host
+and :func:`assert_consistent` checks the telemetry against the ground
+truth the solver already reports (``switch_iters``, ``trip_iter``,
+``tag``, ``iters``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.robustness.guards import HEALTH_OK, health_name
+
+__all__ = [
+    "FlightLog",
+    "FlightParams",
+    "DEFAULT_FLIGHT",
+    "assert_consistent",
+    "flight_init",
+    "flight_record",
+    "split_batched",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FlightParams:
+    """Static (hashable) recorder configuration — a jit static arg, like
+    ``MonitorParams`` and ``GuardParams``.
+
+    ``capacity`` is the ring size in rows; a row is 1 int32 iter index,
+    2 int32 tag/health codes and 4 residual-dtype scalars (40 B/row at
+    f64), so the default 1024-row buffer costs 40 KiB of device memory
+    per solve.
+    """
+    capacity: int = 1024
+
+    def __post_init__(self):
+        if self.capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {self.capacity}")
+
+
+DEFAULT_FLIGHT = FlightParams()
+
+# Per-row columns, in decode order.  "it" is -1 on never-written slots.
+COLUMNS = ("it", "relres", "tag", "health", "a0", "a1", "a2")
+
+# On-device layout: the ring is TWO row-major buffers -- ``ibuf`` (cap, 3)
+# int32 [it, tag, health] and ``fbuf`` (cap, 4) residual-dtype [relres,
+# a0, a1, a2] -- so appending a row is two dynamic-update-slices total,
+# not one per column (the per-column layout's 7 updates per iteration
+# dominated the recorder's cost on small operands).
+_ICOLS = ("it", "tag", "health")
+_FCOLS = ("relres", "a0", "a1", "a2")
+
+
+def flight_init(params: FlightParams, dtype):
+    """Fresh recorder state: empty ring buffer + row counter (a pytree of
+    arrays, carried through the while_loop like the monitor state)."""
+    import jax.numpy as jnp
+
+    cap = params.capacity
+    return {
+        # it = -1 marks never-written slots; tag/health start at 0.
+        "ibuf": jnp.tile(jnp.array([[-1, 0, 0]], jnp.int32), (cap, 1)),
+        "fbuf": jnp.zeros((cap, len(_FCOLS)), dtype),
+        "count": jnp.int32(0),
+    }
+
+
+def flight_record(fs, *, it, relres, tag, health=None, a0=None, a1=None,
+                  a2=None):
+    """Append one row; pure array ops, no host syncs, no data dependence
+    back into the solver state (bit-identity)."""
+    import jax.numpy as jnp
+
+    cap = fs["ibuf"].shape[0]
+    idx = fs["count"] % cap
+    dtype = fs["fbuf"].dtype
+    zero = jnp.zeros((), dtype)
+    if health is None:
+        health = jnp.int32(HEALTH_OK)
+    irow = jnp.stack([jnp.asarray(it, jnp.int32),
+                      jnp.asarray(tag, jnp.int32),
+                      jnp.asarray(health, jnp.int32)])
+    frow = jnp.stack([jnp.asarray(relres, dtype),
+                      zero if a0 is None else jnp.asarray(a0, dtype),
+                      zero if a1 is None else jnp.asarray(a1, dtype),
+                      zero if a2 is None else jnp.asarray(a2, dtype)])
+    return {
+        "ibuf": fs["ibuf"].at[idx].set(irow),
+        "fbuf": fs["fbuf"].at[idx].set(frow),
+        "count": fs["count"] + 1,
+    }
+
+
+def split_batched(fs) -> list[dict]:
+    """Split a stacked per-column flight state (leading nrhs axis, as the
+    batched solvers return it) into one state dict per column."""
+    nrhs = int(np.asarray(fs["count"]).shape[0])
+    return [{k: fs[k][j] for k in ("ibuf", "fbuf", "count")}
+            for j in range(nrhs)]
+
+
+@dataclasses.dataclass
+class FlightLog:
+    """Host-side decoded flight recording, rows ordered oldest -> newest."""
+
+    it: np.ndarray
+    relres: np.ndarray
+    tag: np.ndarray
+    health: np.ndarray
+    a0: np.ndarray
+    a1: np.ndarray
+    a2: np.ndarray
+    capacity: int
+    recorded: int   # total rows ever written (may exceed capacity)
+    dropped: int    # rows overwritten by the ring
+
+    @classmethod
+    def from_state(cls, fs) -> "FlightLog":
+        """Decode a recorder state (single host sync, after the solve)."""
+        ibuf, fbuf = np.asarray(fs["ibuf"]), np.asarray(fs["fbuf"])
+        count = int(np.asarray(fs["count"]))
+        cap = ibuf.shape[0]
+        if count <= cap:
+            ibuf, fbuf = ibuf[:count], fbuf[:count]
+        else:
+            # Ring wrapped: slot (count % cap) holds the oldest row.
+            shift = count % cap
+            ibuf = np.roll(ibuf, -shift, axis=0)
+            fbuf = np.roll(fbuf, -shift, axis=0)
+        cols = {c: ibuf[:, i].copy() for i, c in enumerate(_ICOLS)}
+        cols.update({c: fbuf[:, i].copy() for i, c in enumerate(_FCOLS)})
+        return cls(**cols, capacity=cap, recorded=count,
+                   dropped=max(count - cap, 0))
+
+    def __len__(self) -> int:
+        return int(self.it.shape[0])
+
+    def to_rows(self) -> list[dict]:
+        return [
+            {col: getattr(self, col)[i].item() for col in COLUMNS}
+            for i in range(len(self))
+        ]
+
+    def switch_iters(self) -> np.ndarray:
+        """Derive the (2,) switch-iteration vector from the tag column.
+
+        The monitor records a step to tag ``k`` at iteration ``s`` meaning
+        "iteration ``s`` is the first to RUN at tag ``k``" — so the first
+        row whose tag equals ``k`` carries exactly ``it == s``.  A slot is
+        -1 when the tag never appears; when the ring dropped rows and the
+        first *visible* row already runs at tag >= k the true switch may
+        predate the window (see :meth:`switch_visible`).
+        """
+        out = np.full((2,), -1, np.int64)
+        for slot, k in ((0, 2), (1, 3)):
+            hits = np.nonzero(self.tag == k)[0]
+            if hits.size:
+                out[slot] = int(self.it[hits[0]])
+        return out
+
+    def switch_visible(self, k: int) -> bool:
+        """True when the window provably contains the switch TO tag ``k``:
+        either no rows were dropped, or a row at tag < ``k`` precedes the
+        first tag-``k`` row inside the window."""
+        hits = np.nonzero(self.tag == k)[0]
+        if not hits.size:
+            return self.dropped == 0
+        if self.dropped == 0:
+            return True
+        return bool(np.any(self.tag[: hits[0]] < k))
+
+    def first_unhealthy(self) -> int:
+        """Iteration of the first row with health != ok (-1: none)."""
+        bad = np.nonzero(self.health != HEALTH_OK)[0]
+        return int(self.it[bad[0]]) if bad.size else -1
+
+    def summary(self) -> dict:
+        last = len(self) - 1
+        return {
+            "rows": len(self),
+            "recorded": self.recorded,
+            "dropped": self.dropped,
+            "first_it": int(self.it[0]) if len(self) else -1,
+            "last_it": int(self.it[last]) if len(self) else -1,
+            "last_relres": float(self.relres[last]) if len(self) else None,
+            "last_tag": int(self.tag[last]) if len(self) else 0,
+            "switch_iters": self.switch_iters().tolist(),
+            "first_unhealthy": self.first_unhealthy(),
+            "health_counts": {
+                health_name(code): int(n)
+                for code, n in zip(*np.unique(self.health,
+                                              return_counts=True))
+            } if len(self) else {},
+        }
+
+    def pretty(self, max_rows: int = 12) -> str:
+        """Human-readable table (head + tail when the log is long)."""
+        header = f"{'it':>6} {'tag':>3} {'health':>9} {'relres':>12}  a0/a1/a2"
+        lines = [header]
+        n = len(self)
+        idx = (list(range(n)) if n <= max_rows
+               else list(range(max_rows // 2)) + [None]
+               + list(range(n - max_rows // 2, n)))
+        for i in idx:
+            if i is None:
+                lines.append(f"{'...':>6}")
+                continue
+            lines.append(
+                f"{int(self.it[i]):>6} {int(self.tag[i]):>3} "
+                f"{health_name(self.health[i]):>9} "
+                f"{float(self.relres[i]):>12.3e}  "
+                f"{float(self.a0[i]):.3e}/{float(self.a1[i]):.3e}/"
+                f"{float(self.a2[i]):.3e}"
+            )
+        if self.dropped:
+            lines.append(f"({self.dropped} older rows dropped by the ring)")
+        return "\n".join(lines)
+
+
+def assert_consistent(log: FlightLog, res, *, is_recovered: bool = False):
+    """Assert the flight telemetry matches the solver's own report.
+
+    ``res`` is any result NamedTuple carrying ``iters`` / ``tag`` /
+    ``switch_iters`` / ``health`` / ``trip_iter``.  Applies to a
+    single-run result (``recover=False`` or a run with no recovery
+    restart); after a host-side recovery restart the buffer only covers
+    the final segment, so pass ``is_recovered=True`` to skip the
+    whole-trajectory checks.
+
+    Raises ``AssertionError`` with a description on any mismatch.
+    """
+    iters = int(np.asarray(res.iters))
+    if iters == 0:
+        assert len(log) == 0, (
+            f"flight: {len(log)} rows recorded for a 0-iteration solve"
+        )
+        return
+
+    assert len(log) > 0, "flight: no rows recorded for a non-trivial solve"
+    assert log.recorded >= len(log)
+
+    # Row indices: one row per iteration, 0-based, contiguous.
+    its = log.it.astype(np.int64)
+    assert np.all(np.diff(its) == 1), (
+        f"flight: iteration column not contiguous: {its[:8]}..."
+    )
+
+    if not is_recovered:
+        assert log.recorded == iters, (
+            f"flight: recorded {log.recorded} rows, solver ran {iters}"
+        )
+        assert int(its[-1]) == iters - 1, (
+            f"flight: last row it={int(its[-1])}, expected {iters - 1}"
+        )
+
+        # Switch consistency: first row at tag k sits exactly at the
+        # monitor's recorded switch iteration.
+        sw = np.asarray(res.switch_iters, dtype=np.int64)
+        derived = log.switch_iters()
+        for slot, k in ((0, 2), (1, 3)):
+            if not log.switch_visible(k):
+                continue  # ring dropped the switch row; nothing provable
+            if sw[slot] < 0:
+                # Monitor says "never switched to k" -- for k == 2 an
+                # init_tag >= 2 start legitimately shows tag-k rows from
+                # iteration 0 without a switch event.
+                if derived[slot] >= 0:
+                    assert int(its[0]) == derived[slot] and log.tag[0] >= k, (
+                        f"flight: tag {k} appears at it={derived[slot]} but "
+                        f"monitor never recorded the switch"
+                    )
+            else:
+                assert derived[slot] == sw[slot], (
+                    f"flight: first tag-{k} row at it={derived[slot]}, "
+                    f"monitor switch_iters[{slot}]={sw[slot]}"
+                )
+
+        # Trip consistency: the first unhealthy row is the guard's trip.
+        trip = int(np.asarray(res.trip_iter))
+        first_bad = log.first_unhealthy()
+        if trip >= 0 and int(np.asarray(res.health)) != HEALTH_OK:
+            assert first_bad == trip, (
+                f"flight: first unhealthy row at it={first_bad}, guard "
+                f"trip_iter={trip}"
+            )
+        if first_bad < 0 and log.dropped == 0:
+            assert trip < 0 or int(np.asarray(res.health)) == HEALTH_OK, (
+                f"flight: all rows healthy but trip_iter={trip}"
+            )
+
+    # Final tag: the last row carries the tag the final iteration RAN at;
+    # res.tag is the monitor's tag AFTER that iteration's update, so it is
+    # one step ahead iff the final iteration itself triggered a switch.
+    final_tag = int(np.asarray(res.tag))
+    last_tag = int(log.tag[-1])
+    sw = np.asarray(res.switch_iters, dtype=np.int64)
+    stepped_at_exit = bool(np.any(sw == int(np.asarray(res.iters))))
+    if not is_recovered:
+        expect = last_tag + (1 if stepped_at_exit else 0)
+        assert final_tag == expect, (
+            f"flight: last row tag={last_tag} (switch-at-exit="
+            f"{stepped_at_exit}), solver final tag={final_tag}"
+        )
+
+    # Monotone tags within the window, always (tags only step up).
+    assert np.all(np.diff(log.tag) >= 0), "flight: tag column decreased"

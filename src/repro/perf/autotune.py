@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops
+from repro.obs import trace as OT
 from repro.perf import timing, tunecache
 from repro.perf.plan import (
     DEFAULT_PLAN,
@@ -114,15 +115,18 @@ def tune(a, tag: int = 1, layout: str = "ell", nrhs: int = 1,
                     jnp.float32)
     sweep = []
     best = None
-    for cand in candidates(layout):
-        run = _runner(a, x, tag, layout, cand, interpret)
-        if run is None:
-            continue
-        _, sec = timing.measure(run, iters=iters, warmup=warmup)
-        row = {"plan": cand.to_dict(), "us": sec * 1e6}
-        sweep.append(row)
-        if best is None or row["us"] < best[1]["us"]:
-            best = (cand, row)
+    with OT.span("tune.sweep", key=key, layout=layout, tag=tag,
+                 nrhs=nrhs) as attrs:
+        for cand in candidates(layout):
+            run = _runner(a, x, tag, layout, cand, interpret)
+            if run is None:
+                continue
+            _, sec = timing.measure(run, iters=iters, warmup=warmup)
+            row = {"plan": cand.to_dict(), "us": sec * 1e6}
+            sweep.append(row)
+            if best is None or row["us"] < best[1]["us"]:
+                best = (cand, row)
+        attrs["candidates"] = len(sweep)
     tunecache.TUNE_STATS["sweeps"] += 1
     plan, row = best
     payload = {

@@ -16,7 +16,7 @@ import time
 
 import jax
 
-__all__ = ["measure", "best_seconds"]
+__all__ = ["measure", "measure_split", "best_seconds"]
 
 
 def measure(fn, *args, iters: int = 10, warmup: int = 2, **kwargs):
@@ -33,6 +33,32 @@ def measure(fn, *args, iters: int = 10, warmup: int = 2, **kwargs):
         out = jax.block_until_ready(fn(*args, **kwargs))
         best = min(best, time.perf_counter() - t0)
     return out, best
+
+
+def measure_split(fn, *args, iters: int = 10, warmup: int = 2, **kwargs):
+    """Like :func:`measure`, but also times the very first call separately.
+
+    Returns ``(last_output, first_seconds, best_seconds)``.  The first call
+    of a jitted ``fn`` pays trace + compile; steady-state calls replay the
+    executable.  ``first - best`` is therefore a cheap compile-time
+    estimate with no profiler dependency (clamp at 0: on a cache hit the
+    first call can land inside run-to-run noise).  Observability callers
+    (``benchmarks.common.timed``, ``run.py --obs``) record both sides as
+    registry metrics (DESIGN.md §16).
+    """
+    if iters < 1:
+        raise ValueError(f"iters must be >= 1, got {iters}")
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(fn(*args, **kwargs))
+    first = time.perf_counter() - t0
+    for _ in range(max(warmup - 1, 0)):
+        out = jax.block_until_ready(fn(*args, **kwargs))
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(fn(*args, **kwargs))
+        best = min(best, time.perf_counter() - t0)
+    return out, first, best
 
 
 def best_seconds(fn, *args, iters: int = 10, warmup: int = 2,

@@ -18,11 +18,19 @@ import os
 import tempfile
 import zlib
 
+from repro.obs import metrics as OM
+
 __all__ = ["TUNE_STATS", "cache_path", "lookup", "store", "host_entry",
            "store_host", "reset", "clear_memory"]
 
-TUNE_STATS = {"hits": 0, "misses": 0, "corrupt": 0, "sweeps": 0,
-              "stores": 0}
+# Dict-shaped registry view (DESIGN.md §16): historical ``TUNE_STATS[k]``
+# call sites and test assertions work unchanged, exposition goes through
+# ``obs.metrics.REGISTRY``.
+TUNE_STATS = OM.stats_view(
+    "repro_tune_cache_events_total",
+    ("hits", "misses", "corrupt", "sweeps", "stores"),
+    help="Tuned-plan store events by outcome.",
+)
 
 # In-memory image of the cache file: {"plans": {key: entry}, "host": entry}
 # where entry = {"payload": <jsonable>, "crc": int}.  Reloaded whenever the

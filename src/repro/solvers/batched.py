@@ -38,6 +38,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import precision as P
+from repro.obs import flight as OF
+from repro.obs import trace as OT
 from repro.robustness.guards import (
     DEFAULT_GUARDS,
     GuardParams,
@@ -76,6 +78,11 @@ class BatchedCGResult(NamedTuple):
     # tag-3 retry (launch.solver_serve), not an in-batch escalation.
     health: jnp.ndarray = HEALTH_OK    # (nrhs,) int32
     trip_iter: jnp.ndarray = -1        # (nrhs,) int32
+    # Observability (DESIGN.md §16): stacked per-column flight-recorder
+    # states (leading nrhs axis; None when recording is off).  Split with
+    # ``obs.flight.split_batched`` and decode each column with
+    # ``FlightLog.from_state``.
+    flight: object = None
 
 
 class BatchedIRResult(NamedTuple):
@@ -87,6 +94,9 @@ class BatchedIRResult(NamedTuple):
     history: list              # nrhs lists of outer residual trajectories
     # Per-column health codes, derived as in solvers.ir.IRResult.
     health: np.ndarray = None  # (nrhs,) int
+    # Observability (DESIGN.md §16): list of stacked per-correction flight
+    # states (one per inner batched solve), as in BatchedCGResult.flight.
+    flight: object = None
 
 
 def _maybe_sharded(apply_a, wire: str):
@@ -125,7 +135,7 @@ def _normalize_block(b, x0):
 
 
 def _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
-                         init_col, step_col, guards=None):
+                         init_col, step_col, guards=None, flight=None):
     """Shared batched while_loop: per-column monitors, masking, switches.
 
     ``init_col(b_j, x0_j, tag) -> dict`` builds one column's Krylov state
@@ -143,6 +153,11 @@ def _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
     a tripped column freezes exactly like a converged one.  Guards run
     AFTER the iteration ops on scalars those ops already produced, so the
     per-column bit-identity contract with single-RHS solves is untouched.
+
+    With ``flight`` (a ``FlightParams``), each column also carries its own
+    flight-recorder ring (DESIGN.md §16) -- same observation-after-update
+    discipline, recorder-on stays per-column bit-identical -- and the
+    result stacks the per-column states along a leading nrhs axis.
     """
     nrhs = b.shape[1]
     bnorms = []
@@ -156,6 +171,8 @@ def _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
         c.pop("denom", None)
         if guards is not None:
             c["g"] = guard_init(jnp.sqrt(jnp.abs(c["rr"])) / bn)
+        if flight is not None:
+            c["fl"] = OF.flight_init(flight, b.dtype)
         c.update(
             it=jnp.int32(0),
             mon=mon,
@@ -195,6 +212,20 @@ def _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
             mon1 = P.record(c["mon"], relres_new)
             mon2 = P.update_tag(mon1, params)
             sw = _record_switch(c["sw"], mon1, mon2, c["it"])
+            if flight is not None:
+                # Observation-only alpha/beta from the scalars the step
+                # already produced (rz-recurrence under PCG, rr under CG).
+                old = c["rz"] if "rz" in c else c["rr"]
+                new = stepped["rz"] if "rz" in stepped else stepped["rr"]
+                alpha = old / jnp.where(denom == 0, 1.0, denom)
+                beta = new / jnp.where(old == 0, 1.0, old)
+                g = stepped.get("g")
+                stepped["fl"] = OF.flight_record(
+                    c["fl"], it=c["it"], relres=relres_new,
+                    tag=c["mon"].tag,
+                    health=g["health"] if g is not None else None,
+                    a0=alpha, a1=beta, a2=denom,
+                )
             stepped.update(it=c["it"] + 1, mon=mon2, sw=sw)
             return stepped
 
@@ -240,6 +271,9 @@ def _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
         converged=converged,
         health=health,
         trip_iter=trip_iter,
+        flight=(jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                       *[c["fl"] for c in cols])
+                if flight is not None else None),
     )
 
 
@@ -247,9 +281,10 @@ def _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
 # Batched CG
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("maxiter", "params", "init_tag", "guards"))
+@partial(jax.jit, static_argnames=("maxiter", "params", "init_tag", "guards",
+                                   "flight"))
 def _solve_cg_batched_fused(a, b, x0, tol, maxiter, params, init_tag=1,
-                            guards=None):
+                            guards=None, flight=None):
     from repro.solvers.fused_cg import (fused_cg_step, fused_cg_step_g,
                                         gse_matvec)
 
@@ -259,7 +294,7 @@ def _solve_cg_batched_fused(a, b, x0, tol, maxiter, params, init_tag=1,
         return dict(x=xj, r=r0, p=r0, rr=rs)
 
     def step_col(c, tag):
-        if guards is None:
+        if guards is None and flight is None:
             x, r, p, rs = fused_cg_step(a, c["x"], c["r"], c["p"],
                                         c["rr"], tag)
             return dict(x=x, r=r, p=p, rr=rs)
@@ -268,13 +303,13 @@ def _solve_cg_batched_fused(a, b, x0, tol, maxiter, params, init_tag=1,
         return dict(x=x, r=r, p=p, rr=rs, denom=denom)
 
     return _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
-                                init_col, step_col, guards)
+                                init_col, step_col, guards, flight)
 
 
 @partial(jax.jit, static_argnames=("apply_a", "maxiter", "params", "init_tag",
-                                   "guards"))
+                                   "guards", "flight"))
 def _solve_cg_batched(apply_a, b, x0, tol, maxiter, params, init_tag=1,
-                      guards=None):
+                      guards=None, flight=None):
     def init_col(bj, xj, tag):
         r0 = bj - apply_a(xj, tag)
         rs = jnp.vdot(r0, r0)
@@ -291,12 +326,12 @@ def _solve_cg_batched(apply_a, b, x0, tol, maxiter, params, init_tag=1,
         beta = rs_new / jnp.where(c["rr"] == 0, 1.0, c["rr"])
         p = r + beta * c["p"]
         out = dict(x=x, r=r, p=p, rr=rs_new)
-        if guards is not None:
+        if guards is not None or flight is not None:
             out["denom"] = denom
         return out
 
     return _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
-                                init_col, step_col, guards)
+                                init_col, step_col, guards, flight)
 
 
 def solve_cg_batched(
@@ -308,6 +343,7 @@ def solve_cg_batched(
     params: P.MonitorParams | None = None,
     wire: str = "exact",
     guards: GuardParams | None = DEFAULT_GUARDS,
+    flight: OF.FlightParams | None = None,
 ) -> BatchedCGResult:
     """Stepped CG over an (n, nrhs) right-hand-side block.
 
@@ -340,20 +376,24 @@ def solve_cg_batched(
         params = P.MonitorParams.for_cg()
     tol_ = jnp.asarray(tol, b.dtype)
     apply_a = _maybe_sharded(apply_a, wire)
-    if isinstance(apply_a, (GSECSR, GSESellC)):
-        return _solve_cg_batched_fused(apply_a, b, x0, tol_, maxiter, params,
-                                       guards=guards)
-    return _solve_cg_batched(apply_a, b, x0, tol_, maxiter, params,
-                             guards=guards)
+    with OT.span("solve.cg_batched", n=int(b.shape[0]),
+                 nrhs=int(b.shape[1]), tol=float(tol)):
+        if isinstance(apply_a, (GSECSR, GSESellC)):
+            return _solve_cg_batched_fused(apply_a, b, x0, tol_, maxiter,
+                                           params, guards=guards,
+                                           flight=flight)
+        return _solve_cg_batched(apply_a, b, x0, tol_, maxiter, params,
+                                 guards=guards, flight=flight)
 
 
 # ---------------------------------------------------------------------------
 # Batched PCG
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("maxiter", "params", "init_tag", "guards"))
+@partial(jax.jit, static_argnames=("maxiter", "params", "init_tag", "guards",
+                                   "flight"))
 def _solve_pcg_batched_fused(a, m, b, x0, tol, maxiter, params, init_tag=1,
-                             guards=None):
+                             guards=None, flight=None):
     from repro.solvers.fused_cg import (fused_pcg_step, fused_pcg_step_g,
                                         gse_matvec)
 
@@ -364,7 +404,7 @@ def _solve_pcg_batched_fused(a, m, b, x0, tol, maxiter, params, init_tag=1,
                     rr=jnp.vdot(r0, r0))
 
     def step_col(c, tag):
-        if guards is None:
+        if guards is None and flight is None:
             x, r, p, rz, rr = fused_pcg_step(
                 a, m, c["x"], c["r"], c["p"], c["rz"], tag
             )
@@ -375,13 +415,13 @@ def _solve_pcg_batched_fused(a, m, b, x0, tol, maxiter, params, init_tag=1,
         return dict(x=x, r=r, p=p, rz=rz, rr=rr, denom=denom)
 
     return _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
-                                init_col, step_col, guards)
+                                init_col, step_col, guards, flight)
 
 
 @partial(jax.jit, static_argnames=("apply_a", "apply_m", "maxiter", "params",
-                                   "init_tag", "guards"))
+                                   "init_tag", "guards", "flight"))
 def _solve_pcg_batched(apply_a, apply_m, b, x0, tol, maxiter, params,
-                       init_tag=1, guards=None):
+                       init_tag=1, guards=None, flight=None):
     def init_col(bj, xj, tag):
         r0 = bj - apply_a(xj, tag)
         z0 = apply_m(r0, tag)
@@ -401,12 +441,12 @@ def _solve_pcg_batched(apply_a, apply_m, b, x0, tol, maxiter, params,
         beta = rz_new / jnp.where(c["rz"] == 0, 1.0, c["rz"])
         p = z + beta * c["p"]
         out = dict(x=x, r=r, p=p, rz=rz_new, rr=rr_new)
-        if guards is not None:
+        if guards is not None or flight is not None:
             out["denom"] = denom
         return out
 
     return _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
-                                init_col, step_col, guards)
+                                init_col, step_col, guards, flight)
 
 
 def solve_pcg_batched(
@@ -419,6 +459,7 @@ def solve_pcg_batched(
     params: P.MonitorParams | None = None,
     wire: str = "exact",
     guards: GuardParams | None = DEFAULT_GUARDS,
+    flight: OF.FlightParams | None = None,
 ) -> BatchedCGResult:
     """Stepped preconditioned CG over an (n, nrhs) block.
 
@@ -436,17 +477,20 @@ def solve_pcg_batched(
         params = P.MonitorParams.for_cg()
     tol_ = jnp.asarray(tol, b.dtype)
     apply_a = _maybe_sharded(apply_a, wire)
-    if isinstance(apply_a, (GSECSR, GSESellC)) and hasattr(precond,
-                                                           "apply_at"):
-        return _solve_pcg_batched_fused(apply_a, precond, b, x0, tol_,
-                                        maxiter, params, guards=guards)
-    apply_m = precond if callable(precond) else precond.apply
-    if isinstance(apply_a, (GSECSR, GSESellC)):
-        from repro.solvers.cg import _gsecsr_operator
+    with OT.span("solve.pcg_batched", n=int(b.shape[0]),
+                 nrhs=int(b.shape[1]), tol=float(tol)):
+        if isinstance(apply_a, (GSECSR, GSESellC)) and hasattr(precond,
+                                                               "apply_at"):
+            return _solve_pcg_batched_fused(apply_a, precond, b, x0, tol_,
+                                            maxiter, params, guards=guards,
+                                            flight=flight)
+        apply_m = precond if callable(precond) else precond.apply
+        if isinstance(apply_a, (GSECSR, GSESellC)):
+            from repro.solvers.cg import _gsecsr_operator
 
-        apply_a = _gsecsr_operator(apply_a)
-    return _solve_pcg_batched(apply_a, apply_m, b, x0, tol_, maxiter, params,
-                              guards=guards)
+            apply_a = _gsecsr_operator(apply_a)
+        return _solve_pcg_batched(apply_a, apply_m, b, x0, tol_, maxiter,
+                                  params, guards=guards, flight=flight)
 
 
 # ---------------------------------------------------------------------------
@@ -464,6 +508,7 @@ def solve_ir_batched(
     precond=None,
     wire: str = "exact",
     guards: GuardParams | None = DEFAULT_GUARDS,
+    flight: OF.FlightParams | None = None,
 ) -> BatchedIRResult:
     """Batched stepped iterative refinement (the ``solve_ir`` outer loop
     over an (n, nrhs) block, inner solves batched).
@@ -517,6 +562,7 @@ def solve_ir_batched(
     r = b - apply3_block(x)
     relres = col_norms(r) / bnorms
     history = [[float(v)] for v in relres]
+    flights = [] if flight is not None else None
     active = (relres > tol) & np.isfinite(relres) & (outer < max_outer)
     while active.any():
         mask = jnp.asarray(active)
@@ -529,11 +575,13 @@ def solve_ir_batched(
         if precond is not None:
             res = solve_pcg_batched(apply_a, r_in, precond, tol=inner_tol,
                                     maxiter=inner_maxiter, params=params,
-                                    guards=guards)
+                                    guards=guards, flight=flight)
         else:
             res = solve_cg_batched(apply_a, r_in, tol=inner_tol,
                                    maxiter=inner_maxiter, params=params,
-                                   guards=guards)
+                                   guards=guards, flight=flight)
+        if flights is not None and res.flight is not None:
+            flights.append(res.flight)
         inner_health[active] = np.asarray(res.health)[active]
         # A non-finite correction column is never folded into x -- that
         # column deactivates carrying its inner health code.
@@ -567,6 +615,7 @@ def solve_ir_batched(
         converged=converged,
         history=[np.asarray(h) for h in history],
         health=health,
+        flight=flights,
     )
 
 

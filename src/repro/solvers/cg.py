@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import precision as P
+from repro.obs import flight as OF
+from repro.obs import trace as OT
 from repro.robustness.guards import (
     DEFAULT_GUARDS,
     GuardParams,
@@ -96,6 +98,9 @@ class CGResult(NamedTuple):
     # "tripped, then recovered via tag escalation").
     health: jnp.ndarray = HEALTH_OK
     trip_iter: jnp.ndarray = -1
+    # Observability (DESIGN.md §16): raw flight-recorder ring state (None
+    # when recording is off); decode with ``obs.flight.FlightLog.from_state``.
+    flight: object = None
 
 
 def _guarded_init(state, relres0, guards):
@@ -141,10 +146,39 @@ def _guarded_result(out, relres, tol, guards, make):
     return res, ckpt
 
 
+def _flight_init(state, flight, dtype):
+    """Attach a flight-recorder ring buffer to a loop state dict."""
+    if flight is not None:
+        state["fl"] = OF.flight_init(flight, dtype)
+    return state
+
+
+def _flight_body(s, out, relres_new, flight, a0=None, a1=None, a2=None):
+    """Append this iteration's flight row (pure observation, after the
+    guard ran so the row carries the guard's verdict on this iteration).
+
+    Same discipline as ``_guarded_body``: nothing here feeds back into the
+    solver recurrence, so recorder-on stays bit-identical to recorder-off.
+    """
+    if flight is None:
+        return out
+    g = out.get("g")
+    out["fl"] = OF.flight_record(
+        s["fl"],
+        it=s["it"],
+        relres=relres_new,
+        tag=s["mon"].tag,
+        health=g["health"] if g is not None else None,
+        a0=a0, a1=a1, a2=a2,
+    )
+    return out
+
+
 @partial(jax.jit, static_argnames=("apply_a", "maxiter", "params", "init_tag",
-                                   "guards", "return_ckpt"))
+                                   "guards", "flight", "return_ckpt"))
 def _solve_cg(apply_a, b, x0, tol, maxiter, params: P.MonitorParams,
               init_tag: int = 1, guards: GuardParams | None = None,
+              flight: OF.FlightParams | None = None,
               return_ckpt: bool = False):
     dtype = b.dtype
     bnorm = jnp.linalg.norm(b)
@@ -166,6 +200,7 @@ def _solve_cg(apply_a, b, x0, tol, maxiter, params: P.MonitorParams,
         return jnp.sqrt(jnp.abs(s["rs"])) / bnorm
 
     state = _guarded_init(state, relres(state), guards)
+    state = _flight_init(state, flight, dtype)
 
     def cond(s):
         return _guarded_cond(s, (relres(s) > tol) & (s["it"] < maxiter),
@@ -187,8 +222,10 @@ def _solve_cg(apply_a, b, x0, tol, maxiter, params: P.MonitorParams,
         out = dict(
             x=x, r=r, p=p, rs=rs_new, it=s["it"] + 1, mon=mon2, switches=switches
         )
-        return _guarded_body(s, out, jnp.sqrt(jnp.abs(rs_new)) / bnorm,
-                             guards, denom=denom)
+        out = _guarded_body(s, out, jnp.sqrt(jnp.abs(rs_new)) / bnorm,
+                            guards, denom=denom)
+        return _flight_body(s, out, jnp.sqrt(jnp.abs(rs_new)) / bnorm,
+                            flight, a0=alpha, a1=beta, a2=denom)
 
     out = jax.lax.while_loop(cond, body, state)
     res, ckpt = _guarded_result(
@@ -202,6 +239,7 @@ def _solve_cg(apply_a, b, x0, tol, maxiter, params: P.MonitorParams,
             converged=conv,
             health=health,
             trip_iter=trip,
+            flight=out.get("fl"),
         ),
     )
     return (res, ckpt) if return_ckpt else res
@@ -221,18 +259,19 @@ def _record_switch(switches, mon, mon2, it):
 
 
 @partial(jax.jit, static_argnames=("maxiter", "params", "init_tag", "guards",
-                                   "return_ckpt"))
+                                   "flight", "return_ckpt"))
 def _solve_cg_fused(a, b, x0, tol, maxiter, params: P.MonitorParams,
                     init_tag: int = 1, guards: GuardParams | None = None,
+                    flight: OF.FlightParams | None = None,
                     return_ckpt: bool = False):
     """Fused-path CG over a ``GSECSR`` operand (DESIGN.md §4).
 
     Same trajectory as ``_solve_cg`` with the GSE operator -- each
     iteration is one ``fused_cg_step``: the values are decoded once at the
     monitor's current tag and the dots/axpys/residual norm ride the same
-    sweep as the SpMV.  With guards the step also surfaces the curvature
-    ``p.Ap`` it already computed (``fused_cg_step_g``) -- the update
-    arithmetic is unchanged either way.
+    sweep as the SpMV.  With guards or the flight recorder the step also
+    surfaces the curvature ``p.Ap`` it already computed
+    (``fused_cg_step_g``) -- the update arithmetic is unchanged either way.
     """
     from repro.solvers.fused_cg import fused_cg_step, fused_cg_step_g, gse_matvec
 
@@ -256,13 +295,14 @@ def _solve_cg_fused(a, b, x0, tol, maxiter, params: P.MonitorParams,
         return jnp.sqrt(jnp.abs(s["rs"])) / bnorm
 
     state = _guarded_init(state, relres(state), guards)
+    state = _flight_init(state, flight, dtype)
 
     def cond(s):
         return _guarded_cond(s, (relres(s) > tol) & (s["it"] < maxiter),
                              guards)
 
     def body(s):
-        if guards is None:
+        if guards is None and flight is None:
             x, r, p, rs_new = fused_cg_step(
                 a, s["x"], s["r"], s["p"], s["rs"], s["mon"].tag
             )
@@ -277,8 +317,16 @@ def _solve_cg_fused(a, b, x0, tol, maxiter, params: P.MonitorParams,
         out = dict(
             x=x, r=r, p=p, rs=rs_new, it=s["it"] + 1, mon=mon2, switches=switches
         )
-        return _guarded_body(s, out, jnp.sqrt(jnp.abs(rs_new)) / bnorm,
-                             guards, denom=denom)
+        out = _guarded_body(s, out, jnp.sqrt(jnp.abs(rs_new)) / bnorm,
+                            guards, denom=denom)
+        if flight is not None:
+            # Observation-only recomputation of the step scalars from the
+            # surfaced curvature (the fused step consumed them internally).
+            alpha = s["rs"] / jnp.where(denom == 0, 1.0, denom)
+            beta = rs_new / jnp.where(s["rs"] == 0, 1.0, s["rs"])
+            out = _flight_body(s, out, jnp.sqrt(jnp.abs(rs_new)) / bnorm,
+                               flight, a0=alpha, a1=beta, a2=denom)
+        return out
 
     out = jax.lax.while_loop(cond, body, state)
     res, ckpt = _guarded_result(
@@ -292,15 +340,18 @@ def _solve_cg_fused(a, b, x0, tol, maxiter, params: P.MonitorParams,
             converged=conv,
             health=health,
             trip_iter=trip,
+            flight=out.get("fl"),
         ),
     )
     return (res, ckpt) if return_ckpt else res
 
 
 @partial(jax.jit, static_argnames=("apply_a", "apply_m", "maxiter", "params",
-                                   "init_tag", "guards", "return_ckpt"))
+                                   "init_tag", "guards", "flight",
+                                   "return_ckpt"))
 def _solve_pcg(apply_a, apply_m, b, x0, tol, maxiter, params: P.MonitorParams,
                init_tag: int = 1, guards: GuardParams | None = None,
+               flight: OF.FlightParams | None = None,
                return_ckpt: bool = False):
     """Preconditioned CG: ``z = M^{-1} r`` at the monitor's current tag.
 
@@ -330,6 +381,7 @@ def _solve_pcg(apply_a, apply_m, b, x0, tol, maxiter, params: P.MonitorParams,
         return jnp.sqrt(jnp.abs(s["rr"])) / bnorm
 
     state = _guarded_init(state, relres(state), guards)
+    state = _flight_init(state, flight, dtype)
 
     def cond(s):
         return _guarded_cond(s, (relres(s) > tol) & (s["it"] < maxiter),
@@ -355,9 +407,11 @@ def _solve_pcg(apply_a, apply_m, b, x0, tol, maxiter, params: P.MonitorParams,
             switches=switches,
         )
         # z.r < 0 breaks PCG's M-SPD contract: an extra breakdown predicate.
-        return _guarded_body(s, out, jnp.sqrt(jnp.abs(rr_new)) / bnorm,
-                             guards, denom=denom, breakdown=rz_new < 0,
-                             finite_aux=(rz_new,))
+        out = _guarded_body(s, out, jnp.sqrt(jnp.abs(rr_new)) / bnorm,
+                            guards, denom=denom, breakdown=rz_new < 0,
+                            finite_aux=(rz_new,))
+        return _flight_body(s, out, jnp.sqrt(jnp.abs(rr_new)) / bnorm,
+                            flight, a0=alpha, a1=beta, a2=denom)
 
     out = jax.lax.while_loop(cond, body, state)
     res, ckpt = _guarded_result(
@@ -371,15 +425,17 @@ def _solve_pcg(apply_a, apply_m, b, x0, tol, maxiter, params: P.MonitorParams,
             converged=conv,
             health=health,
             trip_iter=trip,
+            flight=out.get("fl"),
         ),
     )
     return (res, ckpt) if return_ckpt else res
 
 
 @partial(jax.jit, static_argnames=("maxiter", "params", "init_tag", "guards",
-                                   "return_ckpt"))
+                                   "flight", "return_ckpt"))
 def _solve_pcg_fused(a, m, b, x0, tol, maxiter, params: P.MonitorParams,
                      init_tag: int = 1, guards: GuardParams | None = None,
+                     flight: OF.FlightParams | None = None,
                      return_ckpt: bool = False):
     """Fused-path PCG over a ``GSECSR`` operand and a pytree preconditioner.
 
@@ -412,13 +468,14 @@ def _solve_pcg_fused(a, m, b, x0, tol, maxiter, params: P.MonitorParams,
         return jnp.sqrt(jnp.abs(s["rr"])) / bnorm
 
     state = _guarded_init(state, relres(state), guards)
+    state = _flight_init(state, flight, dtype)
 
     def cond(s):
         return _guarded_cond(s, (relres(s) > tol) & (s["it"] < maxiter),
                              guards)
 
     def body(s):
-        if guards is None:
+        if guards is None and flight is None:
             x, r, p, rz_new, rr_new = fused_pcg_step(
                 a, m, s["x"], s["r"], s["p"], s["rz"], s["mon"].tag
             )
@@ -434,9 +491,15 @@ def _solve_pcg_fused(a, m, b, x0, tol, maxiter, params: P.MonitorParams,
             x=x, r=r, p=p, rz=rz_new, rr=rr_new, it=s["it"] + 1, mon=mon2,
             switches=switches,
         )
-        return _guarded_body(s, out, jnp.sqrt(jnp.abs(rr_new)) / bnorm,
-                             guards, denom=denom, breakdown=rz_new < 0,
-                             finite_aux=(rz_new,))
+        out = _guarded_body(s, out, jnp.sqrt(jnp.abs(rr_new)) / bnorm,
+                            guards, denom=denom, breakdown=rz_new < 0,
+                            finite_aux=(rz_new,))
+        if flight is not None:
+            alpha = s["rz"] / jnp.where(denom == 0, 1.0, denom)
+            beta = rz_new / jnp.where(s["rz"] == 0, 1.0, s["rz"])
+            out = _flight_body(s, out, jnp.sqrt(jnp.abs(rr_new)) / bnorm,
+                               flight, a0=alpha, a1=beta, a2=denom)
+        return out
 
     out = jax.lax.while_loop(cond, body, state)
     res, ckpt = _guarded_result(
@@ -450,6 +513,7 @@ def _solve_pcg_fused(a, m, b, x0, tol, maxiter, params: P.MonitorParams,
             converged=conv,
             health=health,
             trip_iter=trip,
+            flight=out.get("fl"),
         ),
     )
     return (res, ckpt) if return_ckpt else res
@@ -479,6 +543,9 @@ def _finish_with_correction(res, b, tol, maxiter, apply3, resume):
         health=res2.health,
         trip_iter=jnp.where(res2.trip_iter >= 0,
                             res2.trip_iter + res.iters, res.trip_iter),
+        # The resumed segment's recording (its `it` restarts at 0); fall
+        # back to the first run's when the resume didn't record.
+        flight=res2.flight if res2.flight is not None else res.flight,
     )
 
 
@@ -510,6 +577,7 @@ def solve_pcg(
     guards: GuardParams | None = DEFAULT_GUARDS,
     recover: bool = True,
     init_tag: int = 1,
+    flight: OF.FlightParams | None = None,
 ) -> CGResult:
     """Preconditioned CG for SPD systems with stepped mixed precision.
 
@@ -533,6 +601,12 @@ def solve_pcg(
     tag (DESIGN.md §14).  ``init_tag`` starts the monitor above tag 1
     (e.g. 3 = the exact path -- the serving layer's fallback).
 
+    ``flight`` (a :class:`repro.obs.FlightParams`; default off) carries a
+    device-side per-iteration flight recorder through the loop, returned
+    raw on ``CGResult.flight`` -- decode with
+    ``obs.flight.FlightLog.from_state``.  Bit-identical trajectories
+    either way (DESIGN.md §16).
+
     ``b``/``x0`` may be ``(n,)`` or ``(n, 1)``; the solution comes back in
     ``b``'s layout.
     """
@@ -545,7 +619,7 @@ def solve_pcg(
                                  maxiter=maxiter, params=params, wire=wire,
                                  final_correction=final_correction,
                                  guards=guards, recover=recover,
-                                 init_tag=init_tag)
+                                 init_tag=init_tag, flight=flight)
     b, x0, orig_shape = _normalize_b_x0(b, x0)
     if x0 is None:
         x0 = jnp.zeros_like(b)
@@ -558,7 +632,8 @@ def solve_pcg(
         def run(x_start, budget, tag):
             return _solve_pcg_fused(apply_a, precond, b, x_start, tol_,
                                     budget, params, init_tag=tag,
-                                    guards=guards, return_ckpt=True)
+                                    guards=guards, flight=flight,
+                                    return_ckpt=True)
     else:
         apply_m = precond if callable(precond) else precond.apply
         if isinstance(apply_a, (GSECSR, GSESellC)):
@@ -567,10 +642,12 @@ def solve_pcg(
         def run(x_start, budget, tag):
             return _solve_pcg(apply_a, apply_m, b, x_start, tol_, budget,
                               params, init_tag=tag, guards=guards,
-                              return_ckpt=True)
+                              flight=flight, return_ckpt=True)
 
-    res = run_with_recovery(run, x0, maxiter, init_tag=init_tag,
-                            recover=recover and guards is not None)
+    with OT.span("solve.pcg", n=int(b.shape[0]), tol=float(tol),
+                 init_tag=init_tag, fused=fused):
+        res = run_with_recovery(run, x0, maxiter, init_tag=init_tag,
+                                recover=recover and guards is not None)
     if not final_correction:
         return _restore_shape(res, orig_shape)
     apply3_op = _gsecsr_operator(apply_a) if fused else apply_a
@@ -599,6 +676,7 @@ def solve_cg(
     guards: GuardParams | None = DEFAULT_GUARDS,
     recover: bool = True,
     init_tag: int = 1,
+    flight: OF.FlightParams | None = None,
 ) -> CGResult:
     """CG for SPD systems.  ``apply_a(x, tag)`` is the (possibly multi-
     precision) operator; fixed-precision baselines ignore ``tag``.
@@ -617,9 +695,9 @@ def solve_cg(
     verifies the tag-3 residual after convergence and, if needed, resumes
     at full precision until the TRUE residual meets ``tol``.
 
-    ``guards``/``recover``/``init_tag``: see :func:`solve_pcg` -- in-loop
-    guardrails plus checkpoint-rollback tag-escalation recovery
-    (DESIGN.md §14).
+    ``guards``/``recover``/``init_tag``/``flight``: see :func:`solve_pcg`
+    -- in-loop guardrails plus checkpoint-rollback tag-escalation recovery
+    (DESIGN.md §14) and the per-iteration flight recorder (DESIGN.md §16).
 
     ``b``/``x0`` may be ``(n,)`` or ``(n, 1)``; the solution comes back in
     ``b``'s layout.
@@ -633,7 +711,7 @@ def solve_cg(
                                 params=params, wire=wire,
                                 final_correction=final_correction,
                                 guards=guards, recover=recover,
-                                init_tag=init_tag)
+                                init_tag=init_tag, flight=flight)
     b, x0, orig_shape = _normalize_b_x0(b, x0)
     if x0 is None:
         x0 = jnp.zeros_like(b)
@@ -645,10 +723,13 @@ def solve_cg(
 
     def run(x_start, budget, tag):
         return solve(apply_a, b, x_start, tol_, budget, params,
-                     init_tag=tag, guards=guards, return_ckpt=True)
+                     init_tag=tag, guards=guards, flight=flight,
+                     return_ckpt=True)
 
-    res = run_with_recovery(run, x0, maxiter, init_tag=init_tag,
-                            recover=recover and guards is not None)
+    with OT.span("solve.cg", n=int(b.shape[0]), tol=float(tol),
+                 init_tag=init_tag, fused=fused):
+        res = run_with_recovery(run, x0, maxiter, init_tag=init_tag,
+                                recover=recover and guards is not None)
     if not final_correction:
         return _restore_shape(res, orig_shape)
     apply3_op = _gsecsr_operator(apply_a) if fused else apply_a

@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import precision as P
+from repro.obs import flight as OF
+from repro.obs import trace as OT
 from repro.robustness.guards import (
     DEFAULT_GUARDS,
     GuardParams,
@@ -40,6 +42,10 @@ class GMRESResult(NamedTuple):
     # and first guard-trip inner iteration (-1: never).
     health: jnp.ndarray = HEALTH_OK
     trip_iter: jnp.ndarray = -1
+    # Observability (DESIGN.md §16): raw flight-recorder ring state (None
+    # when recording is off); rows are inner iterations with a0 = the
+    # Givens magnitude d, a1 = the Arnoldi subdiagonal H[j+1, j].
+    flight: object = None
 
 
 def _givens(a, b):
@@ -65,11 +71,12 @@ def _givens(a, b):
 
 @partial(jax.jit, static_argnames=("apply_a", "apply_m", "restart", "maxiter",
                                    "params", "init_tag", "return_monitor",
-                                   "guards", "return_ckpt"))
+                                   "guards", "flight", "return_ckpt"))
 def _solve_gmres(apply_a, b, x0, tol, restart, maxiter,
                  params: P.MonitorParams, init_tag: int = 1, apply_m=None,
                  return_monitor: bool = False,
                  guards: GuardParams | None = None,
+                 flight: OF.FlightParams | None = None,
                  return_ckpt: bool = False):
     """``apply_m`` (optional) right-preconditions: Arnoldi runs on
     ``A M^{-1}`` and the Krylov correction is mapped back through
@@ -91,7 +98,7 @@ def _solve_gmres(apply_a, b, x0, tol, restart, maxiter,
     bnorm = jnp.where(bnorm == 0, 1.0, bnorm)
     abstol = tol * bnorm
 
-    def cycle(x, it0, mon, switches, gd, ckpt):
+    def cycle(x, it0, mon, switches, gd, ckpt, fs):
         r = b - apply_a(x, mon.tag)
         beta = jnp.linalg.norm(r)
         if guards is not None:
@@ -167,24 +174,38 @@ def _solve_gmres(apply_a, b, x0, tol, restart, maxiter,
             mon2 = P.update_tag(mon1, params)
             switches = _record_switch(switches, mon1, mon2, it0 + j)
             out = (j + 1, V, H, cs, sn, g, resid, mon2, switches)
+            gd_new = None
             if guards is not None:
                 # Unhappy breakdown: the Krylov space closed (hj1 == 0)
                 # with the residual still above tolerance.  (hj1 == 0 AND
                 # resid <= abstol is the HAPPY breakdown -- converged.)
-                out = out + (guard_step(
+                gd_new = guard_step(
                     c[9], it0 + j, resid / bnorm, guards,
                     breakdown=(hj1 == 0) & (resid > abstol),
                     finite_aux=(hj1,),
+                )
+                out = out + (gd_new,)
+            if flight is not None:
+                # Observation only (DESIGN.md §16): the flight state is the
+                # LAST carry element, after the optional guard state.
+                out = out + (OF.flight_record(
+                    c[-1], it=it0 + j, relres=resid / bnorm, tag=mon.tag,
+                    health=gd_new["health"] if gd_new is not None else None,
+                    a0=d, a1=hj1,
                 ),)
             return out
 
         carry = (jnp.int32(0), V, H, cs, sn, g, beta, mon, switches)
         if guards is not None:
             carry = carry + (gd,)
+        if flight is not None:
+            carry = carry + (fs,)
         outc = jax.lax.while_loop(inner_cond, inner_body, carry)
         j, V, H, cs, sn, g, resid, mon, switches = outc[:9]
         if guards is not None:
             gd = outc[9]
+        if flight is not None:
+            fs = outc[-1]
 
         # Back substitution on the leading j x j triangle (padded to full
         # size with identity rows so a single static solve works).
@@ -200,11 +221,14 @@ def _solve_gmres(apply_a, b, x0, tol, restart, maxiter,
         if apply_m is not None:  # x = x0 + M^{-1} (V y), right precond
             u = apply_m(u, mon.tag)
         x_new = x + u
-        if guards is None:
-            return x_new, it0 + j, mon, switches, resid / bnorm
-        fin = jnp.isfinite(jnp.vdot(x_new, x_new))
-        ckpt = jnp.where((gd["health"] == HEALTH_OK) & fin, x_new, ckpt)
-        return x_new, it0 + j, mon, switches, resid / bnorm, gd, ckpt
+        out = (x_new, it0 + j, mon, switches, resid / bnorm)
+        if guards is not None:
+            fin = jnp.isfinite(jnp.vdot(x_new, x_new))
+            ckpt = jnp.where((gd["health"] == HEALTH_OK) & fin, x_new, ckpt)
+            out = out + (gd, ckpt)
+        if flight is not None:
+            out = out + (fs,)
+        return out
 
     def outer_cond(s):
         ok = (s[4] > tol) & (s[1] < maxiter)
@@ -213,11 +237,11 @@ def _solve_gmres(apply_a, b, x0, tol, restart, maxiter,
         return ok
 
     def outer_body(s):
-        if guards is None:
-            x, it, mon, switches, _ = s
-            return cycle(x, it, mon, switches, None, None)
-        x, it, mon, switches, _, gd, ckpt = s
-        return cycle(x, it, mon, switches, gd, ckpt)
+        x, it, mon, switches = s[:4]
+        gd = s[5] if guards is not None else None
+        ckpt = s[6] if guards is not None else None
+        fs = s[-1] if flight is not None else None
+        return cycle(x, it, mon, switches, gd, ckpt, fs)
 
     mon0 = P.init(params, dtype=dtype, tag=init_tag)
     r0 = b - apply_a(x0, mon0.tag)
@@ -225,6 +249,8 @@ def _solve_gmres(apply_a, b, x0, tol, restart, maxiter,
     state = (x0, jnp.int32(0), mon0, jnp.full((2,), -1, jnp.int32), relres0)
     if guards is not None:
         state = state + (guard_init(relres0), x0)
+    if flight is not None:
+        state = state + (OF.flight_init(flight, dtype),)
     outs = jax.lax.while_loop(outer_cond, outer_body, state)
     x, it, mon, switches, relres = outs[:5]
     gd = outs[5] if guards is not None else None
@@ -241,6 +267,7 @@ def _solve_gmres(apply_a, b, x0, tol, restart, maxiter,
         converged=conv,
         health=health,
         trip_iter=trip,
+        flight=outs[-1] if flight is not None else None,
     )
     if return_monitor:  # debug/test hook: expose the residual window
         return res, mon
@@ -262,6 +289,7 @@ def solve_gmres(
     guards: GuardParams | None = DEFAULT_GUARDS,
     recover: bool = True,
     init_tag: int = 1,
+    flight: OF.FlightParams | None = None,
 ) -> GMRESResult:
     """Restarted GMRES; ``apply_a(x, tag)`` and ``final_correction`` as in
     :func:`repro.solvers.cg.solve_cg`.
@@ -294,10 +322,12 @@ def solve_gmres(
     def run(x_start, budget, tag):
         return _solve_gmres(apply_a, b, x_start, tol_, restart, budget,
                             params, init_tag=tag, apply_m=apply_m,
-                            guards=guards, return_ckpt=True)
+                            guards=guards, flight=flight, return_ckpt=True)
 
-    res = run_with_recovery(run, x0, maxiter, init_tag=init_tag,
-                            recover=recover and guards is not None)
+    with OT.span("solve.gmres", n=int(b.shape[0]), tol=float(tol),
+                 restart=restart, init_tag=init_tag):
+        res = run_with_recovery(run, x0, maxiter, init_tag=init_tag,
+                                recover=recover and guards is not None)
     if not final_correction:
         return _restore_shape(res, orig_shape)
     from repro.solvers.cg import _finish_with_correction

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import precision as P
+from repro.obs import flight as OF
+from repro.obs import trace as OT
 from repro.robustness.guards import (
     DEFAULT_GUARDS,
     GuardParams,
@@ -53,6 +55,10 @@ class IRResult(NamedTuple):
     # tag-3 residual itself went non-finite, or HEALTH_STALLED on plain
     # max_outer exhaustion.
     health: int = HEALTH_OK
+    # Observability (DESIGN.md §16): list of per-correction flight-recorder
+    # states (one per inner solve, in outer-iteration order) when a
+    # ``flight`` was requested; decode each with ``FlightLog.from_state``.
+    flight: object = None
 
 
 def solve_ir(
@@ -68,6 +74,7 @@ def solve_ir(
     restart: int = 30,
     wire: str = "exact",
     guards: GuardParams | None = DEFAULT_GUARDS,
+    flight: OF.FlightParams | None = None,
 ) -> IRResult:
     """Iterative refinement with a stepped inner solver.
 
@@ -121,31 +128,36 @@ def solve_ir(
     relres = float(jnp.linalg.norm(r)) / bnorm
     history = [relres]
     inner_health = HEALTH_OK
-    while relres > tol and np.isfinite(relres) and outer < max_outer:
-        if inner == "cg":
-            if precond is not None:
-                res = solve_pcg(apply_a, r, precond, tol=inner_tol,
-                                maxiter=inner_maxiter, params=params,
-                                guards=guards)
+    flights = [] if flight is not None else None
+    with OT.span("solve.ir", n=int(b.shape[0]), tol=float(tol), inner=inner):
+        while relres > tol and np.isfinite(relres) and outer < max_outer:
+            if inner == "cg":
+                if precond is not None:
+                    res = solve_pcg(apply_a, r, precond, tol=inner_tol,
+                                    maxiter=inner_maxiter, params=params,
+                                    guards=guards, flight=flight)
+                else:
+                    res = solve_cg(apply_a, r, tol=inner_tol,
+                                   maxiter=inner_maxiter, params=params,
+                                   guards=guards, flight=flight)
             else:
-                res = solve_cg(apply_a, r, tol=inner_tol,
-                               maxiter=inner_maxiter, params=params,
-                               guards=guards)
-        else:
-            res = solve_gmres(apply_tagged, r, tol=inner_tol, restart=restart,
-                              maxiter=inner_maxiter, params=params,
-                              precond=precond, guards=guards)
-        inner_health = int(getattr(res, "health", HEALTH_OK))
-        total_inner += int(res.iters)
-        if not bool(jnp.isfinite(jnp.vdot(res.x, res.x))):
-            break  # never fold a non-finite correction into x
-        x = x + res.x          # full-precision correction
-        outer += 1
-        r = b - apply3(x)      # tag-3 residual: the one-copy high read
-        relres = float(jnp.linalg.norm(r)) / bnorm
-        history.append(relres)
-        if not bool(res.converged) and int(res.iters) == 0:
-            break  # inner solver made no progress; avoid spinning
+                res = solve_gmres(apply_tagged, r, tol=inner_tol,
+                                  restart=restart, maxiter=inner_maxiter,
+                                  params=params, precond=precond,
+                                  guards=guards, flight=flight)
+            inner_health = int(getattr(res, "health", HEALTH_OK))
+            total_inner += int(res.iters)
+            if flights is not None and res.flight is not None:
+                flights.append(res.flight)
+            if not bool(jnp.isfinite(jnp.vdot(res.x, res.x))):
+                break  # never fold a non-finite correction into x
+            x = x + res.x          # full-precision correction
+            outer += 1
+            r = b - apply3(x)      # tag-3 residual: the one-copy high read
+            relres = float(jnp.linalg.norm(r)) / bnorm
+            history.append(relres)
+            if not bool(res.converged) and int(res.iters) == 0:
+                break  # inner solver made no progress; avoid spinning
     converged = relres <= tol
     if converged:
         health = HEALTH_OK
@@ -163,4 +175,5 @@ def solve_ir(
         converged=converged,
         history=np.asarray(history),
         health=health,
+        flight=flights,
     )

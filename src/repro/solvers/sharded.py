@@ -44,6 +44,8 @@ from repro.kernels.dist_spmv import (
     make_sharded_operator,
     shard_mesh,
 )
+from repro.obs import flight as OF
+from repro.obs import trace as OT
 from repro.robustness.guards import (
     DEFAULT_GUARDS,
     GuardParams,
@@ -114,7 +116,7 @@ def _diag_apply_dispatch(m_parts, ei_bit_m, frac_bits_m):
 
 def _sharded_loop_fn(part: PartitionedGSECSR, kind: str, wire: str,
                      maxiter: int, params, init_tag: int,
-                     precond_meta=None, guards=None):
+                     precond_meta=None, guards=None, flight=None):
     """Build (and memoize on the partition) the jitted shard_map solver.
 
     The per-device body mirrors ``_solve_cg_fused``/``_solve_pcg_fused``
@@ -125,7 +127,7 @@ def _sharded_loop_fn(part: PartitionedGSECSR, kind: str, wire: str,
     row-sharded alongside x.
     """
     key = ("_sharded_solve", kind, wire, maxiter, params, init_tag,
-           precond_meta, guards)
+           precond_meta, guards, flight)
     fn = part.__dict__.get(key)
     if fn is not None:
         return fn
@@ -148,6 +150,8 @@ def _sharded_loop_fn(part: PartitionedGSECSR, kind: str, wire: str,
                          it=jnp.int32(0), mon=mon,
                          switches=jnp.full((2,), -1, jnp.int32))
             state = _guarded_init(state, relres(state["rs"]), guards)
+            if flight is not None:
+                state["fl"] = OF.flight_init(flight, b.dtype)
 
             def body(s):
                 # EXACTLY fused_cg_step's op order, dots psum'd.
@@ -165,8 +169,17 @@ def _sharded_loop_fn(part: PartitionedGSECSR, kind: str, wire: str,
                 p = r + beta * s["p"]
                 out = dict(x=x, r=r, p=p, rs=rs2, it=s["it"] + 1,
                            mon=mon2, switches=sw)
-                return _guarded_body(s, out, relres(rs2), guards,
-                                     denom=denom)
+                out = _guarded_body(s, out, relres(rs2), guards,
+                                    denom=denom)
+                if flight is not None:
+                    # The recorded scalars are all psum'd/replicated, so
+                    # every shard writes the SAME ring (out_spec P()).
+                    g = out.get("g")
+                    out["fl"] = OF.flight_record(
+                        s["fl"], it=s["it"], relres=relres(rs2), tag=tag,
+                        health=g["health"] if g is not None else None,
+                        a0=alpha, a1=beta, a2=denom)
+                return out
 
             def cond(s):
                 return _guarded_cond(
@@ -185,6 +198,8 @@ def _sharded_loop_fn(part: PartitionedGSECSR, kind: str, wire: str,
                          rr=_pdot(r0, r0), it=jnp.int32(0), mon=mon,
                          switches=jnp.full((2,), -1, jnp.int32))
             state = _guarded_init(state, relres(state["rr"]), guards)
+            if flight is not None:
+                state["fl"] = OF.flight_init(flight, b.dtype)
 
             def step_at(s, tag: int):
                 # EXACTLY _pcg_step_at_tag's op order, dots psum'd; the
@@ -202,7 +217,7 @@ def _sharded_loop_fn(part: PartitionedGSECSR, kind: str, wire: str,
                 beta = rz2 / jnp.where(s["rz"] == 0, 1.0, s["rz"])
                 p = z + beta * s["p"]
                 stepped = dict(x=x, r=r, p=p, rz=rz2, rr=rr2)
-                if guards is not None:
+                if guards is not None or flight is not None:
                     stepped["denom"] = denom
                 return stepped
 
@@ -219,9 +234,20 @@ def _sharded_loop_fn(part: PartitionedGSECSR, kind: str, wire: str,
                 sw = _record_switch(s["switches"], mon1, mon2, s["it"])
                 rz2 = stepped["rz"]
                 stepped.update(it=s["it"] + 1, mon=mon2, switches=sw)
-                return _guarded_body(s, stepped, relres(stepped["rr"]),
-                                     guards, denom=denom,
-                                     breakdown=rz2 < 0, finite_aux=(rz2,))
+                out = _guarded_body(s, stepped, relres(stepped["rr"]),
+                                    guards, denom=denom,
+                                    breakdown=rz2 < 0, finite_aux=(rz2,))
+                if flight is not None:
+                    # Observation-only recompute (bit-identity contract).
+                    alpha = s["rz"] / jnp.where(denom == 0, 1.0, denom)
+                    beta = rz2 / jnp.where(s["rz"] == 0, 1.0, s["rz"])
+                    g = out.get("g")
+                    out["fl"] = OF.flight_record(
+                        s["fl"], it=s["it"], relres=relres(stepped["rr"]),
+                        tag=s["mon"].tag,
+                        health=g["health"] if g is not None else None,
+                        a0=alpha, a1=beta, a2=denom)
+                return out
 
             def cond(s):
                 return _guarded_cond(
@@ -235,15 +261,23 @@ def _sharded_loop_fn(part: PartitionedGSECSR, kind: str, wire: str,
         g = out.get("g") if guards is not None else None
         health, trip = finalize_health(g, conv, final_rel)
         ckpt = out["ckpt"] if guards is not None else out["x"]
-        return (out["x"], out["it"], final_rel, out["mon"].tag,
+        outs = (out["x"], out["it"], final_rel, out["mon"].tag,
                 out["switches"], conv, health, trip, ckpt)
+        if flight is not None:
+            outs = outs + (out["fl"],)
+        return outs
 
     sharded = P(AXIS)
+    out_specs = (sharded, P(), P(), P(), P(), P(), P(), P(), sharded)
+    if flight is not None:
+        # The flight ring is replicated: every recorded column derives
+        # from psum'd scalars or the replicated monitor state.
+        out_specs = out_specs + (P(),)
     fn = jax.jit(shard_map(
         run, mesh=mesh,
         in_specs=(sharded,) * 7 + (P(),) + (sharded,) * 3 + (P(),)
         + (sharded, sharded, P(), P()),
-        out_specs=(sharded, P(), P(), P(), P(), P(), P(), P(), sharded),
+        out_specs=out_specs,
         check_rep=False,
     ))
     part.__dict__[key] = fn
@@ -256,7 +290,7 @@ def _empty_diag(part):
 
 
 def _run_sharded(part, kind, b, x0, tol, maxiter, params, init_tag, wire,
-                 precond=None, guards=None, return_ckpt=False):
+                 precond=None, guards=None, flight=None, return_ckpt=False):
     n = part.shape[0]
     if precond is None:
         m_head, m_tail1, m_tail2, m_table = _empty_diag(part)
@@ -279,19 +313,21 @@ def _run_sharded(part, kind, b, x0, tol, maxiter, params, init_tag, wire,
         m_table = pk.table
         precond_meta = (pk.ei_bit, pk.frac_bits)
     fn = _sharded_loop_fn(part, kind, wire, maxiter, params, init_tag,
-                          precond_meta, guards)
+                          precond_meta, guards, flight)
     bnorm = jnp.linalg.norm(b)           # computed on the FULL vector so
     bnorm = jnp.where(bnorm == 0, 1.0, bnorm)  # it matches single-device
-    x, it, rel, tag, sw, conv, health, trip, ckpt = fn(
+    outs = fn(
         part.colpak, part.head, part.tail1, part.tail2, part.row_ids,
         part.bnd_idx, part.halo_idx, part.table,
         m_head, m_tail1, m_tail2, m_table,
         _pad_to(b, part.n_padded), _pad_to(x0, part.n_padded),
         jnp.asarray(tol, b.dtype), bnorm,
     )
+    x, it, rel, tag, sw, conv, health, trip, ckpt = outs[:9]
+    fl = outs[9] if flight is not None else None
     res = CGResult(x=x[:n], iters=it, relres=rel, tag=tag,
                    switch_iters=sw, converged=conv, health=health,
-                   trip_iter=trip)
+                   trip_iter=trip, flight=fl)
     return (res, ckpt[:n]) if return_ckpt else res
 
 
@@ -307,6 +343,7 @@ def solve_cg_sharded(
     guards: GuardParams | None = DEFAULT_GUARDS,
     recover: bool = True,
     init_tag: int = 1,
+    flight: OF.FlightParams | None = None,
 ) -> CGResult:
     """Distributed stepped CG over a row-sharded operator (DESIGN.md §13).
 
@@ -331,10 +368,13 @@ def solve_cg_sharded(
 
     def run(x_start, budget, tag):
         return _run_sharded(part, "cg", b, x_start, tol, budget, params,
-                            tag, wire, guards=guards, return_ckpt=True)
+                            tag, wire, guards=guards, flight=flight,
+                            return_ckpt=True)
 
-    res = run_with_recovery(run, x0, maxiter, init_tag=init_tag,
-                            recover=recover and guards is not None)
+    with OT.span("solve.cg_sharded", n=int(b.shape[0]), tol=float(tol),
+                 wire=wire, shards=int(part.n_shards)):
+        res = run_with_recovery(run, x0, maxiter, init_tag=init_tag,
+                                recover=recover and guards is not None)
     if not final_correction:
         return _restore_shape(res, orig_shape)
     op = make_sharded_operator(part, wire)
@@ -364,6 +404,7 @@ def solve_pcg_sharded(
     guards: GuardParams | None = DEFAULT_GUARDS,
     recover: bool = True,
     init_tag: int = 1,
+    flight: OF.FlightParams | None = None,
 ) -> CGResult:
     """Distributed stepped PCG.  Diagonal GSE preconditioners (Jacobi /
     SPAI-0) shard with the operator -- each device decodes its slice of
@@ -387,15 +428,17 @@ def solve_pcg_sharded(
         return solve_pcg(op, b.reshape(orig_shape), precond, x0=x0, tol=tol,
                          maxiter=maxiter, params=params,
                          final_correction=final_correction, guards=guards,
-                         recover=recover, init_tag=init_tag)
+                         recover=recover, init_tag=init_tag, flight=flight)
 
     def run(x_start, budget, tag):
         return _run_sharded(part, "pcg", b, x_start, tol, budget, params,
                             tag, wire, precond=precond, guards=guards,
-                            return_ckpt=True)
+                            flight=flight, return_ckpt=True)
 
-    res = run_with_recovery(run, x0, maxiter, init_tag=init_tag,
-                            recover=recover and guards is not None)
+    with OT.span("solve.pcg_sharded", n=int(b.shape[0]), tol=float(tol),
+                 wire=wire, shards=int(part.n_shards)):
+        res = run_with_recovery(run, x0, maxiter, init_tag=init_tag,
+                                recover=recover and guards is not None)
     if not final_correction:
         return _restore_shape(res, orig_shape)
     op = make_sharded_operator(part, wire)

@@ -47,6 +47,17 @@ corruption and 100% recovery of the low-tag operator faults.  Forces two
 host CPU devices (for the wire-checksum harness) when XLA_FLAGS is
 unset.  Composes with ``--quick`` for the trimmed CI smoke.
 
+``--serve`` runs the chaos traffic-replay harness for the async solve
+service (benchmarks/serve_bench.py, DESIGN.md section 17) and writes
+``BENCH_serve.json``: p50/p95/p99 end-to-end latency, shed counts, and a
+per-family chaos ledger (pack + pack-cache corruption, wire faults,
+operand faults, slow-shard stalls, queue bursts).  Gates 100% chaos
+detection, zero UNFLAGGED non-finite solutions, typed shedding under
+overload with a bounded shed rate, and a loose absolute p99 bound (the
+injected stall skew dominates, so the gate is not wall-clock noise).
+Forces two host CPU devices (for the sharded wire-fault case) when
+XLA_FLAGS is unset.  Composes with ``--quick`` for the trimmed CI smoke.
+
 ``--obs`` runs the observability sweep (benchmarks/obs_bench.py,
 DESIGN.md section 16) and writes ``BENCH_obs.json`` plus a span capture
 ``TRACE_obs.jsonl``, gating recorder-on/off bit identity across every
@@ -348,6 +359,78 @@ def run_tune(quick: bool, out_path: pathlib.Path | None = None) -> dict:
     return payload
 
 
+def run_serve(quick: bool, out_path: pathlib.Path | None = None) -> dict:
+    """Chaos traffic replay -> BENCH_serve.json (DESIGN.md §17).
+
+    Gates:
+
+      * every chaos family is DETECTED/handled (rate == 1.0): pack and
+        pack-cache corruption repacked, wire + operand faults flagged
+        (breaker opens, then heals), deadline expiries returned as
+        flagged checkpoints, queue bursts shed typed responses;
+      * ZERO unflagged non-finite solutions -- a NaN that reaches a
+        caller must carry health != "ok";
+      * overload sheds typed responses (both families occurred) and the
+        shed rate stays below 0.9 -- the service degrades, it does not
+        collapse;
+      * p99 end-to-end latency (by the service's own skewed clock) under
+        a loose 60 s absolute bound: the deterministic stall injection
+        dominates it, so the gate catches pathological re-queue loops,
+        not CI jitter.
+
+    The JSON is written BEFORE the gates raise so a failing run still
+    uploads diagnostics.
+    """
+    from benchmarks import serve_bench
+
+    results = serve_bench.run(quick=quick)
+    payload = {
+        "bench": "serve_chaos_replay",
+        "schema": "traffic -> {submitted, completed, sheds, shed_rate, "
+                  "warm, max_batch}; latency_s -> {p50, p95, p99}; chaos "
+                  "-> {cases, rate, wire_skipped}; unflagged_nonfinite "
+                  "(DESIGN.md section 17)",
+        "results": results,
+    }
+    _write_payload(payload, out_path or (_REPO_ROOT / "BENCH_serve.json"))
+
+    chaos = results["chaos"]
+    if chaos["wire_skipped"]:
+        raise SystemExit(
+            "serve replay: wire-fault case skipped (need >= 2 devices; "
+            "run.py forces them when XLA_FLAGS is unset)"
+        )
+    if chaos["rate"] != 1.0:
+        missed = [k for k, v in chaos["cases"].items() if not v]
+        raise SystemExit(
+            f"serve replay: chaos detection rate {chaos['rate']:.3f} != "
+            f"1.0; missed {missed}"
+        )
+    if results["unflagged_nonfinite"] != 0:
+        raise SystemExit(
+            f"serve replay: {results['unflagged_nonfinite']} non-finite "
+            "solution(s) returned without a health flag"
+        )
+    traffic = results["traffic"]
+    if traffic["sheds"]["queue_full"] < 1 \
+            or traffic["sheds"]["breaker_open"] < 1:
+        raise SystemExit(
+            f"serve replay: expected both shed families under the chaos "
+            f"trace, got {traffic['sheds']}"
+        )
+    if traffic["shed_rate"] >= 0.9:
+        raise SystemExit(
+            f"serve replay: shed rate {traffic['shed_rate']:.2f} >= 0.9 "
+            "(the service collapsed instead of degrading)"
+        )
+    if results["latency_s"]["p99"] > 60.0:
+        raise SystemExit(
+            f"serve replay: p99 latency {results['latency_s']['p99']:.1f}"
+            " s over the 60 s bound (requests re-queued pathologically?)"
+        )
+    return payload
+
+
 def run_obs(quick: bool, out_path: pathlib.Path | None = None,
             trace_path: pathlib.Path | None = None) -> dict:
     """Observability sweep -> BENCH_obs.json + TRACE_obs.jsonl (§16).
@@ -450,6 +533,13 @@ def main() -> None:
                          "sweep -> BENCH_robust.json, gating 100% "
                          "detection and recovery (DESIGN.md section 14; "
                          "forces 2 host CPU devices if XLA_FLAGS is unset)")
+    ap.add_argument("--serve", action="store_true",
+                    help="chaos traffic replay against the async solve "
+                         "service -> BENCH_serve.json, gating 100% chaos "
+                         "detection, zero unflagged non-finite solutions, "
+                         "typed shedding, and a loose absolute p99 bound "
+                         "(DESIGN.md section 17; forces 2 host CPU "
+                         "devices if XLA_FLAGS is unset)")
     ap.add_argument("--obs", action="store_true",
                     help="observability sweep -> BENCH_obs.json + "
                          "TRACE_obs.jsonl, gating recorder-on/off bit "
@@ -477,8 +567,12 @@ def main() -> None:
                      or args.nrhs > 1 or args.only):
         ap.error("--obs is its own sweep: drop "
                  "--robust/--tune/--shards/--nrhs/--only")
+    if args.serve and (args.robust or args.tune or args.obs
+                       or args.shards > 1 or args.nrhs > 1 or args.only):
+        ap.error("--serve is its own sweep: drop "
+                 "--robust/--tune/--obs/--shards/--nrhs/--only")
     force_devices = args.shards if args.shards > 1 else (
-        2 if args.robust or args.obs else 0)
+        2 if args.robust or args.obs or args.serve else 0)
     if force_devices and "xla_force_host_platform_device_count" not in (
             os.environ.get("XLA_FLAGS", "")):
         # Must land before jax initializes (all jax imports are lazy,
@@ -490,6 +584,9 @@ def main() -> None:
         ).strip()
 
     print("name,us_per_call,derived")
+    if args.serve:
+        run_serve(quick=args.quick)
+        return
     if args.obs:
         run_obs(quick=args.quick)
         return

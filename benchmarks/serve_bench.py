@@ -1,0 +1,299 @@
+"""Chaos traffic-replay bench for the async solve service (DESIGN.md §17).
+
+Replays a seeded request trace against :class:`repro.serve.AsyncSolveService`
+while injecting every fault family the service claims to survive:
+
+  * **pack corruption** -- seeded bit-flips in a registered handle's packed
+    GSE segments (``robustness.faults.corrupt_gsecsr``); the pre-dispatch
+    CRC verify must DETECT and repack from the retained CSR, and the solve
+    must still converge.
+  * **pack-cache corruption** -- bit-flips swapped into the operator's
+    memoized ``kernels.ops._cached_pack`` entry behind the stored checksum
+    (``corrupt_pack_cache``); the next cache hit must detect and repack
+    (``PACK_STATS['corrupt']``).
+  * **wire faults** -- a NaN hook on the sharded halo exchange
+    (``distributed.wire.set_wire_fault``); the poisoned SpMV must come back
+    FLAGGED by the guards (never an unflagged non-finite x), and the handle
+    must solve cleanly again once the hook is lifted.  Needs >= 2 devices
+    (``run.py --serve`` forces them when XLA_FLAGS is unset); skipped and
+    reported otherwise.
+  * **operand faults** -- a handle whose operator NaNs at every tag
+    (``make_tag_fault_operator``): each request is flagged, the per-handle
+    circuit breaker OPENS after ``fail_threshold`` consecutive trips and
+    sheds further traffic with ``retry_after_s``; once the injected
+    operator is lifted the half-open probe heals the handle.
+  * **slow-shard stalls** -- a chunk hook charges wall-clock skew to the
+    service clock for one handle's groups, so its requests blow their
+    deadlines mid-solve and must come back as FLAGGED checkpoints
+    (``health="deadline"``), never silently dropped.
+  * **queue-full bursts** -- a submission burst past ``queue_limit`` must
+    shed typed ``Shed("queue_full")`` responses, not block or drop.
+
+The replay reports p50/p95/p99 end-to-end latency (by the service's own
+clock, stall skew included), the shed rate, per-family detection flags,
+and the count of UNFLAGGED non-finite solutions -- the headline gate is
+detection == 1.0 with zero unflagged non-finites.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+import jax  # noqa: E402  (common enables x64 first)
+import jax.numpy as jnp
+
+_STALL_HANDLE = "stall"
+
+
+def _params():
+    from repro.core.precision import MonitorParams
+    return MonitorParams(t=30, l=30, m=15, rsd_limit=0.5, reldec_limit=0.45)
+
+
+class _SkewClock:
+    """Monotonic clock plus injectable skew: the stall hook charges fake
+    seconds to the service (deadlines, breaker backoff, latency) without
+    the bench actually sleeping."""
+
+    def __init__(self):
+        self.skew = 0.0
+
+    def __call__(self) -> float:
+        return time.monotonic() + self.skew
+
+
+def _rhs(a, seed: int):
+    from repro.sparse.spmv import spmv
+
+    rng = np.random.default_rng(seed)
+    return spmv(a, jnp.asarray(rng.normal(size=a.shape[1])))
+
+
+def _finite(x) -> bool:
+    return x is not None and bool(jnp.isfinite(jnp.vdot(x, x)))
+
+
+def _nan_wire_hook(target: str):
+    def hook(name, arr):
+        if name != target:
+            return arr
+        flat = arr.reshape(-1)
+        if jnp.issubdtype(arr.dtype, jnp.floating):
+            return flat.at[0].set(jnp.nan).reshape(arr.shape)
+        return flat.at[0].set(flat[0] ^ jnp.asarray(1, flat.dtype)
+                              ).reshape(arr.shape)
+
+    return hook
+
+
+def run(quick: bool = False, seed: int = 0) -> dict:
+    from repro.robustness.faults import (corrupt_gsecsr, corrupt_pack_cache,
+                                         make_tag_fault_operator)
+    from repro.serve import AsyncSolveService, BreakerParams, Shed
+    from repro.sparse import generators as G
+    from repro.sparse.csr import pack_csr
+
+    n_clean = 16 if quick else 24
+    repeats = 2 if quick else 4
+    burst = 14
+
+    clk = _SkewClock()
+    stall_s = 0.6
+
+    def stall_hook(svc, key, group):
+        if key[0] == _STALL_HANDLE:
+            clk.skew += stall_s
+
+    svc = AsyncSolveService(
+        slots=4, params=_params(), maxiter=6000, chunk_iters=24,
+        queue_limit=8,
+        breaker=BreakerParams(fail_threshold=2, backoff_s=0.2,
+                              backoff_mult=2.0, jitter=0.1),
+        warm_capacity=8, clock=clk, seed=seed, chunk_hook=stall_hook,
+    )
+    a_clean = G.poisson2d(n_clean)
+    a_flaky = G.poisson2d(12)
+    svc.register("clean", a_clean, k=8)
+    svc.register(_STALL_HANDLE, a_clean, k=8)
+    g_flaky = pack_csr(a_flaky, k=8)
+    svc.register("flaky", a_flaky, k=8,
+                 operator=make_tag_fault_operator(g_flaky, mode="nan",
+                                                  fail_tag=3))
+
+    submit_t: dict[int, float] = {}
+    latencies: list[float] = []
+    reports = {}
+    sheds = {"queue_full": 0, "breaker_open": 0}
+    submitted = 0
+
+    def submit(handle, b, **kw):
+        nonlocal submitted
+        submitted += 1
+        resp = svc.submit(handle, b, **kw)
+        if isinstance(resp, Shed):
+            sheds[resp.reason] += 1
+            return None
+        submit_t[resp.id] = clk()
+        return resp.id
+
+    def drain():
+        done = svc.run_until_idle()
+        for rid, rep in done.items():
+            if rid in submit_t:
+                latencies.append(clk() - submit_t[rid])
+        reports.update(done)
+        return done
+
+    cases: dict[str, bool] = {}
+
+    # -- phase 1: clean warm-up traffic (continuous batching + warm LRU) --
+    clean_bs = [_rhs(a_clean, s) for s in range(3)]
+    for _ in range(repeats):
+        for b in clean_bs:
+            submit("clean", b, tol=1e-8)
+    drain()
+    cases["clean_traffic_converges"] = all(
+        r.converged for r in reports.values())
+
+    # -- phase 2: queue-full burst --------------------------------------
+    burst_ids = [submit("clean", _rhs(a_clean, 100 + s), tol=1e-8)
+                 for s in range(burst)]
+    drain()
+    cases["queue_full_shed"] = sheds["queue_full"] > 0
+    cases["burst_accepted_all_converge"] = all(
+        reports[rid].converged for rid in burst_ids if rid is not None)
+
+    # -- phase 3: operand-fault storm -> breaker opens ------------------
+    flaky_reports = []
+    for s in range(4):
+        rid = submit("flaky", _rhs(a_flaky, 200 + s), tol=1e-8)
+        drain()
+        if rid is not None:
+            flaky_reports.append(reports[rid])
+    cases["operand_fault_flagged"] = bool(flaky_reports) and all(
+        (not r.converged) and r.health != "ok" for r in flaky_reports)
+    cases["breaker_opened"] = sheds["breaker_open"] > 0
+
+    # -- phase 4: lift the fault; half-open probe heals the handle ------
+    del svc._operators["flaky"]  # the injected operator, not the pack
+    clk.skew += 30.0             # past any jittered backoff
+    rid = submit("flaky", _rhs(a_flaky, 300), tol=1e-8)
+    drain()
+    cases["breaker_recovered"] = (rid is not None
+                                  and reports[rid].converged
+                                  and reports[rid].health == "ok")
+
+    # -- phase 5: pack corruption detected + repacked -------------------
+    det0 = int(svc.pack_faults["detected"])
+    op = svc._ops["clean"]
+    op.gse = corrupt_gsecsr(op.gse, "table", seed=seed + 7)
+    rid = submit("clean", _rhs(a_clean, 400), tol=1e-8)
+    drain()
+    cases["pack_corruption_detected"] = (
+        int(svc.pack_faults["detected"]) > det0
+        and rid is not None and reports[rid].converged)
+
+    # -- phase 6: pack-cache corruption detected on the next hit --------
+    # The memoized layout packs (kernels.ops._cached_pack) carry their own
+    # checksum: populate the handle's SELL entry (as a SELL-layout dispatch
+    # would), corrupt it behind the stored checksum, and the next hit must
+    # detect + repack -- while the handle keeps serving.
+    from repro.kernels.ops import PACK_STATS, sell_pack_gsecsr
+
+    gse = svc._ops["clean"].gse
+    sell_pack_gsecsr(gse)  # populate the entry under test
+    c0 = int(PACK_STATS["corrupt"])
+    corrupted = corrupt_pack_cache(gse, seed=seed + 11)
+    sell_pack_gsecsr(gse)  # next dispatch: verify -> detect -> repack
+    rid = submit("clean", _rhs(a_clean, 500), tol=1e-8)
+    drain()
+    cases["pack_cache_corruption_detected"] = (
+        corrupted and int(PACK_STATS["corrupt"]) > c0
+        and rid is not None and reports[rid].converged)
+
+    # -- phase 7: wire fault on a sharded handle (needs >= 2 devices) ---
+    # The NaN hook is applied at TRACE time, so it must be live when the
+    # faulted handle's solve first compiles: a freshly registered handle
+    # (its own operator closure -> fresh trace) bakes the fault in, while
+    # the pre-chaos handle's compiled entries stay clean.
+    wire_skipped = jax.device_count() < 2
+    if not wire_skipped:
+        from repro.distributed.wire import set_wire_fault
+
+        svc.register("shard", a_clean, k=8, sharded=True, shards=2,
+                     wire="exact")
+        rid = submit("shard", _rhs(a_clean, 600), tol=1e-8)
+        drain()
+        ok_before = rid is not None and reports[rid].converged
+        set_wire_fault(_nan_wire_hook("raw"))
+        try:
+            svc.register("shard_faulted", a_clean, k=8, sharded=True,
+                         shards=2, wire="exact")
+            rid_bad = submit("shard_faulted", _rhs(a_clean, 601), tol=1e-8)
+            drain()
+        finally:
+            set_wire_fault(None)
+        bad = reports.get(rid_bad)
+        flagged = (bad is not None and not bad.converged
+                   and bad.health != "ok")
+        rid_heal = submit("shard", _rhs(a_clean, 602), tol=1e-8)
+        drain()
+        healed = rid_heal is not None and reports[rid_heal].converged
+        cases["wire_fault_flagged"] = ok_before and flagged and healed
+
+    # -- phase 8: slow-shard stall -> deadline checkpoint ---------------
+    stall_ids = [submit(_STALL_HANDLE, _rhs(a_clean, 700 + s),
+                        tol=1e-13, deadline_s=1.0)
+                 for s in range(2)]
+    drain()
+    stall_reports = [reports[rid] for rid in stall_ids if rid is not None]
+    cases["deadline_flagged_checkpoint"] = bool(stall_reports) and all(
+        r.deadline_exceeded and r.health == "deadline"
+        and _finite(svc.solution(r.id)) for r in stall_reports)
+
+    # -- roll-up ---------------------------------------------------------
+    unflagged_nonfinite = sum(
+        1 for r in reports.values()
+        if r.health == "ok" and not _finite(svc.solution(r.id)))
+    lat = np.asarray(sorted(latencies)) if latencies else np.asarray([0.0])
+    completed = len(reports)
+    shed_total = sum(sheds.values())
+    detection_rate = (sum(cases.values()) / len(cases)) if cases else 0.0
+
+    for name, ok in sorted(cases.items()):
+        emit(f"serve.case.{name}", 0.0, int(ok))
+    emit("serve.latency.p99_ms", float(np.percentile(lat, 99)) * 1e3,
+         completed)
+
+    return {
+        "traffic": {
+            "submitted": submitted,
+            "completed": completed,
+            "sheds": dict(sheds),
+            "shed_rate": shed_total / max(submitted, 1),
+            "warm": {k: int(svc.warm[k]) for k in ("hit", "miss", "store")},
+            "max_batch": max((r.batch_size for r in reports.values()),
+                             default=0),
+        },
+        "latency_s": {
+            "p50": float(np.percentile(lat, 50)),
+            "p95": float(np.percentile(lat, 95)),
+            "p99": float(np.percentile(lat, 99)),
+            "count": len(latencies),
+        },
+        "chaos": {
+            "cases": cases,
+            "rate": detection_rate,
+            "wire_skipped": wire_skipped,
+        },
+        "unflagged_nonfinite": unflagged_nonfinite,
+    }
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(quick=True), indent=2, default=str))

@@ -10,6 +10,13 @@ Fault-tolerance contract (DESIGN.md §5):
     beyond the device->host copy).
   * ``restore(..., target_sharding=...)`` re-shards arrays onto a
     different mesh than they were saved from (elastic restart).
+  * ``save`` stamps a canonical pytree CRC32 (``tree_crc32``: keypath +
+    dtype + shape + bytes per leaf, sorted key order) into ``meta.json``
+    and ``restore`` re-derives it from the decoded arrays -- a checkpoint
+    whose *contents* were corrupted (not just the compressed blob) raises
+    ``CheckpointCorrupt``, and ``restore_latest_valid`` walks back to the
+    previous good step so a chunked solve re-runs from there instead of
+    resuming from garbage (DESIGN.md §17).
 """
 from __future__ import annotations
 
@@ -58,6 +65,32 @@ _PENDING: Dict[str, cf.Future] = {}
 _LOCK = threading.Lock()
 
 
+class CheckpointCorrupt(IOError):
+    """A checkpoint failed integrity verification (blob hash or tree CRC).
+
+    Subclasses ``IOError`` so pre-existing ``except IOError`` handlers
+    keep working; new code should catch this and fall back to the
+    previous good step (``restore_latest_valid``).
+    """
+
+
+def _flat_crc32(flat: Dict[str, np.ndarray]) -> int:
+    """Canonical CRC32 of a flattened pytree: keypath, dtype, shape, bytes
+    per leaf, folded in sorted-key order so the digest is independent of
+    dict insertion order."""
+    crc = 0
+    for key in sorted(flat):
+        a = np.ascontiguousarray(flat[key])
+        head = f"{key}|{a.dtype.str}|{a.shape}|".encode()
+        crc = zlib.crc32(a.tobytes(), zlib.crc32(head, crc))
+    return crc & 0xFFFFFFFF
+
+
+def tree_crc32(tree: Any) -> int:
+    """Canonical content CRC32 of a pytree of arrays (host copy implied)."""
+    return _flat_crc32(_flatten(tree))
+
+
 def _flatten(tree) -> Dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
@@ -83,6 +116,7 @@ def save(path: str, tree: Any, step: int, extra: Optional[Dict] = None
          ) -> str:
     """Synchronous atomic save. Returns the final checkpoint dir."""
     flat = _flatten(tree)
+    crc = _flat_crc32(flat)
     payload = {
         "step": step,
         "extra": extra or {},
@@ -100,7 +134,8 @@ def save(path: str, tree: Any, step: int, extra: Optional[Dict] = None
         f.flush()
         os.fsync(f.fileno())
     with open(os.path.join(tmp, "meta.json"), "w") as f:
-        json.dump({"step": step, "sha256": digest, "bytes": len(comp)}, f)
+        json.dump({"step": step, "sha256": digest, "bytes": len(comp),
+                   "tree_crc32": crc}, f)
         f.flush()
         os.fsync(f.fileno())
     if os.path.exists(final):
@@ -157,9 +192,17 @@ def restore(path: str, step: int, like: Any,
     with open(os.path.join(d, "ckpt.msgpack.zst"), "rb") as f:
         comp = f.read()
     if hashlib.sha256(comp).hexdigest() != meta["sha256"]:
-        raise IOError(f"checkpoint {d} failed integrity check")
+        raise CheckpointCorrupt(f"checkpoint {d} failed integrity check")
     payload = msgpack.unpackb(_decompress(comp), raw=False)
     arrays = {k: _unpack_array(v) for k, v in payload["arrays"].items()}
+    # End-to-end content check: re-derive the canonical pytree CRC from the
+    # DECODED leaves and compare against the one stamped at save time.  The
+    # sha256 above only covers the compressed blob; this catches anything
+    # that slipped between serialization and decode (and checkpoints whose
+    # meta was re-stamped to match a tampered blob fail here too).  Old
+    # checkpoints without the stamp skip the check.
+    if "tree_crc32" in meta and _flat_crc32(arrays) != meta["tree_crc32"]:
+        raise CheckpointCorrupt(f"checkpoint {d} failed tree CRC32 check")
 
     flat_like = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
@@ -179,3 +222,39 @@ def restore(path: str, step: int, like: Any,
             lambda x, s: jax.device_put(x, s), tree, target_sharding
         )
     return tree, payload["step"], payload["extra"]
+
+
+def list_steps(path: str) -> list:
+    """All completed checkpoint steps under ``path``, ascending."""
+    if not os.path.isdir(path):
+        return []
+    steps = []
+    for name in os.listdir(path):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(path, name, "meta.json")):
+                steps.append(int(name.split("_")[1]))
+    return sorted(steps)
+
+
+def restore_latest_valid(path: str, like: Any, target_sharding: Any = None):
+    """Restore the newest checkpoint that passes integrity verification.
+
+    Walks steps newest-first, skipping any that raise ``CheckpointCorrupt``
+    (or are unreadable/mismatched) -- the resilience contract for chunked
+    solves: a corrupted latest checkpoint costs one re-run from the
+    previous good one, never a crash and never silent garbage.  Returns
+    ``(tree, step, extra, skipped)`` where ``skipped`` lists the corrupt
+    steps passed over, or ``None`` when no valid checkpoint exists.
+    """
+    skipped = []
+    for step in reversed(list_steps(path)):
+        try:
+            tree, got, extra = restore(path, step, like,
+                                       target_sharding=target_sharding)
+        except (CheckpointCorrupt, OSError, KeyError, ValueError,
+                zlib.error, msgpack.exceptions.ExtraData,
+                msgpack.exceptions.UnpackException):
+            skipped.append(step)
+            continue
+        return tree, got, extra, skipped
+    return None

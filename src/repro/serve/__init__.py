@@ -1,0 +1,27 @@
+"""Resilient async solve serving (DESIGN.md §17).
+
+Chunked solver execution (``chunked``: run any solver family in bounded
+segments of K iterations, bit-identical to the unchunked run), a
+per-handle circuit breaker (``breaker``), and the admission/dispatch
+service on top (``service``: bounded intake, typed shed responses,
+continuous batching at chunk boundaries, mid-solve deadline enforcement,
+warm-start reuse, checkpoint/resume).
+"""
+from repro.serve.breaker import BreakerParams, CircuitBreaker
+from repro.serve.chunked import BatchedChunks, IRChunks, SolveChunks
+from repro.serve.service import (
+    Accepted,
+    AsyncSolveService,
+    Shed,
+)
+
+__all__ = [
+    "Accepted",
+    "AsyncSolveService",
+    "BatchedChunks",
+    "BreakerParams",
+    "CircuitBreaker",
+    "IRChunks",
+    "Shed",
+    "SolveChunks",
+]

@@ -135,7 +135,8 @@ def _normalize_block(b, x0):
 
 
 def _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
-                         init_col, step_col, guards=None, flight=None):
+                         init_col, step_col, guards=None, flight=None,
+                         resume=None, stop_at=None, return_state=False):
     """Shared batched while_loop: per-column monitors, masking, switches.
 
     ``init_col(b_j, x0_j, tag) -> dict`` builds one column's Krylov state
@@ -158,34 +159,46 @@ def _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
     flight-recorder ring (DESIGN.md §16) -- same observation-after-update
     discipline, recorder-on stays per-column bit-identical -- and the
     result stacks the per-column states along a leading nrhs axis.
+
+    ``resume`` (DESIGN.md §17) carries a previous chunk's cols tuple
+    verbatim (the init section is skipped); ``stop_at`` is a per-column
+    ``(nrhs,)`` iteration bound ANDed into each column's liveness --
+    a pure extra exit condition, so chunked == unchunked bitwise.
+    ``return_state`` additionally returns the raw cols tuple.
     """
     nrhs = b.shape[1]
     bnorms = []
-    cols = []
     for j in range(nrhs):
         bn = jnp.linalg.norm(b[:, j])
         bn = jnp.where(bn == 0, 1.0, bn)
         bnorms.append(bn)
-        mon = P.init(params, dtype=b.dtype, tag=init_tag)
-        c = init_col(b[:, j], x0[:, j], mon.tag)
-        c.pop("denom", None)
-        if guards is not None:
-            c["g"] = guard_init(jnp.sqrt(jnp.abs(c["rr"])) / bn)
-        if flight is not None:
-            c["fl"] = OF.flight_init(flight, b.dtype)
-        c.update(
-            it=jnp.int32(0),
-            mon=mon,
-            sw=jnp.full((2,), -1, jnp.int32),
-        )
-        cols.append(c)
-    cols = tuple(cols)
+    if resume is not None:
+        cols = resume
+    else:
+        cols = []
+        for j in range(nrhs):
+            mon = P.init(params, dtype=b.dtype, tag=init_tag)
+            c = init_col(b[:, j], x0[:, j], mon.tag)
+            c.pop("denom", None)
+            if guards is not None:
+                c["g"] = guard_init(jnp.sqrt(jnp.abs(c["rr"])) / bnorms[j])
+            if flight is not None:
+                c["fl"] = OF.flight_init(flight, b.dtype)
+            c.update(
+                it=jnp.int32(0),
+                mon=mon,
+                sw=jnp.full((2,), -1, jnp.int32),
+            )
+            cols.append(c)
+        cols = tuple(cols)
 
     def col_relres(c, j):
         return jnp.sqrt(jnp.abs(c["rr"])) / bnorms[j]
 
     def col_active(c, j):
         alive = (col_relres(c, j) > tol) & (c["it"] < maxiter)
+        if stop_at is not None:
+            alive = alive & (c["it"] < stop_at[j])
         if guards is not None:
             alive = alive & (c["g"]["health"] == HEALTH_OK)
         return alive
@@ -262,7 +275,7 @@ def _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
         health = jnp.full((nrhs,), HEALTH_OK, jnp.int32)
         trip_iter = jnp.full((nrhs,), -1, jnp.int32)
         converged = relres <= tol
-    return BatchedCGResult(
+    res = BatchedCGResult(
         x=jnp.stack([c["x"] for c in cols], axis=1),
         iters=jnp.stack([c["it"] for c in cols]),
         relres=relres,
@@ -275,6 +288,7 @@ def _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
                                        *[c["fl"] for c in cols])
                 if flight is not None else None),
     )
+    return (res, cols) if return_state else res
 
 
 # ---------------------------------------------------------------------------
@@ -282,9 +296,10 @@ def _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("maxiter", "params", "init_tag", "guards",
-                                   "flight"))
+                                   "flight", "return_state"))
 def _solve_cg_batched_fused(a, b, x0, tol, maxiter, params, init_tag=1,
-                            guards=None, flight=None):
+                            guards=None, flight=None, resume=None,
+                            stop_at=None, return_state=False):
     from repro.solvers.fused_cg import (fused_cg_step, fused_cg_step_g,
                                         gse_matvec)
 
@@ -303,13 +318,16 @@ def _solve_cg_batched_fused(a, b, x0, tol, maxiter, params, init_tag=1,
         return dict(x=x, r=r, p=p, rr=rs, denom=denom)
 
     return _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
-                                init_col, step_col, guards, flight)
+                                init_col, step_col, guards, flight,
+                                resume=resume, stop_at=stop_at,
+                                return_state=return_state)
 
 
 @partial(jax.jit, static_argnames=("apply_a", "maxiter", "params", "init_tag",
-                                   "guards", "flight"))
+                                   "guards", "flight", "return_state"))
 def _solve_cg_batched(apply_a, b, x0, tol, maxiter, params, init_tag=1,
-                      guards=None, flight=None):
+                      guards=None, flight=None, resume=None, stop_at=None,
+                      return_state=False):
     def init_col(bj, xj, tag):
         r0 = bj - apply_a(xj, tag)
         rs = jnp.vdot(r0, r0)
@@ -331,7 +349,9 @@ def _solve_cg_batched(apply_a, b, x0, tol, maxiter, params, init_tag=1,
         return out
 
     return _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
-                                init_col, step_col, guards, flight)
+                                init_col, step_col, guards, flight,
+                                resume=resume, stop_at=stop_at,
+                                return_state=return_state)
 
 
 def solve_cg_batched(
@@ -391,9 +411,10 @@ def solve_cg_batched(
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("maxiter", "params", "init_tag", "guards",
-                                   "flight"))
+                                   "flight", "return_state"))
 def _solve_pcg_batched_fused(a, m, b, x0, tol, maxiter, params, init_tag=1,
-                             guards=None, flight=None):
+                             guards=None, flight=None, resume=None,
+                             stop_at=None, return_state=False):
     from repro.solvers.fused_cg import (fused_pcg_step, fused_pcg_step_g,
                                         gse_matvec)
 
@@ -415,13 +436,17 @@ def _solve_pcg_batched_fused(a, m, b, x0, tol, maxiter, params, init_tag=1,
         return dict(x=x, r=r, p=p, rz=rz, rr=rr, denom=denom)
 
     return _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
-                                init_col, step_col, guards, flight)
+                                init_col, step_col, guards, flight,
+                                resume=resume, stop_at=stop_at,
+                                return_state=return_state)
 
 
 @partial(jax.jit, static_argnames=("apply_a", "apply_m", "maxiter", "params",
-                                   "init_tag", "guards", "flight"))
+                                   "init_tag", "guards", "flight",
+                                   "return_state"))
 def _solve_pcg_batched(apply_a, apply_m, b, x0, tol, maxiter, params,
-                       init_tag=1, guards=None, flight=None):
+                       init_tag=1, guards=None, flight=None, resume=None,
+                       stop_at=None, return_state=False):
     def init_col(bj, xj, tag):
         r0 = bj - apply_a(xj, tag)
         z0 = apply_m(r0, tag)
@@ -446,7 +471,9 @@ def _solve_pcg_batched(apply_a, apply_m, b, x0, tol, maxiter, params,
         return out
 
     return _batched_krylov_loop(b, x0, tol, maxiter, params, init_tag,
-                                init_col, step_col, guards, flight)
+                                init_col, step_col, guards, flight,
+                                resume=resume, stop_at=stop_at,
+                                return_state=return_state)
 
 
 def solve_pcg_batched(

@@ -175,36 +175,47 @@ def _flight_body(s, out, relres_new, flight, a0=None, a1=None, a2=None):
 
 
 @partial(jax.jit, static_argnames=("apply_a", "maxiter", "params", "init_tag",
-                                   "guards", "flight", "return_ckpt"))
+                                   "guards", "flight", "return_ckpt",
+                                   "return_state"))
 def _solve_cg(apply_a, b, x0, tol, maxiter, params: P.MonitorParams,
               init_tag: int = 1, guards: GuardParams | None = None,
               flight: OF.FlightParams | None = None,
-              return_ckpt: bool = False):
+              return_ckpt: bool = False, resume=None, stop_at=None,
+              return_state: bool = False):
     dtype = b.dtype
     bnorm = jnp.linalg.norm(b)
     bnorm = jnp.where(bnorm == 0, 1.0, bnorm)
 
-    mon = P.init(params, dtype=dtype, tag=init_tag)
-    r0 = b - apply_a(x0, mon.tag)
-    state = dict(
-        x=x0,
-        r=r0,
-        p=r0,
-        rs=jnp.vdot(r0, r0),
-        it=jnp.int32(0),
-        mon=mon,
-        switches=jnp.full((2,), -1, jnp.int32),
-    )
-
     def relres(s):
         return jnp.sqrt(jnp.abs(s["rs"])) / bnorm
 
-    state = _guarded_init(state, relres(state), guards)
-    state = _flight_init(state, flight, dtype)
+    # ``resume`` (DESIGN.md §17) carries a previous chunk's loop state
+    # verbatim: the init section is skipped entirely, so a resumed loop
+    # continues the EXACT op sequence the unchunked loop would have run.
+    if resume is not None:
+        state = resume
+    else:
+        mon = P.init(params, dtype=dtype, tag=init_tag)
+        r0 = b - apply_a(x0, mon.tag)
+        state = dict(
+            x=x0,
+            r=r0,
+            p=r0,
+            rs=jnp.vdot(r0, r0),
+            it=jnp.int32(0),
+            mon=mon,
+            switches=jnp.full((2,), -1, jnp.int32),
+        )
+        state = _guarded_init(state, relres(state), guards)
+        state = _flight_init(state, flight, dtype)
 
     def cond(s):
-        return _guarded_cond(s, (relres(s) > tol) & (s["it"] < maxiter),
-                             guards)
+        ok = (relres(s) > tol) & (s["it"] < maxiter)
+        if stop_at is not None:
+            # Chunk boundary: a pure extra exit condition -- the body
+            # arithmetic is untouched, so chunked == unchunked bitwise.
+            ok = ok & (s["it"] < stop_at)
+        return _guarded_cond(s, ok, guards)
 
     def body(s):
         tag = s["mon"].tag
@@ -242,6 +253,8 @@ def _solve_cg(apply_a, b, x0, tol, maxiter, params: P.MonitorParams,
             flight=out.get("fl"),
         ),
     )
+    if return_state:
+        return res, ckpt, out
     return (res, ckpt) if return_ckpt else res
 
 
@@ -259,11 +272,12 @@ def _record_switch(switches, mon, mon2, it):
 
 
 @partial(jax.jit, static_argnames=("maxiter", "params", "init_tag", "guards",
-                                   "flight", "return_ckpt"))
+                                   "flight", "return_ckpt", "return_state"))
 def _solve_cg_fused(a, b, x0, tol, maxiter, params: P.MonitorParams,
                     init_tag: int = 1, guards: GuardParams | None = None,
                     flight: OF.FlightParams | None = None,
-                    return_ckpt: bool = False):
+                    return_ckpt: bool = False, resume=None, stop_at=None,
+                    return_state: bool = False):
     """Fused-path CG over a ``GSECSR`` operand (DESIGN.md §4).
 
     Same trajectory as ``_solve_cg`` with the GSE operator -- each
@@ -272,6 +286,9 @@ def _solve_cg_fused(a, b, x0, tol, maxiter, params: P.MonitorParams,
     sweep as the SpMV.  With guards or the flight recorder the step also
     surfaces the curvature ``p.Ap`` it already computed
     (``fused_cg_step_g``) -- the update arithmetic is unchanged either way.
+
+    ``resume``/``stop_at``/``return_state``: chunked execution hooks
+    (DESIGN.md §17), as in :func:`_solve_cg`.
     """
     from repro.solvers.fused_cg import fused_cg_step, fused_cg_step_g, gse_matvec
 
@@ -279,27 +296,31 @@ def _solve_cg_fused(a, b, x0, tol, maxiter, params: P.MonitorParams,
     bnorm = jnp.linalg.norm(b)
     bnorm = jnp.where(bnorm == 0, 1.0, bnorm)
 
-    mon = P.init(params, dtype=dtype, tag=init_tag)
-    r0 = b - gse_matvec(a, x0, mon.tag)
-    state = dict(
-        x=x0,
-        r=r0,
-        p=r0,
-        rs=jnp.vdot(r0, r0),
-        it=jnp.int32(0),
-        mon=mon,
-        switches=jnp.full((2,), -1, jnp.int32),
-    )
-
     def relres(s):
         return jnp.sqrt(jnp.abs(s["rs"])) / bnorm
 
-    state = _guarded_init(state, relres(state), guards)
-    state = _flight_init(state, flight, dtype)
+    if resume is not None:
+        state = resume
+    else:
+        mon = P.init(params, dtype=dtype, tag=init_tag)
+        r0 = b - gse_matvec(a, x0, mon.tag)
+        state = dict(
+            x=x0,
+            r=r0,
+            p=r0,
+            rs=jnp.vdot(r0, r0),
+            it=jnp.int32(0),
+            mon=mon,
+            switches=jnp.full((2,), -1, jnp.int32),
+        )
+        state = _guarded_init(state, relres(state), guards)
+        state = _flight_init(state, flight, dtype)
 
     def cond(s):
-        return _guarded_cond(s, (relres(s) > tol) & (s["it"] < maxiter),
-                             guards)
+        ok = (relres(s) > tol) & (s["it"] < maxiter)
+        if stop_at is not None:
+            ok = ok & (s["it"] < stop_at)
+        return _guarded_cond(s, ok, guards)
 
     def body(s):
         if guards is None and flight is None:
@@ -343,16 +364,19 @@ def _solve_cg_fused(a, b, x0, tol, maxiter, params: P.MonitorParams,
             flight=out.get("fl"),
         ),
     )
+    if return_state:
+        return res, ckpt, out
     return (res, ckpt) if return_ckpt else res
 
 
 @partial(jax.jit, static_argnames=("apply_a", "apply_m", "maxiter", "params",
                                    "init_tag", "guards", "flight",
-                                   "return_ckpt"))
+                                   "return_ckpt", "return_state"))
 def _solve_pcg(apply_a, apply_m, b, x0, tol, maxiter, params: P.MonitorParams,
                init_tag: int = 1, guards: GuardParams | None = None,
                flight: OF.FlightParams | None = None,
-               return_ckpt: bool = False):
+               return_ckpt: bool = False, resume=None, stop_at=None,
+               return_state: bool = False):
     """Preconditioned CG: ``z = M^{-1} r`` at the monitor's current tag.
 
     The recurrence runs on ``rz = r.z``; the monitor sees the plain
@@ -363,29 +387,33 @@ def _solve_pcg(apply_a, apply_m, b, x0, tol, maxiter, params: P.MonitorParams,
     bnorm = jnp.linalg.norm(b)
     bnorm = jnp.where(bnorm == 0, 1.0, bnorm)
 
-    mon = P.init(params, dtype=dtype, tag=init_tag)
-    r0 = b - apply_a(x0, mon.tag)
-    z0 = apply_m(r0, mon.tag)
-    state = dict(
-        x=x0,
-        r=r0,
-        p=z0,
-        rz=jnp.vdot(r0, z0),
-        rr=jnp.vdot(r0, r0),
-        it=jnp.int32(0),
-        mon=mon,
-        switches=jnp.full((2,), -1, jnp.int32),
-    )
-
     def relres(s):
         return jnp.sqrt(jnp.abs(s["rr"])) / bnorm
 
-    state = _guarded_init(state, relres(state), guards)
-    state = _flight_init(state, flight, dtype)
+    if resume is not None:
+        state = resume
+    else:
+        mon = P.init(params, dtype=dtype, tag=init_tag)
+        r0 = b - apply_a(x0, mon.tag)
+        z0 = apply_m(r0, mon.tag)
+        state = dict(
+            x=x0,
+            r=r0,
+            p=z0,
+            rz=jnp.vdot(r0, z0),
+            rr=jnp.vdot(r0, r0),
+            it=jnp.int32(0),
+            mon=mon,
+            switches=jnp.full((2,), -1, jnp.int32),
+        )
+        state = _guarded_init(state, relres(state), guards)
+        state = _flight_init(state, flight, dtype)
 
     def cond(s):
-        return _guarded_cond(s, (relres(s) > tol) & (s["it"] < maxiter),
-                             guards)
+        ok = (relres(s) > tol) & (s["it"] < maxiter)
+        if stop_at is not None:
+            ok = ok & (s["it"] < stop_at)
+        return _guarded_cond(s, ok, guards)
 
     def body(s):
         tag = s["mon"].tag
@@ -428,15 +456,18 @@ def _solve_pcg(apply_a, apply_m, b, x0, tol, maxiter, params: P.MonitorParams,
             flight=out.get("fl"),
         ),
     )
+    if return_state:
+        return res, ckpt, out
     return (res, ckpt) if return_ckpt else res
 
 
 @partial(jax.jit, static_argnames=("maxiter", "params", "init_tag", "guards",
-                                   "flight", "return_ckpt"))
+                                   "flight", "return_ckpt", "return_state"))
 def _solve_pcg_fused(a, m, b, x0, tol, maxiter, params: P.MonitorParams,
                      init_tag: int = 1, guards: GuardParams | None = None,
                      flight: OF.FlightParams | None = None,
-                     return_ckpt: bool = False):
+                     return_ckpt: bool = False, resume=None, stop_at=None,
+                     return_state: bool = False):
     """Fused-path PCG over a ``GSECSR`` operand and a pytree preconditioner.
 
     Each iteration is one ``fused_pcg_step``: operator decode and
@@ -450,29 +481,33 @@ def _solve_pcg_fused(a, m, b, x0, tol, maxiter, params: P.MonitorParams,
     bnorm = jnp.linalg.norm(b)
     bnorm = jnp.where(bnorm == 0, 1.0, bnorm)
 
-    mon = P.init(params, dtype=dtype, tag=init_tag)
-    r0 = b - gse_matvec(a, x0, mon.tag)
-    z0 = m.apply(r0, mon.tag)
-    state = dict(
-        x=x0,
-        r=r0,
-        p=z0,
-        rz=jnp.vdot(r0, z0),
-        rr=jnp.vdot(r0, r0),
-        it=jnp.int32(0),
-        mon=mon,
-        switches=jnp.full((2,), -1, jnp.int32),
-    )
-
     def relres(s):
         return jnp.sqrt(jnp.abs(s["rr"])) / bnorm
 
-    state = _guarded_init(state, relres(state), guards)
-    state = _flight_init(state, flight, dtype)
+    if resume is not None:
+        state = resume
+    else:
+        mon = P.init(params, dtype=dtype, tag=init_tag)
+        r0 = b - gse_matvec(a, x0, mon.tag)
+        z0 = m.apply(r0, mon.tag)
+        state = dict(
+            x=x0,
+            r=r0,
+            p=z0,
+            rz=jnp.vdot(r0, z0),
+            rr=jnp.vdot(r0, r0),
+            it=jnp.int32(0),
+            mon=mon,
+            switches=jnp.full((2,), -1, jnp.int32),
+        )
+        state = _guarded_init(state, relres(state), guards)
+        state = _flight_init(state, flight, dtype)
 
     def cond(s):
-        return _guarded_cond(s, (relres(s) > tol) & (s["it"] < maxiter),
-                             guards)
+        ok = (relres(s) > tol) & (s["it"] < maxiter)
+        if stop_at is not None:
+            ok = ok & (s["it"] < stop_at)
+        return _guarded_cond(s, ok, guards)
 
     def body(s):
         if guards is None and flight is None:
@@ -516,6 +551,8 @@ def _solve_pcg_fused(a, m, b, x0, tol, maxiter, params: P.MonitorParams,
             flight=out.get("fl"),
         ),
     )
+    if return_state:
+        return res, ckpt, out
     return (res, ckpt) if return_ckpt else res
 
 

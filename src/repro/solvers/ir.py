@@ -42,6 +42,12 @@ from repro.solvers.gmres import solve_gmres
 
 __all__ = ["IRResult", "solve_ir"]
 
+# NOTE: the serve layer (repro.serve.chunked) drives the same refinement
+# loop one correction at a time via the private _ir_setup/_ir_step/
+# _ir_result helpers below; solve_ir and the chunked driver share every
+# line of per-correction arithmetic, so re-cutting the host loop at
+# correction boundaries cannot perturb the trajectory.
+
 
 class IRResult(NamedTuple):
     x: jnp.ndarray
@@ -90,6 +96,26 @@ def solve_ir(
     inner solve; a non-finite correction is never folded into ``x`` and
     the report's ``health`` names the failing stage.
     """
+    st = _ir_setup(apply_a, b, tol=tol, max_outer=max_outer, inner=inner,
+                   inner_tol=inner_tol, inner_maxiter=inner_maxiter,
+                   params=params, precond=precond, restart=restart,
+                   wire=wire, guards=guards, flight=flight)
+    with OT.span("solve.ir", n=int(b.shape[0]), tol=float(tol), inner=inner):
+        while _ir_active(st):
+            _ir_step(st)
+    return _ir_result(st)
+
+
+def _ir_setup(apply_a, b, *, tol, max_outer, inner, inner_tol, inner_maxiter,
+              params, precond, restart, wire, guards, flight) -> dict:
+    """Build the host-side refinement state for ``solve_ir``/chunked IR.
+
+    Returns a mutable dict advanced one correction at a time by
+    ``_ir_step``; ``_ir_active`` is the loop condition and ``_ir_result``
+    materializes the final ``IRResult``.  The dict is host state (Python
+    scalars + device arrays), not a pytree -- checkpointing extracts the
+    array leaves explicitly (``repro.serve.chunked``).
+    """
     if params is None:
         params = (P.MonitorParams.for_cg() if inner == "cg"
                   else P.MonitorParams.for_gmres())
@@ -119,61 +145,87 @@ def solve_ir(
     bnorm = bnorm if bnorm != 0 else 1.0
 
     x = jnp.zeros_like(b)
-    total_inner = 0
-    outer = 0
     # One tag-3 residual per correction: r doubles as convergence check
     # and next inner right-hand side (the module's whole point is to
     # minimize full-precision reads).
     r = b - apply3(x)
     relres = float(jnp.linalg.norm(r)) / bnorm
-    history = [relres]
-    inner_health = HEALTH_OK
-    flights = [] if flight is not None else None
-    with OT.span("solve.ir", n=int(b.shape[0]), tol=float(tol), inner=inner):
-        while relres > tol and np.isfinite(relres) and outer < max_outer:
-            if inner == "cg":
-                if precond is not None:
-                    res = solve_pcg(apply_a, r, precond, tol=inner_tol,
-                                    maxiter=inner_maxiter, params=params,
-                                    guards=guards, flight=flight)
-                else:
-                    res = solve_cg(apply_a, r, tol=inner_tol,
-                                   maxiter=inner_maxiter, params=params,
-                                   guards=guards, flight=flight)
-            else:
-                res = solve_gmres(apply_tagged, r, tol=inner_tol,
-                                  restart=restart, maxiter=inner_maxiter,
-                                  params=params, precond=precond,
-                                  guards=guards, flight=flight)
-            inner_health = int(getattr(res, "health", HEALTH_OK))
-            total_inner += int(res.iters)
-            if flights is not None and res.flight is not None:
-                flights.append(res.flight)
-            if not bool(jnp.isfinite(jnp.vdot(res.x, res.x))):
-                break  # never fold a non-finite correction into x
-            x = x + res.x          # full-precision correction
-            outer += 1
-            r = b - apply3(x)      # tag-3 residual: the one-copy high read
-            relres = float(jnp.linalg.norm(r)) / bnorm
-            history.append(relres)
-            if not bool(res.converged) and int(res.iters) == 0:
-                break  # inner solver made no progress; avoid spinning
-    converged = relres <= tol
+    return dict(
+        apply_a=apply_a, apply_tagged=apply_tagged, apply3=apply3,
+        b=b, bnorm=bnorm, tol=tol, max_outer=max_outer, inner=inner,
+        inner_tol=inner_tol, inner_maxiter=inner_maxiter, params=params,
+        precond=precond, restart=restart, guards=guards, flight=flight,
+        x=x, r=r, relres=relres, history=[relres], total_inner=0, outer=0,
+        inner_health=HEALTH_OK, stopped=False,
+        flights=[] if flight is not None else None,
+    )
+
+
+def _ir_active(st: dict) -> bool:
+    """True while another correction step would run (solve_ir loop cond)."""
+    return (not st["stopped"] and st["relres"] > st["tol"]
+            and np.isfinite(st["relres"]) and st["outer"] < st["max_outer"])
+
+
+def _ir_step(st: dict) -> dict:
+    """One outer correction: inner solve at stepped precision, fold, re-residual.
+
+    Exactly the body of the original ``solve_ir`` while-loop; ``stopped``
+    records the early breaks (non-finite correction, zero-progress inner)
+    so a re-cut host loop stops at the same correction.
+    """
+    if st["inner"] == "cg":
+        if st["precond"] is not None:
+            res = solve_pcg(st["apply_a"], st["r"], st["precond"],
+                            tol=st["inner_tol"], maxiter=st["inner_maxiter"],
+                            params=st["params"], guards=st["guards"],
+                            flight=st["flight"])
+        else:
+            res = solve_cg(st["apply_a"], st["r"], tol=st["inner_tol"],
+                           maxiter=st["inner_maxiter"], params=st["params"],
+                           guards=st["guards"], flight=st["flight"])
+    else:
+        res = solve_gmres(st["apply_tagged"], st["r"], tol=st["inner_tol"],
+                          restart=st["restart"], maxiter=st["inner_maxiter"],
+                          params=st["params"], precond=st["precond"],
+                          guards=st["guards"], flight=st["flight"])
+    st["inner_health"] = int(getattr(res, "health", HEALTH_OK))
+    st["total_inner"] += int(res.iters)
+    if st["flights"] is not None and res.flight is not None:
+        st["flights"].append(res.flight)
+    if not bool(jnp.isfinite(jnp.vdot(res.x, res.x))):
+        st["stopped"] = True  # never fold a non-finite correction into x
+        return st
+    st["x"] = st["x"] + res.x      # full-precision correction
+    st["outer"] += 1
+    # Tag-3 residual: the one-copy high read.
+    st["r"] = st["b"] - st["apply3"](st["x"])
+    st["relres"] = float(jnp.linalg.norm(st["r"])) / st["bnorm"]
+    st["history"].append(st["relres"])
+    if not bool(res.converged) and int(res.iters) == 0:
+        st["stopped"] = True  # inner made no progress; avoid spinning
+    return st
+
+
+def _ir_result(st: dict) -> IRResult:
+    """Materialize the final report from the host refinement state."""
+    relres = st["relres"]
+    converged = relres <= st["tol"]
     if converged:
         health = HEALTH_OK
     elif not np.isfinite(relres):
         health = HEALTH_NONFINITE
-    elif inner_health != HEALTH_OK:
-        health = inner_health
+    elif st["inner_health"] != HEALTH_OK:
+        health = st["inner_health"]
     else:
         health = HEALTH_STALLED
     return IRResult(
-        x=x,
-        outer_iters=outer,
-        inner_iters=total_inner,
+        x=st["x"],
+        outer_iters=st["outer"],
+        inner_iters=st["total_inner"],
         relres=relres,
         converged=converged,
-        history=np.asarray(history),
+        history=np.asarray(st["history"]),
         health=health,
-        flight=flights,
+        flight=st["flights"],
     )

@@ -1,0 +1,134 @@
+"""Adaptive per-group precision sweep (DESIGN.md §18) -> BENCH_adaptive.json.
+
+Two generators where a uniform tag schedule is provably wasteful, each
+solved three ways:
+
+  * ``ill_conditioned_spd(16, decades=8.0)`` -- a handful of row groups
+    carry the extreme diagonal decades; tag-1's decode floor blocks the
+    TRUE residual at ~1.1x the 2e-3 tolerance while tag-2 streams 30%
+    more bytes than necessary for every row.  The adaptive driver
+    (default explore profile) runs cheap, measures which groups' decode
+    floor dominates, and promotes exactly those.
+  * ``diag_rescale(skewed_spd(n=1024), 6.0)`` -- power-law rows + dense
+    hubs with 6 decades of diagonal skew.  Here the upfront Neumann
+    probe profile plans the map before iterating: the hub groups land at
+    tag 2, the power-law tail stays at tag 1.
+
+For every case the uniform baselines pin the monitor (``max_tag=t`` +
+``tags=t``: no stepping, a pure tag-t schedule), charge
+``(iters+1) * bytes_touched(t)`` plus one tag-3 pass for the final true
+check, and a baseline only qualifies if its TRUE tag-3 residual meets
+the tolerance.  The adaptive run bills its own ``spmv_bytes`` counter
+(every segment at the blended map rate + every billed true check at
+tag 3).  The gate in run.py: adaptive converged at equal-or-better true
+residual with STRICTLY fewer bytes than the best qualifying uniform
+schedule, on both generators.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks import common  # noqa: F401  (enables x64 before jax use)
+
+
+def _spike_rhs(m: int, k: int = 4, seed: int = 7) -> np.ndarray:
+    """k unit spikes at rng-chosen rows: localized, exercises the skew."""
+    b = np.zeros(m)
+    b[np.random.default_rng(seed).choice(m, k, replace=False)] = 1.0
+    return b
+
+
+def _uniform_case(g, b, tag: int, tol: float, maxiter: int,
+                  params) -> dict:
+    """Pinned uniform tag-``tag`` CG: the schedule the map competes with."""
+    import jax.numpy as jnp
+
+    from repro.solvers.cg import solve_cg
+    from repro.sparse.spmv import spmv_gse
+
+    r = solve_cg(g, b, tol=tol, maxiter=maxiter,
+                 params=dataclasses.replace(params, max_tag=tag), tags=tag)
+    bn = float(jnp.linalg.norm(b))
+    true = float(jnp.linalg.norm(b - spmv_gse(g, r.x, tag=3))) / bn
+    by = (int(r.iters) + 1) * g.bytes_touched(tag) + g.bytes_touched(3)
+    return {
+        "tag": tag,
+        "iters": int(r.iters),
+        "true_relres": true,
+        "bytes": int(by),
+        "meets_tol": bool(true <= tol),
+    }
+
+
+def _adaptive_case(g, b, tol: float, maxiter: int, profile: str) -> dict:
+    from repro.solvers.adaptive import solve_adaptive
+
+    res = solve_adaptive(g, b, tol=tol, maxiter=maxiter, profile=profile)
+    counts = {int(t): int(c) for t, c in res.tagmap.tag_counts().items()
+              if c}
+    return {
+        "profile": profile,
+        "iters": int(res.iters),
+        "true_relres": float(res.true_relres),
+        "bytes": int(res.spmv_bytes),
+        "converged": bool(res.converged),
+        "tag_counts": counts,
+        "max_tag": int(res.tagmap.max_tag),
+        "promotions": len(res.promotions),
+        "chunks": int(res.chunks),
+    }
+
+
+def _case(name: str, g, b, tol: float, maxiter: int, profile: str,
+          params) -> dict:
+    uniform = [_uniform_case(g, b, t, tol, maxiter, params)
+               for t in (1, 2, 3)]
+    adaptive = _adaptive_case(g, b, tol, maxiter, profile)
+    qualifying = [u["bytes"] for u in uniform if u["meets_tol"]]
+    best_uniform = min(qualifying) if qualifying else None
+    savings = (1.0 - adaptive["bytes"] / best_uniform
+               if best_uniform else None)
+    out = {
+        "matrix": name,
+        "n": int(g.shape[0]),
+        "tol": tol,
+        "maxiter": maxiter,
+        "uniform": uniform,
+        "adaptive": adaptive,
+        "best_uniform_bytes": best_uniform,
+        "savings_frac": savings,
+    }
+    pct = f"{100 * savings:.1f}%" if savings is not None else "n/a"
+    print(f"adaptive_{name},0.0,bytes={adaptive['bytes']} "
+          f"best_uniform={best_uniform} savings={pct}")
+    return out
+
+
+def run(quick: bool = True) -> dict:
+    """Both gated generators; ``quick`` is accepted for harness symmetry
+    (the cases ARE the smoke -- the gate needs both)."""
+    import jax.numpy as jnp
+
+    from repro.core.precision import MonitorParams
+    from repro.sparse import generators as G
+    from repro.sparse.csr import pack_csr
+
+    params = MonitorParams.for_cg()
+    results = {}
+
+    ill = G.ill_conditioned_spd(16, decades=8.0, seed=0)
+    gi = pack_csr(ill, k=8)
+    bi = jnp.asarray(_spike_rhs(int(gi.shape[0])))
+    results["illcond"] = _case("ill_conditioned_spd_256", gi, bi,
+                               tol=2e-3, maxiter=4000, profile="explore",
+                               params=params)
+
+    sk = G.diag_rescale(G.skewed_spd(n=1024), 6.0, 11)
+    gs = pack_csr(sk, k=8)
+    bs = jnp.asarray(_spike_rhs(int(gs.shape[0])))
+    results["skewed"] = _case("skewed_spd_1024_rescaled", gs, bs,
+                              tol=1e-3, maxiter=1500, profile="neumann",
+                              params=params)
+    return results

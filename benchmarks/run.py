@@ -66,6 +66,14 @@ flight+span overhead ratio, and trace schema validity.  The serve-replay
 section reports p50/p95/p99 flush latency and bytes/request straight
 from the metrics registry.  Forces two host CPU devices (for the sharded
 identity case) when XLA_FLAGS is unset.  Composes with ``--quick``.
+
+``--adaptive`` runs the per-group precision sweep
+(benchmarks/adaptive_bench.py, DESIGN.md section 18) and writes
+``BENCH_adaptive.json``: on the ill-conditioned and skewed generators,
+uniform pinned tag-{1,2,3} CG baselines vs the data-driven TagMap
+schedule from ``solve_adaptive``.  Gates the adaptive run to an
+equal-or-better TRUE (tag-3) residual with STRICTLY fewer streamed
+bytes than the best uniform schedule that meets tolerance.
 """
 from __future__ import annotations
 
@@ -494,6 +502,65 @@ def run_obs(quick: bool, out_path: pathlib.Path | None = None,
     return payload
 
 
+def run_adaptive(quick: bool, out_path: pathlib.Path | None = None) -> dict:
+    """Adaptive per-group precision sweep -> BENCH_adaptive.json (§18).
+
+    Runs ``benchmarks/adaptive_bench.py``: on the ill-conditioned and
+    skewed generators, the data-driven per-group tag map must reach an
+    equal-or-better TRUE (tag-3) residual with STRICTLY fewer total
+    streamed bytes than the best uniform-tag schedule that meets the
+    same tolerance.  Uniform baselines pin the monitor (``max_tag=t`` +
+    ``tags=t``) and are charged ``(iters+1) * bytes_touched(t)`` plus
+    one tag-3 true-residual pass; the adaptive run bills its own
+    ``spmv_bytes`` counter (blended segments + billed true checks).
+    The JSON is written BEFORE the gates raise so a failing run still
+    uploads diagnostics.
+    """
+    from benchmarks import adaptive_bench
+
+    results = adaptive_bench.run(quick=quick)
+    payload = {
+        "bench": "adaptive_tagmap",
+        "schema": "case -> {uniform: [{tag, iters, true_relres, bytes, "
+                  "meets_tol}], adaptive: {profile, iters, true_relres, "
+                  "bytes, tag_counts, promotions, chunks}, "
+                  "best_uniform_bytes, savings_frac} (DESIGN.md "
+                  "section 18)",
+        "results": results,
+    }
+    _write_payload(payload, out_path or (_REPO_ROOT / "BENCH_adaptive.json"))
+
+    for name, case in results.items():
+        ad = case["adaptive"]
+        if not ad["converged"]:
+            raise SystemExit(
+                f"adaptive sweep: {name} adaptive solve did not converge "
+                f"(true relres {ad['true_relres']:.3e})"
+            )
+        if ad["true_relres"] > case["tol"]:
+            raise SystemExit(
+                f"adaptive sweep: {name} adaptive TRUE residual "
+                f"{ad['true_relres']:.3e} misses tol {case['tol']:g}"
+            )
+        best = case["best_uniform_bytes"]
+        if best is None:
+            raise SystemExit(
+                f"adaptive sweep: {name} has no qualifying uniform "
+                "baseline (every pinned tag missed tolerance)"
+            )
+        if not ad["bytes"] < best:
+            raise SystemExit(
+                f"adaptive sweep: {name} adaptive bytes {ad['bytes']} not "
+                f"strictly < best uniform {best}"
+            )
+        print(
+            f"adaptive sweep: {name} saves "
+            f"{100 * case['savings_frac']:.1f}% bytes vs best uniform "
+            f"(map {ad['tag_counts']})", file=sys.stderr,
+        )
+    return payload
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -547,6 +614,13 @@ def main() -> None:
                          "ratio, and trace schema validity (DESIGN.md "
                          "section 16; forces 2 host CPU devices if "
                          "XLA_FLAGS is unset)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="adaptive per-group precision sweep -> "
+                         "BENCH_adaptive.json, gating the data-driven "
+                         "tag map to equal-or-better TRUE residual with "
+                         "strictly fewer streamed bytes than the best "
+                         "uniform-tag schedule on the ill-conditioned "
+                         "and skewed generators (DESIGN.md section 18)")
     args = ap.parse_args()
     if args.quick and args.only:
         ap.error("--quick and --only are mutually exclusive")
@@ -571,6 +645,11 @@ def main() -> None:
                        or args.shards > 1 or args.nrhs > 1 or args.only):
         ap.error("--serve is its own sweep: drop "
                  "--robust/--tune/--obs/--shards/--nrhs/--only")
+    if args.adaptive and (args.robust or args.tune or args.obs
+                          or args.serve or args.shards > 1
+                          or args.nrhs > 1 or args.only):
+        ap.error("--adaptive is its own sweep: drop "
+                 "--robust/--tune/--obs/--serve/--shards/--nrhs/--only")
     force_devices = args.shards if args.shards > 1 else (
         2 if args.robust or args.obs or args.serve else 0)
     if force_devices and "xla_force_host_platform_device_count" not in (
@@ -584,6 +663,9 @@ def main() -> None:
         ).strip()
 
     print("name,us_per_call,derived")
+    if args.adaptive:
+        run_adaptive(quick=args.quick)
+        return
     if args.serve:
         run_serve(quick=args.quick)
         return

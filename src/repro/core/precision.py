@@ -29,8 +29,14 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-__all__ = ["MonitorParams", "MonitorState", "init", "record", "metrics", "update_tag"]
+from repro.core.tagmap import GROUP_SIZE, TagMap
+
+__all__ = ["MonitorParams", "MonitorState", "init", "record", "metrics",
+           "update_tag", "group_sensitivity", "decode_error_scores",
+           "map_floor_contrib", "plan_tagmap", "promote_groups",
+           "stalled"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -152,3 +158,159 @@ def update_tag(state: MonitorState, params: MonitorParams) -> MonitorState:
     step = due & (c1 | c2 | c3)
     new_tag = jnp.where(step, state.tag + 1, state.tag)
     return MonitorState(hist=state.hist, count=state.count, tag=new_tag)
+
+
+# -- per-group sensitivity and promotion (PR 10, DESIGN.md §18) -----------
+
+def group_sensitivity(g, group_size: int = GROUP_SIZE) -> np.ndarray:
+    """Per-row-group sensitivity scores from the PACKED magnitudes.
+
+    A low-tag solve plateaus at a true residual ~ ``||(A~ - A) x~||``;
+    the decode error is RELATIVE, so the plateau is dominated by the
+    largest-magnitude entries.  Carson-Khan's adaptive SPAI (arXiv
+    2307.03914) stores entries at precision proportional to magnitude for
+    exactly this reason -- the groups holding the biggest entries are the
+    ones limiting convergence, and promoting them first buys the most
+    plateau for the fewest bytes.
+
+    The score is the max head-only decoded |value| in each group of
+    ``group_size`` rows, computed straight from the packed segments
+    (head mantissa x shared-exponent scale; no unpack, no tails -- tails
+    only refine magnitude below the 15th bit).  Returns an
+    ``(n_groups,)`` f64 array aligned with ``TagMap.tags``.
+    """
+    head = np.asarray(g.head).astype(np.uint32)
+    mant = (head & 0x7FFF).astype(np.float64)
+    exp_idx = (np.asarray(g.colpak).astype(np.uint64)
+               >> np.uint64(32 - g.ei_bit)).astype(np.int64)
+    e_sh = np.asarray(g.table, np.int64)[exp_idx] - 1023
+    mag = np.ldexp(mant, e_sh - 15)  # |head-only decode|, exact
+    groups = np.asarray(g.row_ids, np.int64) // group_size
+    n_groups = -(-int(g.shape[0]) // group_size)
+    score = np.zeros(n_groups, np.float64)
+    np.maximum.at(score, groups, mag)
+    return score
+
+
+def decode_error_scores(g, xhat, group_size: int = GROUP_SIZE) -> np.ndarray:
+    """Per-group squared floor contributions at candidate tags 1 and 2.
+
+    A tag-``t`` solve converges (recursively) against the perturbed
+    operator ``A~_t`` and plateaus at a TRUE residual
+    ``||(A~_t - A) x*|| / ||b||``.  Writing ``E_t = A~_t - A``, the
+    plateau decomposes over columns: ``||E_t x*||^2 <= sum_j
+    (||E_t[:, j]|| |x*_j|)^2``, and promoting a COLUMN group to tag 3
+    zeroes its columns' share exactly (the symmetric induced entry tag
+    also zeroes the transposed row-side entries -- free extra margin the
+    model conservatively ignores).  The returned ``(2, n_groups)`` array
+    holds, per group ``g``, ``sum_{entries e: col(e) in g}
+    ((v_t(e) - v3(e)) * xhat[col(e)])^2`` for ``t = 1`` (row 0) and
+    ``t = 2`` (row 1); tag 3 contributes 0 by construction.  ``xhat``
+    is a per-row solution-magnitude proxy (see ``solvers.adaptive``'s
+    preconditioned probe); scores are exact decode errors straight from
+    the packed segments.
+    """
+    from repro.kernels import ref
+
+    xh = np.abs(np.asarray(xhat, np.float64)).reshape(-1)
+    cols = (np.asarray(g.colpak, np.uint32)
+            & np.uint32((1 << (32 - g.ei_bit)) - 1)).astype(np.int64)
+    v3 = np.asarray(ref.decode_csr_ref(g.colpak, g.head, g.tail1, g.tail2,
+                                       g.table, g.ei_bit, 3), np.float64)
+    n_groups = -(-int(g.shape[0]) // group_size)
+    gc = np.minimum(cols // group_size, n_groups - 1)
+    scores = np.zeros((2, n_groups), np.float64)
+    for k, t in enumerate((1, 2)):
+        vt = np.asarray(ref.decode_csr_ref(g.colpak, g.head, g.tail1,
+                                           g.tail2, g.table, g.ei_bit, t),
+                        np.float64)
+        c = (vt - v3) * xh[cols]
+        np.add.at(scores[k], gc, c * c)
+    return scores
+
+
+def map_floor_contrib(scores: np.ndarray, tags: np.ndarray) -> np.ndarray:
+    """Per-group floor contribution of a map under ``decode_error_scores``:
+    ``scores[tag-1, g]`` for tags 1/2, exactly 0 for tag-3 groups."""
+    tags = np.asarray(tags)
+    cur = np.zeros(scores.shape[1], np.float64)
+    for t in (1, 2):
+        sel = tags == t
+        cur[sel] = scores[t - 1][sel]
+    return cur
+
+
+def plan_tagmap(scores: np.ndarray, budget: float, tags0=None,
+                group_size: int = GROUP_SIZE) -> TagMap:
+    """Greedy budget descent over :func:`decode_error_scores`.
+
+    Starting from all-tag-1 (or ``tags0``), repeatedly promote the group
+    with the LARGEST current floor contribution one rung until the
+    predicted floor ``sqrt(sum_g contrib_g)`` fits inside ``budget``
+    (an absolute residual-norm budget, e.g. ``theta * tol * ||b||``).
+    The sum is recomputed from scratch each step -- incremental
+    subtraction leaves FP rounding residue that can keep a fully
+    promoted (provably zero-floor) map "over budget" forever.
+    """
+    G = np.asarray(scores, np.float64)
+    ng = G.shape[1]
+    if tags0 is None:
+        tags = np.ones(ng, np.uint8)
+    else:
+        src = tags0.tags if isinstance(tags0, TagMap) else tags0
+        tags = np.asarray(src, np.uint8).copy()
+        if tags.shape[0] != ng:
+            raise ValueError(f"{tags.shape[0]} seed tags for {ng} groups")
+    b2 = float(budget) ** 2
+    cur = map_floor_contrib(G, tags)
+    while cur.sum() > b2:
+        open_ = tags < 3
+        if not open_.any():
+            break
+        idx = int(np.argmax(np.where(open_, cur, -np.inf)))
+        tags[idx] += 1
+        cur = map_floor_contrib(G, tags)
+    return TagMap(tags, group_size)
+
+
+def promote_groups(tm: TagMap, scores: np.ndarray, frac: float = 0.25,
+                   step: int = 1) -> TagMap:
+    """Promote the top-``frac`` highest-sensitivity UNSATURATED groups.
+
+    The per-group twin of :func:`update_tag`'s whole-operator step: when
+    the monitor (or the host driver's stall check) says the current
+    precision is limiting convergence, only the groups most responsible
+    -- highest :func:`group_sensitivity` score, tag < 3 -- step up.
+    Returns a NEW map (at least one group promotes if any is
+    unsaturated, so escalation always makes progress).
+    """
+    scores = np.asarray(scores, np.float64)
+    if scores.shape[0] != tm.n_groups:
+        raise ValueError(
+            f"{scores.shape[0]} scores for {tm.n_groups} groups"
+        )
+    open_idx = np.nonzero(tm.tags < 3)[0]
+    if open_idx.size == 0:
+        return tm
+    n = max(1, int(round(frac * tm.n_groups)))
+    n = min(n, open_idx.size)
+    top = open_idx[np.argsort(-scores[open_idx], kind="stable")[:n]]
+    return tm.promoted(top, step=step)
+
+
+def stalled(prev_relres: float, relres: float, iters: int,
+            reldec_limit: float = 0.45) -> bool:
+    """Host-side chunk-granularity stall test: the driver's mirror of
+    condition C2 (decreasing, but too slowly).
+
+    ``prev_relres`` -> ``relres`` over ``iters`` iterations is a stall
+    when the per-chunk relative decrease misses ``reldec_limit`` --
+    including the non-finite and non-decreasing cases C1/C3 subsume.
+    """
+    if iters <= 0:
+        return False
+    if not np.isfinite(relres):
+        return True
+    if not np.isfinite(prev_relres) or prev_relres <= 0:
+        return False
+    return (prev_relres - relres) / prev_relres < reldec_limit

@@ -29,14 +29,43 @@ __all__ = [
     "WIRE_ENTRY_BYTES",
     "DTYPE_BYTES",
     "TAGS",
+    "TAG_SEGMENTS",
+    "SEGMENT_BYTES",
+    "TAG_BITS_USED",
+    "tag_operand_names",
 ]
 
 # GSE tags in escalation order (head-only -> +tail1 -> +tail2).
 TAGS = (1, 2, 3)
 
+# Segment-array bytes per entry: u16 head, u16 tail1, u32 tail2.
+SEGMENT_BYTES = {"head": 2, "tail1": 2, "tail2": 4}
+
+# The tail segment arrays each tag streams BEYOND the always-read head.
+# This is the one table the tag-specialized kernel operand lists, the
+# SELL bucket tuples, and the byte models all derive from; before PR 10
+# it was re-declared inline in gse_spmv.py, gse_spmm.py, and perf/ledger.
+TAG_SEGMENTS = {1: (), 2: ("tail1",), 3: ("tail1", "tail2")}
+
+# Mantissa bits a decode at each tag consumes from the 15-bit head plus
+# the 16-bit tail1 / 32-bit tail2 splices: 15 / 31 / 63.  The dense
+# GSEPacked path offsets these by the expIdx bits stolen from the head
+# (``m_h = 15 - ei_bit``); the sparse path keeps all 15 head bits because
+# expIdx rides colpak instead.
+TAG_BITS_USED = {t: 15 + sum(8 * SEGMENT_BYTES[s] for s in TAG_SEGMENTS[t])
+                 for t in TAGS}
+
 # Value-segment bytes ONE matrix entry (or one wire x-entry) costs at each
-# tag: u16 head / +u16 tail1 / +u32 tail2.
-TAG_VALUE_BYTES = {1: 2, 2: 4, 3: 8}
+# tag -- head + the tails TAG_SEGMENTS says that tag reads: 2 / 4 / 8.
+TAG_VALUE_BYTES = {
+    t: SEGMENT_BYTES["head"] + sum(SEGMENT_BYTES[s] for s in TAG_SEGMENTS[t])
+    for t in TAGS
+}
+
+
+def tag_operand_names(tag: int) -> tuple:
+    """The pallas_call operand list the tag-specialized kernels stream."""
+    return ("scales", "colpak", "head") + TAG_SEGMENTS[tag] + ("x",)
 
 # Every stored entry also streams one packed u32 column index (expIdx in
 # the top EI_BIT bits, column in the rest).

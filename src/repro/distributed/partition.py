@@ -49,6 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import precision_table
+from repro.core.tagmap import TagMap, normalize_tags
 from repro.sparse.csr import (
     _SLOT_BYTES,
     GSECSR,
@@ -134,12 +135,66 @@ class PartitionedGSECSR:
         # value segment + packed colidx per nnz (csr._SLOT_BYTES).
         return _SLOT_BYTES[tag]
 
-    def shard_stream_bytes(self, tag: int) -> Tuple[int, ...]:
+    def _global_entries(self):
+        """Per-shard (global_rows, global_cols) of the REAL entries, int64.
+
+        Reconstructed once from the local blocks (the inverse of the
+        column remap, same walk as :func:`unshard`) and memoized -- the
+        per-group byte model needs global coordinates to induce entry
+        tags."""
+        cached = self.__dict__.get("_global_entries_memo")
+        if cached is not None:
+            return cached
+        ei = self.ei_bit
+        shift = np.uint32(32 - ei)
+        r_blk = self.rows_per_shard
+        s_colpak = np.asarray(self.colpak)
+        s_rows = np.asarray(self.row_ids)
+        halo = np.asarray(self.halo_idx)
+        bnd = np.asarray(self.bnd_idx)
+        out = []
+        for i in range(self.n_shards):
+            nz = self.nnz_per_shard[i]
+            loc = (s_colpak[i, :nz]
+                   & np.uint32((1 << (32 - ei)) - 1)).astype(np.int64)
+            is_halo = loc >= r_blk
+            pool = halo[i]
+            owners = pool // max(self.bnd_width, 1)
+            owner_slot = pool % max(self.bnd_width, 1)
+            halo_global = (owners * r_blk + bnd[owners, owner_slot]
+                           if pool.size else np.zeros(0, np.int64))
+            gcol = np.where(
+                is_halo,
+                halo_global[np.clip(loc - r_blk, 0, None)]
+                if pool.size else 0,
+                loc + i * r_blk,
+            )
+            grow = s_rows[i, :nz].astype(np.int64) + i * r_blk
+            out.append((grow, gcol))
+        self.__dict__["_global_entries_memo"] = out
+        return out
+
+    def shard_stream_bytes(self, tag) -> Tuple[int, ...]:
         """Modeled HBM bytes EACH shard streams for its matrix block in one
         tag-``tag`` SpMV: real nnz at the tag's segment bytes + packed
         colidx, plus the shard's slice of the rowptr stream.  Real (not
         padded) extents are charged so the shards sum exactly to the
-        single-device figure."""
+        single-device figure.
+
+        ``tag`` may be a per-group :class:`~repro.core.tagmap.TagMap`:
+        each entry is then charged at its SYMMETRIC induced tag (max of
+        row/column group tags, global coordinates -- the same blend as
+        ``GSECSR.bytes_touched(tagmap)``, so the redistribution identity
+        still holds exactly)."""
+        tag = normalize_tags(tag)
+        if isinstance(tag, TagMap):
+            per = np.array([0] + [_SLOT_BYTES[t] for t in (1, 2, 3)],
+                           np.int64)
+            return tuple(
+                int(per[tag.entry_tags(grow, gcol)].sum()) + rr * 4
+                for (grow, gcol), rr in zip(self._global_entries(),
+                                            self.rows_real)
+            )
         return tuple(
             nz * self.bytes_per_nnz(tag) + rr * 4
             for nz, rr in zip(self.nnz_per_shard, self.rows_real)
@@ -151,7 +206,31 @@ class PartitionedGSECSR:
         once -- it is the same single-device stream redistributed)."""
         return 4 + int(self.table.size) * 4
 
-    def halo_wire_bytes(self, tag: int, wire: str = "exact",
+    def bnd_slot_tags(self, tags) -> np.ndarray:
+        """(s, B) uint8 per-slot wire tags under a tag map.
+
+        A boundary x-entry belongs to ONE row group (the row-only
+        ``entry_tags`` form -- vector streams have no column partner), so
+        each real slot carries its entry's group tag; padded slots
+        (``bnd_idx == -1``) carry the map's MAX tag -- they ride the
+        payload anyway and are charged honestly, like the SELL padding
+        account.  Feed the shard's row to ``wire.halo_all_gather``'s
+        ``slot_tags`` so tag-1 slots drop their tail segment on the wire.
+        """
+        tm = normalize_tags(tags)
+        if not isinstance(tm, TagMap):
+            return np.full((self.n_shards, self.bnd_width), tm, np.uint8)
+        bnd = np.asarray(self.bnd_idx)
+        out = np.full(bnd.shape, tm.max_tag, np.uint8)
+        for i in range(self.n_shards):
+            real = bnd[i] >= 0
+            if real.any():
+                gcol = bnd[i][real].astype(np.int64) \
+                    + i * self.rows_per_shard
+                out[i, real] = tm.entry_tags(gcol)
+        return out
+
+    def halo_wire_bytes(self, tag, wire: str = "exact",
                         nrhs: int = 1) -> int:
         """Modeled interconnect bytes ONE distributed SpMV/SpMM moves.
 
@@ -172,6 +251,20 @@ class PartitionedGSECSR:
         if self.n_shards == 1 or self.bnd_width == 0:
             return 0  # nothing remote: no collective at all
         s, b = self.n_shards, self.bnd_width
+        tag = normalize_tags(tag)
+        if isinstance(tag, TagMap):
+            if wire == "exact":
+                return (s - 1) * s * b * 8 * nrhs
+            # Blended per-slot wire: each slot at its own group's entry
+            # bytes; a shard's shared-exponent table rides only if ANY of
+            # its slots ships a head-segmented (tag 1/2) payload.
+            st = self.bnd_slot_tags(tag)
+            per = np.array([0] + [WIRE_ENTRY_BYTES[t] for t in (1, 2, 3)],
+                           np.int64)
+            total = (s - 1) * int(per[st].sum()) * nrhs
+            senders = int((st <= 2).any(axis=1).sum())
+            total += (s - 1) * senders * int(self.table.size) * 4 * nrhs
+            return total
         per_entry = 8 if wire == "exact" else WIRE_ENTRY_BYTES[tag]
         total = (s - 1) * s * b * per_entry * nrhs
         if wire == "gse" and tag in (1, 2):

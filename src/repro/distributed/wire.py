@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import gse
+from repro.core.tagmap import TagMap, normalize_tags
 
 __all__ = ["compressed_psum", "halo_all_gather", "set_wire_fault",
            "wire_checksum"]
@@ -68,8 +69,9 @@ def wire_checksum(arr: jnp.ndarray) -> jnp.ndarray:
     return ((a * w).sum() & jnp.uint64(0xFFFFFFFF)).astype(jnp.uint32)
 
 
-def halo_all_gather(bnd: jnp.ndarray, axis_name: str, *, tag: int,
-                    wire: str = "gse", k: int = 8, check: bool = False):
+def halo_all_gather(bnd: jnp.ndarray, axis_name: str, *, tag,
+                    wire: str = "gse", k: int = 8, check: bool = False,
+                    slot_tags: jnp.ndarray | None = None):
     """All-gather each shard's boundary buffer at the iteration's tag.
 
     Must be called INSIDE shard_map with ``axis_name`` manual.  ``bnd`` is
@@ -94,9 +96,26 @@ def halo_all_gather(bnd: jnp.ndarray, axis_name: str, *, tag: int,
     the tiny u32 checksums ride alongside, and every receiver recomputes
     them on the gathered buffers -- ``ok`` is a replicated bool that goes
     False if ANY shard's payload was corrupted in flight (DESIGN.md §14).
+
+    ``tag`` accepts the full tags axis: a legacy int, or a
+    :class:`~repro.core.tagmap.TagMap` (uniform maps normalize to the
+    same int path -- bit-identical; non-uniform maps ride at the map's
+    MAX tag, since one collective has one payload width).  With a
+    non-uniform map pass ``slot_tags`` -- this shard's ``(B,)`` per-slot
+    tags (the boundary entry's ROW-group tag,
+    ``PartitionedGSECSR.bnd_slot_tags``) -- and a tag-2 wire zeroes the
+    tail1 segment of tag-1 slots before it leaves: the wire twin of
+    ``kernels.ops.masked_for_tagmap``, so the decoded pool is bitwise
+    what per-slot shipping would produce while the blended payload model
+    (``halo_wire_bytes(tagmap)``) charges each slot at its own tag.  A
+    tag-3 wire ships raw floats for every slot (exact bits never
+    perturb); ``slot_tags`` then only informs the byte model.
     """
     if wire not in ("gse", "exact"):
         raise ValueError(f"unknown wire mode {wire!r}; 'gse' or 'exact'")
+    tag = normalize_tags(tag)
+    if isinstance(tag, TagMap):
+        tag = tag.max_tag
     # Device-side attribution (DESIGN.md §16): the scope name lands in
     # profiler traces for every halo exchange this call site emits.
     scope = jax.named_scope(f"halo_all_gather.{wire}.tag{tag}")
@@ -112,6 +131,14 @@ def halo_all_gather(bnd: jnp.ndarray, axis_name: str, *, tag: int,
         b32 = bnd.astype(jnp.float32)
         table = gse.extract_shared_exponents_jnp(b32, k)
         head, tail1 = gse.pack32_jnp(b32, table, k)
+        if slot_tags is not None and tag != 1:
+            # Per-slot wire precision: tag-1 slots drop their tail1 bits
+            # before the payload leaves, exactly as the masked HBM
+            # operand drops sub-tag tail segments.
+            keep = jnp.asarray(slot_tags) >= 2
+            if tail1.ndim > keep.ndim:
+                keep = keep[:, None]
+            tail1 = jnp.where(keep, tail1, jnp.zeros_like(tail1))
         sums, refs = [], []
         if check:
             sums = [wire_checksum(head), wire_checksum(table)]

@@ -36,6 +36,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.tagmap import TagMap, normalize_tags
 from repro.distributed.partition import PartitionedGSECSR
 from repro.distributed.wire import halo_all_gather
 from repro.perf import plan as launch_plan
@@ -67,7 +68,8 @@ def shard_mesh(part: PartitionedGSECSR) -> Mesh:
 
 def local_matvec(blk: dict, x_sh: jnp.ndarray, *, tag: int, wire: str,
                  k: int, rows: int, ei_bit: int,
-                 acc_dtype=jnp.float64) -> jnp.ndarray:
+                 acc_dtype=jnp.float64,
+                 slot_tags: jnp.ndarray | None = None) -> jnp.ndarray:
     """One shard's y-block at a STATIC tag, called inside shard_map.
 
     ``blk`` holds this shard's slices (leading axis already dropped):
@@ -90,7 +92,8 @@ def local_matvec(blk: dict, x_sh: jnp.ndarray, *, tag: int, wire: str,
         bnd = x_sh[jnp.clip(idx, 0, None)]
         mask = valid if x_sh.ndim == 1 else valid[:, None]
         bnd = jnp.where(mask, bnd, 0.0)
-        pool = halo_all_gather(bnd, AXIS, tag=tag, wire=wire, k=k)
+        pool = halo_all_gather(bnd, AXIS, tag=tag, wire=wire, k=k,
+                               slot_tags=slot_tags)
         flat = pool.reshape((-1,) + pool.shape[2:])
         xcat = jnp.concatenate([x_sh, flat[blk["halo_idx"]]], axis=0)
     val, col = _decode_gsecsr(
@@ -148,6 +151,42 @@ def _dist_matvec_fn(part: PartitionedGSECSR, wire: str, ndim: int,
     return fn
 
 
+def _dist_matvec_map_fn(part: PartitionedGSECSR, tm: TagMap, wire: str,
+                        ndim: int, acc_dtype):
+    """shard_map matvec for a NON-UNIFORM tag map: the decode rides the
+    map's static MAX tag (one collective, one payload width -- exactly the
+    masked-operand contract ``kernels.ops.masked_for_tagmap`` documents)
+    and the per-slot boundary tags ride as an extra sharded operand so
+    tag-1 slots drop their tail segment on the wire.  Memoized per map
+    ``crc32`` -- a promoted map can never reuse a stale trace."""
+    key = ("_dist_matvec_map", tm.crc32, wire, ndim,
+           jnp.dtype(acc_dtype).name)
+    fn = part.__dict__.get(key)
+    if fn is not None:
+        return fn
+    mesh = shard_mesh(part)
+    rows, ei, k = part.rows_per_shard, part.ei_bit, int(part.table.size)
+    tag = tm.max_tag
+
+    def run(colpak, head, tail1, tail2, row_ids, bnd_idx, halo_idx, table,
+            slot_tags, x):
+        blk = _blk(colpak, head, tail1, tail2, row_ids, bnd_idx, halo_idx,
+                   table)
+        return local_matvec(blk, x, tag=tag, wire=wire, k=k, rows=rows,
+                            ei_bit=ei, acc_dtype=acc_dtype,
+                            slot_tags=slot_tags[0])
+
+    sharded = P(AXIS)
+    fn = jax.jit(shard_map(
+        run, mesh=mesh,
+        in_specs=(sharded,) * 7 + (P(), sharded, sharded),
+        out_specs=sharded,
+        check_rep=False,
+    ))
+    part.__dict__[key] = fn
+    return fn
+
+
 def _apply_padded(part: PartitionedGSECSR, x: jnp.ndarray, tag,
                   wire: str, acc_dtype) -> jnp.ndarray:
     n = part.shape[0]
@@ -155,6 +194,13 @@ def _apply_padded(part: PartitionedGSECSR, x: jnp.ndarray, tag,
     if x.shape[0] != n:
         raise ValueError(f"operand wants x with {n} rows, got {x.shape}")
     xp = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1)) if pad else x
+    if isinstance(tag, TagMap):
+        fn = _dist_matvec_map_fn(part, tag, wire, x.ndim, acc_dtype)
+        st = jnp.asarray(part.bnd_slot_tags(tag).astype(np.int32))
+        y = fn(part.colpak, part.head, part.tail1, part.tail2,
+               part.row_ids, part.bnd_idx, part.halo_idx, part.table,
+               st, xp)
+        return y[:n]
     fn = _dist_matvec_fn(part, wire, x.ndim, acc_dtype)
     y = fn(part.colpak, part.head, part.tail1, part.tail2, part.row_ids,
            part.bnd_idx, part.halo_idx, part.table, xp,
@@ -169,11 +215,14 @@ def _resolve_dist_plan(part, tag, nrhs, plan) -> KernelPlan:
     Pallas block knob here yet -- so the resolved plan records provenance
     and reserves the slot a shard-local kernel will take its blocks from.
     Resolution is skipped for traced tags (the solvers' escalation path
-    passes ``tag`` as a traced value)."""
-    static_tag = isinstance(tag, (int, np.integer))
+    passes ``tag`` as a traced value).  A ``TagMap`` is static and keys
+    the lookup under its CRC32 (``perf.plan.tag_token``)."""
+    static_tag = isinstance(tag, (int, np.integer, TagMap))
+    if static_tag and not isinstance(tag, TagMap):
+        tag = int(tag)
     return launch_plan.resolve(
         part if static_tag else None,
-        tag=int(tag) if static_tag else None,
+        tag=tag if static_tag else None,
         layout="dist", nrhs=nrhs, plan=plan)
 
 
@@ -189,9 +238,18 @@ def dist_spmv(part: PartitionedGSECSR, x: jnp.ndarray, tag=1,
     additionally compresses the tag-1/2 halo payloads (lossy on the
     boundary entries only -- the monitor's recursive residual still
     converges, it simply sees a slightly stronger low-tag perturbation).
+
+    ``tag`` accepts the full tags axis: a uniform ``TagMap`` normalizes
+    to the identical int path; a NON-uniform map decodes at its max tag
+    with per-slot wire masking -- per-group semantics then require the
+    caller to have partitioned the MASKED operand
+    (``partition_gsecsr(kernels.ops.masked_for_tagmap(a, tm), s)``),
+    exactly the single-device masked-segment contract.
     """
     if x.ndim != 1:
         raise ValueError(f"dist_spmv wants (n,); got {x.shape}")
+    if isinstance(tag, TagMap):
+        tag = normalize_tags(tag, part.shape[0])
     _resolve_dist_plan(part, tag, 1, plan)
     return _apply_padded(part, x, tag, wire, acc_dtype)
 
@@ -206,6 +264,8 @@ def dist_spmm(part: PartitionedGSECSR, x: jnp.ndarray, tag=1,
     ``halo_wire_bytes(tag, wire, nrhs)`` models)."""
     if x.ndim != 2:
         raise ValueError(f"dist_spmm wants (n, nrhs); got {x.shape}")
+    if isinstance(tag, TagMap):
+        tag = normalize_tags(tag, part.shape[0])
     _resolve_dist_plan(part, tag, x.shape[1], plan)
     return _apply_padded(part, x, tag, wire, acc_dtype)
 

@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.precision_table import tag_operand_names
 from repro.kernels.gse_decode import _select_scale
 from repro.perf import plan as launch_plan
 
@@ -52,10 +53,9 @@ LANE = 128  # TPU vector-lane count; output accumulator minor dim
 
 
 def spmv_operand_names(tag: int) -> tuple:
-    """The pallas_call operand list the tag-specialized kernel streams."""
-    base = ("scales", "colpak", "head")
-    tails = {1: (), 2: ("tail1",), 3: ("tail1", "tail2")}[tag]
-    return base + tails + ("x",)
+    """The pallas_call operand list the tag-specialized kernel streams
+    (one source of truth: ``core.precision_table.TAG_SEGMENTS``)."""
+    return tag_operand_names(tag)
 
 
 def decode_tile(scales_ref, colpak_ref, head_ref, tail1_ref, tail2_ref, *,

@@ -5,6 +5,7 @@ interpret-mode selection (interpret=True on CPU, compiled on TPU).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import zlib
 from collections import OrderedDict
@@ -14,6 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.gse import GSEPacked
+from repro.core.precision_table import TAG_BITS_USED, TAG_SEGMENTS
+from repro.core.tagmap import TagMap
 from repro.kernels import ref
 from repro.obs import metrics as OM
 from repro.obs import trace as OT
@@ -29,7 +32,8 @@ __all__ = ["gse_decode", "gse_matmul", "gse_spmv_ell", "gse_spmm_ell",
            "gse_spmv_sell", "gse_spmm_sell", "ell_pack_gsecsr",
            "sell_pack_gsecsr", "spmv_kernel_for", "spmm_kernel_for",
            "sell_kernel_for", "sell_spmm_kernel_for", "PACK_STATS",
-           "planned_spmv", "planned_spmm"]
+           "planned_spmv", "planned_spmm", "masked_for_tagmap",
+           "sell_bucket_tags"]
 
 # Operand-pack cache accounting: one entry per (operator instance, layout
 # key).  ``hits``/``misses`` are module-global so tests (and the solve
@@ -125,8 +129,9 @@ def gse_decode(packed: GSEPacked, tag: int = 1, block=(8, 128),
     bm, bn = block
     m0, n0 = head2.shape
     head2, t1, t2 = _pad2(head2, bm, bn), _pad2(t1, bm, bn), _pad2(t2, bm, bn)
-    m_h = 15 - packed.ei_bit
-    bits_used = {1: m_h, 2: m_h + 16, 3: m_h + 48}[tag]
+    # Dense path: expIdx steals ei_bit head bits (TAG_BITS_USED assumes
+    # the sparse layout's full 15-bit head).
+    bits_used = TAG_BITS_USED[tag] - packed.ei_bit
     scales = ref.make_scales(packed.table, bits_used).reshape(1, -1)
     with jax.named_scope(f"gse_decode.tag{tag}"):
         out = decode_pallas(head2, t1, t2, scales, ei_bit=packed.ei_bit,
@@ -149,8 +154,7 @@ def gse_matmul(x: jnp.ndarray, packed: GSEPacked, tag: int = 1,
     head = _pad2(packed.head, bk, bn)
     t1 = _pad2(packed.tail1, bk, bn)
     t2 = _pad2(packed.tail2, bk, bn)
-    m_h = 15 - packed.ei_bit
-    bits_used = {1: m_h, 2: m_h + 16, 3: m_h + 48}[tag]
+    bits_used = TAG_BITS_USED[tag] - packed.ei_bit
     scales = ref.make_scales(packed.table, bits_used).reshape(1, -1)
     out = gse_matmul_pallas(x2, head, t1, t2, scales, ei_bit=packed.ei_bit,
                             tag=tag, blocks=blocks, interpret=interpret)
@@ -213,6 +217,133 @@ def sell_pack_gsecsr(a: GSECSR, c: int | None = None,
         a, ("sell", c, sigma, lane, bucket),
         lambda: pack_sell(a, c=c, sigma=sigma, lane=lane, bucket=bucket),
     )
+
+
+def _masked_sell_for_tagmap(sell: GSESellC, tm: TagMap) -> GSESellC:
+    """GSESellC twin of :func:`masked_for_tagmap`: per-bucket tail arrays
+    masked slot-wise at the symmetric induced tag (max of the slot row's
+    and column's group tags; padding slots are already all zero, so their
+    nominal tag is irrelevant)."""
+
+    def build():
+        perm = np.asarray(sell.perm, np.int64)
+        n = sell.shape[0]
+        row_tags = tm.row_tags(n)
+        cmask = np.uint32((1 << (32 - sell.ei_bit)) - 1)
+        t1s, t2s, off = [], [], 0
+        for cp, t1, t2 in zip(sell.colpak, sell.tail1, sell.tail2):
+            rows = perm[off:off + t1.shape[0]]
+            rt = np.where(rows >= 0, row_tags[np.maximum(rows, 0)], 1)
+            cols = (np.asarray(cp, np.uint32) & cmask).astype(np.int64)
+            ct = row_tags[np.minimum(cols, n - 1)]
+            et = np.maximum(rt[:, None], ct)
+            t1s.append(jnp.asarray(
+                np.where(et >= 2, np.asarray(t1), 0).astype(np.uint16)))
+            t2s.append(jnp.asarray(
+                np.where(et >= 3, np.asarray(t2), 0).astype(np.uint32)))
+            off += t1.shape[0]
+        return dataclasses.replace(sell, tail1=tuple(t1s), tail2=tuple(t2s))
+
+    return _cached_pack(sell, ("tagmap", tm.crc32, tm.group_size), build)
+
+
+def masked_for_tagmap(a, tm: TagMap):
+    """Per-group-precision view of ``a``: tail segments below each entry's
+    INDUCED tag -- the max of its row's and its column's group tags, so a
+    masked SPD operand stays exactly symmetric (CG's contract; see
+    ``TagMap.entry_tags``) -- are zeroed (DESIGN.md §18).  ``a`` may be a
+    ``GSECSR`` or an already-packed ``GSESellC`` (masked per slot).
+
+    Decoding the masked operand with the map's MAX-tag formula is bitwise
+    identical to decoding each entry at its own group tag: the zeroed
+    splices contribute exactly 0 and the surviving partial mantissa times
+    the max-tag power-of-two scale equals the lower-tag decode exactly
+    (``m_head * 2^48 * 2^(e_sh-63) == m_head * 2^(e_sh-15)``; both
+    factors are exact powers of two and every partial mantissa fits f64).
+    So every existing tag-specialized pipeline -- fused solver steps, ELL
+    and SELL kernels, the reference decode -- applies a non-uniform map
+    with NO new kernel bodies.
+
+    The result is memoized under the map's CRC32 (satellite 1: a promoted
+    map can never hit a stale masked pack), shares the untouched segment
+    arrays with ``a``, and carries its own ``_pack_cache`` so ELL/SELL
+    packs of the masked view never collide with packs of ``a`` itself.
+    """
+    if isinstance(a, GSESellC):
+        return _masked_sell_for_tagmap(a, tm)
+
+    def build():
+        cols = (np.asarray(a.colpak, np.uint32)
+                & np.uint32((1 << (32 - a.ei_bit)) - 1))
+        et = tm.entry_tags(np.asarray(a.row_ids), cols)
+        t1 = np.where(et >= 2, np.asarray(a.tail1), 0).astype(np.uint16)
+        t2 = np.where(et >= 3, np.asarray(a.tail2), 0).astype(np.uint32)
+        return GSECSR(
+            rowptr=a.rowptr, colpak=a.colpak, head=a.head,
+            tail1=jnp.asarray(t1), tail2=jnp.asarray(t2),
+            table=a.table, row_ids=a.row_ids, ei_bit=a.ei_bit,
+            shape=a.shape,
+        )
+
+    return _cached_pack(a, ("tagmap", tm.crc32, tm.group_size), build)
+
+
+def sell_bucket_tags(sell: GSESellC, tm: TagMap) -> tuple:
+    """Per-width-bucket max group tag: the COARSE map unit the SELL kernels
+    dispatch at (DESIGN.md §18).
+
+    Each bucket runs one ``pallas_call`` whose operand list matches the
+    bucket's max tag, so the lists stay static (jaxpr-checkable) and an
+    all-tag-1 bucket genuinely never streams tails.  Entries inside a
+    mixed bucket whose group demands less carry zeroed tails (the operand
+    must come from :func:`masked_for_tagmap`), so the higher bucket tag
+    changes streamed bytes, never values.
+    """
+    return sell.bucket_tags(tm)
+
+
+@functools.lru_cache(maxsize=None)
+def _sell_mixed_cached(bucket_tags: tuple, ei_bit: int, blocks,
+                       interpret: bool, spmm: bool):
+    """One jitted per-bucket dispatcher per (bucket-tag tuple, ei_bit,
+    blocks): bucket ``i`` runs the tag-``bucket_tags[i]``-specialized
+    kernel body, so each bucket's jaxpr operand list matches ITS tag."""
+    from repro.kernels.gse_spmm import gse_spmm_call
+    from repro.kernels.gse_spmv import gse_spmv_call
+
+    base = gse_spmm_call if spmm else gse_spmv_call
+
+    def run(buckets, unperm, x, scales_by_tag):
+        outs = [
+            base(cp, hd, t1, t2, x, scales_by_tag[t - 1], ei_bit=ei_bit,
+                 tag=t, blocks=blocks, interpret=interpret)
+            for (cp, hd, t1, t2), t in zip(buckets, bucket_tags)
+        ]
+        y = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+        return y[unperm]
+
+    return jax.jit(run)
+
+
+def _gse_sell_tagmap(sell: GSESellC, x, tm: TagMap, blocks, interpret,
+                     spmm: bool):
+    """Shared TagMap body of ``gse_spmv_sell``/``gse_spmm_sell``: per-
+    bucket max-tag dispatch over a masked pack."""
+    btags = sell_bucket_tags(sell, tm)
+    scales_by_tag = tuple(
+        ref.make_scales(sell.table, TAG_BITS_USED[t]).reshape(1, -1)
+        for t in (1, 2, 3)
+    )
+    buckets = tuple(
+        (sell.colpak[i], sell.head[i],
+         sell.tail1[i] if t >= 2 else None,
+         sell.tail2[i] if t == 3 else None)
+        for i, t in enumerate(btags)
+    )
+    kernel = _sell_mixed_cached(btags, sell.ei_bit, blocks, interpret, spmm)
+    name = "gse_spmm_sell" if spmm else "gse_spmv_sell"
+    with jax.named_scope(f"{name}.map{tm.crc32:08x}"):
+        return kernel(buckets, sell.unperm, x, scales_by_tag)
 
 
 def spmv_kernel_for(tag: int, ei_bit: int, blocks=None,
@@ -312,8 +443,7 @@ def gse_spmm_ell(ell, table, x: jnp.ndarray, ei_bit: int, tag: int = 1,
     colpak, head, t1, t2 = ell
     bm, bl = blocks
     m0 = colpak.shape[0]
-    bits_used = {1: 15, 2: 31, 3: 63}[tag]
-    scales = ref.make_scales(table, bits_used).reshape(1, -1)
+    scales = ref.make_scales(table, TAG_BITS_USED[tag]).reshape(1, -1)
     kernel = spmm_kernel_for(tag, ei_bit, blocks, interpret)
     operands = [_pad2(colpak, bm, bl), _pad2(head, bm, bl)]
     if tag >= 2:
@@ -335,9 +465,19 @@ def planned_spmv(a: GSECSR, x: jnp.ndarray, tag: int = 1,
     (memoized, :func:`ell_pack_gsecsr`/:func:`sell_pack_gsecsr`), and
     dispatches the tag-specialized kernel with the plan's blocks.  This is
     the entry point the autotuner sweeps and the solve service registers.
+
+    ``tag`` may be a :class:`~repro.core.tagmap.TagMap` (DESIGN.md §18):
+    the operand is rebuilt through :func:`masked_for_tagmap` (memoized
+    under the map's CRC) and the ELL path decodes at the map's max tag
+    while the SELL path dispatches each width-bucket at ITS max group
+    tag.  Plan resolution keys carry the map CRC, never a scalar tag.
     """
     plan = launch_plan.resolve(a, tag=tag, layout=layout, nrhs=1,
                                plan=plan)
+    if isinstance(tag, TagMap):
+        a = masked_for_tagmap(a, tag)
+        if layout == "ell":
+            tag = tag.max_tag  # masked tails: max-tag decode IS the map
     if layout == "sell":
         sell = sell_pack_gsecsr(a, plan=plan)
         blocks = (plan.blocks if plan.compatible_with_sell(sell)
@@ -358,6 +498,10 @@ def planned_spmm(a: GSECSR, x: jnp.ndarray, tag: int = 1,
     nrhs = x.shape[1]
     plan = launch_plan.resolve(a, tag=tag, layout=layout, nrhs=nrhs,
                                plan=plan)
+    if isinstance(tag, TagMap):
+        a = masked_for_tagmap(a, tag)
+        if layout == "ell":
+            tag = tag.max_tag  # masked tails: max-tag decode IS the map
     if layout == "sell":
         sell = sell_pack_gsecsr(a, plan=plan)
         blocks = (plan.blocks if plan.compatible_with_sell(sell)
@@ -426,12 +570,11 @@ def _sell_spmm_kernel_cached(tag: int, ei_bit: int, blocks,
 
 
 def _sell_buckets(sell: GSESellC, tag: int):
-    """Per-bucket operand tuples holding ONLY the segments ``tag`` reads."""
-    if tag == 1:
-        return tuple(zip(sell.colpak, sell.head))
-    if tag == 2:
-        return tuple(zip(sell.colpak, sell.head, sell.tail1))
-    return tuple(zip(sell.colpak, sell.head, sell.tail1, sell.tail2))
+    """Per-bucket operand tuples holding ONLY the segments ``tag`` reads
+    (``TAG_SEGMENTS`` is the one source of truth for the tail list)."""
+    segs = (sell.colpak, sell.head) + tuple(
+        getattr(sell, name) for name in TAG_SEGMENTS[tag])
+    return tuple(zip(*segs))
 
 
 def _check_sell_blocks(sell: GSESellC, blocks) -> None:
@@ -483,8 +626,9 @@ def gse_spmv_sell(sell: GSESellC, x: jnp.ndarray, tag: int = 1,
     if interpret is None:
         interpret = _interpret_default()
     blocks = _resolve_sell_blocks(sell, tag, 1, blocks, plan)
-    bits_used = {1: 15, 2: 31, 3: 63}[tag]
-    scales = ref.make_scales(sell.table, bits_used).reshape(1, -1)
+    if isinstance(tag, TagMap):
+        return _gse_sell_tagmap(sell, x, tag, blocks, interpret, spmm=False)
+    scales = ref.make_scales(sell.table, TAG_BITS_USED[tag]).reshape(1, -1)
     kernel = sell_kernel_for(tag, sell.ei_bit, blocks, interpret)
     with jax.named_scope(f"gse_spmv_sell.tag{tag}"):
         return kernel(_sell_buckets(sell, tag), sell.unperm, x, scales)
@@ -505,8 +649,9 @@ def gse_spmm_sell(sell: GSESellC, x: jnp.ndarray, tag: int = 1,
         interpret = _interpret_default()
     blocks = _resolve_sell_blocks(sell, tag, x.shape[1] if x.ndim > 1
                                   else 1, blocks, plan)
-    bits_used = {1: 15, 2: 31, 3: 63}[tag]
-    scales = ref.make_scales(sell.table, bits_used).reshape(1, -1)
+    if isinstance(tag, TagMap):
+        return _gse_sell_tagmap(sell, x, tag, blocks, interpret, spmm=True)
+    scales = ref.make_scales(sell.table, TAG_BITS_USED[tag]).reshape(1, -1)
     kernel = sell_spmm_kernel_for(tag, sell.ei_bit, blocks, interpret)
     with jax.named_scope(f"gse_spmm_sell.tag{tag}"):
         return kernel(_sell_buckets(sell, tag), sell.unperm, x, scales)
@@ -530,8 +675,7 @@ def gse_spmv_ell(ell, table, x: jnp.ndarray, ei_bit: int, tag: int = 1,
     colpak, head, t1, t2 = ell
     bm, bl = blocks
     m0 = colpak.shape[0]
-    bits_used = {1: 15, 2: 31, 3: 63}[tag]
-    scales = ref.make_scales(table, bits_used).reshape(1, -1)
+    scales = ref.make_scales(table, TAG_BITS_USED[tag]).reshape(1, -1)
     kernel = spmv_kernel_for(tag, ei_bit, blocks, interpret)
     operands = [_pad2(colpak, bm, bl), _pad2(head, bm, bl)]
     if tag >= 2:

@@ -14,7 +14,8 @@ import jax.numpy as jnp
 
 from repro.core.gse import _pow2_exact
 
-__all__ = ["make_scales", "decode_ref", "spmv_ell_ref", "matmul_ref"]
+__all__ = ["make_scales", "decode_ref", "decode_csr_ref", "spmv_ell_ref",
+           "matmul_ref"]
 
 
 def make_scales(table: jnp.ndarray, bits_used: int, bias: int = 1023,
@@ -48,8 +49,9 @@ def _mant(m_head, tail1, tail2, tag):
 
 
 def _bits_used(ei_bit: int, tag: int) -> int:
-    m_h = 15 - ei_bit
-    return {1: m_h, 2: m_h + 16, 3: m_h + 48}[tag]
+    from repro.core.precision_table import TAG_BITS_USED
+
+    return TAG_BITS_USED[tag] - ei_bit
 
 
 @partial(jax.jit, static_argnames=("ei_bit", "tag"))
@@ -58,6 +60,26 @@ def decode_ref(head, tail1, tail2, table, ei_bit: int, tag: int):
     sgn, exp_idx, m_head = _split_head(head, ei_bit)
     mant = _mant(m_head, tail1, tail2, tag)
     scales = make_scales(table, _bits_used(ei_bit, tag))
+    return sgn * mant * scales[exp_idx]
+
+
+@partial(jax.jit, static_argnames=("ei_bit", "tag"))
+def decode_csr_ref(colpak, head, tail1, tail2, table, ei_bit: int, tag: int):
+    """Per-entry decode oracle for the FLAT sparse layout (``GSECSR`` /
+    SELL slots).  In sparse packs the expIdx rides the top ``ei_bit``
+    bits of ``colpak`` (paper III.C.1) and the head keeps the full
+    15-bit mantissa, so ``decode_ref``'s head-split formula does NOT
+    apply -- splitting the head of a sparse pack silently misreads the
+    top mantissa bits as an exponent index and decodes garbage.  This
+    mirrors the per-entry math of ``spmv_ell_ref`` exactly.
+    """
+    shift = 32 - ei_bit
+    exp_idx = (colpak.astype(jnp.uint32) >> shift).astype(jnp.int32)
+    h = head.astype(jnp.uint32)
+    sgn = 1.0 - 2.0 * ((h >> 15) & 0x1).astype(jnp.float32)
+    m_head = (h & 0x7FFF).astype(jnp.float32)
+    mant = _mant(m_head, tail1, tail2, tag)
+    scales = make_scales(table, _bits_used(0, tag))
     return sgn * mant * scales[exp_idx]
 
 
@@ -75,7 +97,7 @@ def spmv_ell_ref(colpak, head, tail1, tail2, table, x, ei_bit: int, tag: int):
     sgn = 1.0 - 2.0 * ((h >> 15) & 0x1).astype(jnp.float32)
     m_head = (h & 0x7FFF).astype(jnp.float32)
     mant = _mant(m_head, tail1, tail2, tag)
-    bits_used = {1: 15, 2: 31, 3: 63}[tag]
+    bits_used = _bits_used(0, tag)  # sparse path: expIdx rides colpak
     scales = make_scales(table, bits_used)
     vals = sgn * mant * scales[exp_idx]
     return jnp.sum(vals * x.astype(jnp.float32)[col], axis=1)

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import precision as P
+from repro.core.tagmap import TagMap, normalize_tags
 from repro.obs import metrics as OM
 from repro.obs import trace as OT
 from repro.robustness.guards import (
@@ -41,7 +42,7 @@ from repro.robustness.guards import (
     HEALTH_OK,
     health_name,
 )
-from repro.sparse.csr import CSR, iteration_stream_bytes, pack_csr
+from repro.sparse.csr import CSR, GSESellC, iteration_stream_bytes, pack_csr
 from repro.solvers.batched import (
     column_tags_at,
     solve_cg_batched,
@@ -60,6 +61,46 @@ _PRECOND_FACTORY = {"jacobi": make_jacobi, "spai0": make_spai0}
 _SERVICE_IDS = itertools.count()
 
 
+def _normalize_service_tags(tags, m: int, sharded: bool = False,
+                            sell: bool = False):
+    """Validate/normalize a service-level ``tags=`` precision axis.
+
+    ``None`` -> the handle/monitor default.  An int or a uniform
+    :class:`~repro.core.tagmap.TagMap` normalizes to the int tag (the
+    legacy fast path); a NON-uniform map stays a map (single-device
+    handles only -- the sharded decode has no per-group pack yet, same
+    restriction as the solvers' ``tags=``).  ``"adaptive"`` selects the
+    data-driven driver, which reads the flat ``GSECSR`` pack -- so it
+    needs a single-device CSR handle.
+    """
+    if tags is None:
+        return None
+    if isinstance(tags, str):
+        if tags != "adaptive":
+            raise ValueError(
+                f"tags= accepts an int tag, a TagMap, or 'adaptive'; "
+                f"got {tags!r}")
+        if sharded or sell:
+            raise ValueError(
+                "tags='adaptive' needs a single-device CSR handle "
+                "(solve_adaptive reads the flat GSECSR pack)")
+        return "adaptive"
+    norm = normalize_tags(tags, m)
+    if isinstance(norm, TagMap) and sharded:
+        raise ValueError(
+            "per-group tag maps are single-device; the sharded serve "
+            "path takes int tags only")
+    return norm
+
+
+def _tags_token(tags):
+    """Hashable bucket token for an effective tags axis (maps bucket by
+    content CRC, so two equal maps share a batched slot)."""
+    if isinstance(tags, TagMap):
+        return ("map", tags.crc32)
+    return tags
+
+
 @dataclasses.dataclass
 class SolveRequest:
     id: int
@@ -69,6 +110,7 @@ class SolveRequest:
     x0: Optional[jnp.ndarray] = None
     deadline_s: Optional[float] = None  # wall-clock budget from submit()
     t_submit: float = 0.0               # time.monotonic() at intake
+    tags: object = None                 # per-request precision axis override
 
 
 @dataclasses.dataclass
@@ -102,6 +144,8 @@ class _Operator:
     part: object = None   # PartitionedGSECSR when registered sharded
     wire: str = "exact"   # halo wire format for the sharded path
     plan: object = None   # tuned/explicit KernelPlan attached at register
+    tags: object = None   # handle-default precision axis (PR 10):
+    #                       None | int | TagMap | "adaptive"
 
     @property
     def solve_op(self):
@@ -173,7 +217,7 @@ class SolverService:
                  precond: str | object | None = None,
                  layout: str = "csr", sharded: bool = False,
                  shards: int | None = None, wire: str = "exact",
-                 plan=None, tune: bool = False) -> str:
+                 plan=None, tune: bool = False, tags=None) -> str:
         """Pack ``a`` (and optionally a preconditioner) once; returns the
         handle requests are submitted against.  ``precond`` is ``None``,
         ``"jacobi"``/``"spai0"``, or a ready :mod:`repro.solvers.precond`
@@ -200,7 +244,15 @@ class SolverService:
         registration of a matrix class, a pure cache hit afterwards).
         The SELL pack then uses the plan's C/σ/lane/bucket parameters;
         solve trajectories stay bit-identical (the stepped solvers decode
-        through the packed store, not the launch blocks)."""
+        through the packed store, not the launch blocks).
+
+        ``tags`` sets the handle's DEFAULT precision axis (PR 10,
+        DESIGN.md §18), overridable per request at ``submit``: an int or
+        uniform :class:`~repro.core.tagmap.TagMap` pins the start tag, a
+        non-uniform map runs the masked per-group schedule, and
+        ``"adaptive"`` serves every request against the handle through
+        the data-driven per-group driver
+        (:func:`repro.solvers.adaptive.solve_adaptive`)."""
         if name in self._ops:
             raise ValueError(f"handle {name!r} already registered")
         if layout not in ("csr", "sell"):
@@ -216,6 +268,9 @@ class SolverService:
             raise ValueError(
                 f"unknown wire mode {wire!r}; expected 'exact' or 'gse'"
             )
+        tags = _normalize_service_tags(tags, int(a.shape[0]),
+                                       sharded=sharded,
+                                       sell=layout == "sell")
         if isinstance(precond, str):
             try:
                 precond = _PRECOND_FACTORY[precond](a, k=k)
@@ -243,15 +298,20 @@ class SolverService:
             gse = sell_pack_gsecsr(gse, plan=plan)
         self._ops[name] = _Operator(
             name=name, csr=a, gse=gse, precond=precond, part=part,
-            wire=wire, plan=plan
+            wire=wire, plan=plan, tags=tags
         )
         return name
 
     # -- request intake ----------------------------------------------------
 
     def submit(self, handle: str, b, tol: float = 1e-8, x0=None,
-               deadline_s: float | None = None) -> int:
+               deadline_s: float | None = None, tags=None) -> int:
         """Queue one solve request; returns its request id.
+
+        ``tags`` overrides the handle's default precision axis for this
+        request only (same values as ``register``; requests bucket by
+        their EFFECTIVE axis, so mixed-tags traffic against one handle
+        never shares a batched slot across axes).
 
         Intake validation (DESIGN.md §14): ``b`` must match the handle's
         dimension, be a floating dtype, and be entirely finite -- a NaN/Inf
@@ -297,10 +357,14 @@ class SolverService:
                 )
         if deadline_s is not None and deadline_s <= 0:
             raise ValueError(f"deadline_s must be > 0, got {deadline_s}")
+        tags = _normalize_service_tags(
+            tags, int(op.csr.shape[0]), sharded=op.part is not None,
+            sell=isinstance(op.gse, GSESellC))
         rid = next(self._ids)
         self._pending.append(SolveRequest(rid, handle, b, float(tol), x0,
                                           deadline_s=deadline_s,
-                                          t_submit=time.monotonic()))
+                                          t_submit=time.monotonic(),
+                                          tags=tags))
         self.queue_depth.set(len(self._pending))
         return rid
 
@@ -321,9 +385,15 @@ class SolverService:
         by a non-ok health."""
         t0 = time.perf_counter()
         self._solutions.clear()
-        buckets: Dict[tuple, List[SolveRequest]] = {}
+        buckets: Dict[tuple, tuple] = {}
         for req in self._pending:
-            buckets.setdefault((req.handle, req.tol), []).append(req)
+            # The EFFECTIVE precision axis (request override, else the
+            # handle default) is part of the bucket: one batched slot,
+            # one axis.
+            eff = req.tags if req.tags is not None \
+                else self._ops[req.handle].tags
+            key = (req.handle, req.tol, _tags_token(eff))
+            buckets.setdefault(key, (eff, []))[1].append(req)
         drained = len(self._pending)
         self._pending = []
         self.queue_depth.set(0)
@@ -331,12 +401,13 @@ class SolverService:
         reports: Dict[int, SolveReport] = {}
         with OT.span("serve.flush", service=self.service_id,
                      requests=drained) as attrs:
-            for (handle, tol), reqs in buckets.items():
+            for (handle, tol, _tok), (eff, reqs) in buckets.items():
                 op = self._ops[handle]
                 for i in range(0, len(reqs), self.slots):
                     chunk = reqs[i:i + self.slots]
                     try:
-                        reports.update(self._run_slot(op, tol, chunk))
+                        reports.update(
+                            self._run_slot(op, tol, chunk, tags=eff))
                     except Exception:  # degraded, never propagated
                         self.stats["errors"] += 1
                         for req in chunk:
@@ -355,7 +426,10 @@ class SolverService:
         return reports
 
     def _run_slot(self, op: _Operator, tol: float,
-                  reqs: List[SolveRequest]) -> Dict[int, SolveReport]:
+                  reqs: List[SolveRequest],
+                  tags=None) -> Dict[int, SolveReport]:
+        if tags == "adaptive":
+            return self._run_adaptive(op, tol, reqs)
         n = op.csr.shape[0]
         nrhs = self.slots
         pad = nrhs - len(reqs)
@@ -373,11 +447,12 @@ class SolverService:
             res = solve_pcg_batched(op.solve_op, b, op.precond, x0=x0,
                                     tol=tol, maxiter=self.maxiter,
                                     params=self.params, wire=op.wire,
-                                    guards=self.guards)
+                                    guards=self.guards, tags=tags)
         else:
             res = solve_cg_batched(op.solve_op, b, x0=x0, tol=tol,
                                    maxiter=self.maxiter, params=self.params,
-                                   wire=op.wire, guards=self.guards)
+                                   wire=op.wire, guards=self.guards,
+                                   tags=tags)
 
         iters = np.asarray(res.iters)
         sw = np.asarray(res.switch_iters)
@@ -388,7 +463,7 @@ class SolverService:
         trip = np.broadcast_to(
             np.asarray(getattr(res, "trip_iter", -1)), iters.shape
         ).astype(np.int64)
-        shares, total_bytes = self._byte_shares(op, iters, sw)
+        shares, total_bytes = self._byte_shares(op, iters, sw, tags=tags)
         self.stats["batches"] += 1
         self.stats["requests"] += nreal
         self.stats["padded_cols"] += pad
@@ -472,6 +547,92 @@ class SolverService:
             )
         return out
 
+    def _run_adaptive(self, op: _Operator, tol: float,
+                      reqs: List[SolveRequest]) -> Dict[int, SolveReport]:
+        """``tags="adaptive"`` dispatch: the data-driven per-group driver
+        is a host loop over single-RHS segments (DESIGN.md §18), so each
+        request runs its own solve -- no slot sharing, and ``est_bytes``
+        is the driver's OWN blended account (masked matrix stream plus
+        the billed true-residual checks, ``AdaptiveResult.spmv_bytes``)
+        instead of the column-share model.  ``relres`` reports the TRUE
+        tag-3 residual -- the number the adaptive stop is gated on.
+        Degraded requests get the same bounded tag-3 retry as the
+        batched path."""
+        from repro.solvers.adaptive import solve_adaptive
+
+        clock = getattr(self, "clock", time.monotonic)
+        out = {}
+        self.stats["batches"] += 1
+        self.stats["requests"] += len(reqs)
+        for req in reqs:
+            res = solve_adaptive(op.gse, req.b, precond=op.precond,
+                                 x0=req.x0, tol=tol, maxiter=self.maxiter,
+                                 params=self.params)
+            x = res.x
+            it_j = int(res.iters)
+            relres_j = float(res.true_relres)
+            conv_j = bool(res.converged)
+            tag_j = int(res.tagmap.max_tag)
+            bytes_j = int(res.spmv_bytes)
+            h_j = HEALTH_OK
+            retries = 0
+            deadline_hit = False
+            x_finite = bool(jnp.isfinite(jnp.vdot(x, x)))
+            self.stats["modeled_bytes"] += bytes_j
+            while (not conv_j or not x_finite) and retries < self.max_retries:
+                if req.deadline_s is not None and \
+                        clock() - req.t_submit > req.deadline_s:
+                    deadline_hit = True
+                    self.stats["deadline_exceeded"] += 1
+                    break
+                retries += 1
+                self.stats["retries"] += 1
+                warm = x if x_finite else req.x0
+                if op.precond is not None:
+                    r2 = solve_pcg(op.gse, req.b, op.precond, x0=warm,
+                                   tol=tol, maxiter=self.maxiter,
+                                   params=self.params, guards=self.guards,
+                                   init_tag=3)
+                else:
+                    r2 = solve_cg(op.gse, req.b, x0=warm, tol=tol,
+                                  maxiter=self.maxiter, params=self.params,
+                                  guards=self.guards, init_tag=3)
+                rx_finite = bool(jnp.isfinite(jnp.vdot(r2.x, r2.x)))
+                it_j += int(r2.iters)
+                relres_j = float(r2.relres)
+                conv_j = bool(r2.converged)
+                tag_j = int(r2.tag)
+                h_j = int(getattr(r2, "health", HEALTH_OK))
+                if rx_finite:
+                    x = r2.x
+                x_finite = x_finite or rx_finite
+                sh2, tot2 = self._byte_shares(
+                    op, np.asarray([int(r2.iters)]),
+                    np.asarray(r2.switch_iters).reshape(1, -1),
+                )
+                bytes_j += int(sh2[0])
+                self.stats["modeled_bytes"] += tot2
+            if not x_finite and h_j == HEALTH_OK:
+                h_j = HEALTH_NONFINITE
+                conv_j = False
+            self._solutions[req.id] = x
+            out[req.id] = SolveReport(
+                id=req.id,
+                handle=op.name,
+                iters=it_j,
+                relres=relres_j,
+                converged=conv_j,
+                tag=tag_j,
+                switch_iters=np.full(2, -1, np.int64),
+                est_bytes=bytes_j,
+                batch_size=len(reqs),
+                health=health_name(h_j),
+                trip_iter=-1,
+                retries=retries,
+                deadline_exceeded=deadline_hit,
+            )
+        return out
+
     def solution(self, request_id: int) -> jnp.ndarray:
         """The solved ``x`` for a flushed request (pop to free memory)."""
         try:
@@ -481,19 +642,32 @@ class SolverService:
                 f"no flushed solution for request {request_id!r}"
             ) from None
 
-    def _byte_shares(self, op: _Operator, iters, sw):
+    def _byte_shares(self, op: _Operator, iters, sw, tags=None):
         """One walk of the per-iteration byte model: returns the per-column
         shares AND their sum, which is exactly ``batched_run_bytes`` (each
         iteration adds ``iteration_stream_bytes(..., nrhs=n_active)``
-        split evenly among the columns sharing the streaming pass)."""
+        split evenly among the columns sharing the streaming pass).
+
+        ``tags`` is the slot's effective precision axis: a non-uniform
+        :class:`TagMap` charges every live iteration the BLENDED
+        per-group stream (the map is pinned -- no switch schedule); an
+        int floors the monitor's switch-schedule tag (the batch started
+        there, not at tag 1)."""
         nrhs = iters.shape[0]
         shares = np.zeros(nrhs, np.float64)
+        tm = tags if isinstance(tags, TagMap) else None
+        floor = int(tags) if isinstance(tags, (int, np.integer)) else 1
         for it in range(int(iters.max(initial=0))):
-            tags = column_tags_at(iters, sw, it)
-            live = np.nonzero(tags > 0)[0]
+            col_tags = column_tags_at(iters, sw, it)
+            live = np.nonzero(col_tags > 0)[0]
             if live.size == 0:
                 continue
-            tag = int(tags.max())
+            if tm is not None:
+                tot = iteration_stream_bytes(op.gse, tm, op.precond,
+                                             nrhs=live.size)
+                shares[live] += tot / live.size
+                continue
+            tag = max(int(col_tags.max()), floor)
             if op.part is not None:
                 # Sharded handle: the canonical distributed account --
                 # single-device matrix stream redistributed + per-column

@@ -42,7 +42,10 @@ __all__ = [
     "assert_consistent",
     "flight_init",
     "flight_record",
+    "pack_state_tags",
+    "pack_tag_pair",
     "split_batched",
+    "unpack_tag_pair",
 ]
 
 
@@ -117,6 +120,51 @@ def flight_record(fs, *, it, relres, tag, health=None, a0=None, a1=None,
     }
 
 
+# -- per-group tag pairs (PR 10, DESIGN.md §18) ---------------------------
+#
+# A per-group TagMap run has no single "the tag"; the int32 tag cell
+# instead carries the ACTIVE (min, max) pair, bit-packed.  Uniform pairs
+# (lo == hi) store the plain tag, so the schema is byte-identical to the
+# pre-PR recording for every uniform map; non-uniform pairs store
+# ``lo | (hi << 4)`` which is >= 33 -- disjoint from plain tags (<= 3),
+# so the decode threshold ``_TAG_PACK_BASE`` is unambiguous.
+_TAG_PACK_BASE = 8
+
+
+def pack_tag_pair(lo: int, hi: int) -> int:
+    """Bit-pack an active (min, max) tag pair into one int32 tag cell."""
+    lo, hi = int(lo), int(hi)
+    if not (1 <= lo <= hi <= 3):
+        raise ValueError(f"tag pair must satisfy 1 <= lo <= hi <= 3, "
+                         f"got ({lo}, {hi})")
+    return lo if lo == hi else (lo | (hi << 4))
+
+
+def unpack_tag_pair(v):
+    """Inverse of :func:`pack_tag_pair`, vectorized: ``(lo, hi)`` arrays."""
+    v = np.asarray(v)
+    packed = v >= _TAG_PACK_BASE
+    hi = np.where(packed, v >> 4, v)
+    lo = np.where(packed, v & 0xF, v)
+    return lo, hi
+
+
+def pack_state_tags(fs, lo: int, hi: int):
+    """Host-side epilogue for per-group (TagMap) runs: rewrite the written
+    rows' tag cells to the packed (min, max) pair.
+
+    The in-loop recorder wrote the masked-operand DECODE tag (the map's
+    max) -- correct but lossy; this restamps the full pair once, after
+    the solve, with zero in-loop cost.  Unwritten slots (it == -1) are
+    left untouched so ring semantics survive.
+    """
+    packed = pack_tag_pair(lo, hi)
+    ibuf = np.array(fs["ibuf"])
+    ibuf[ibuf[:, 0] >= 0, 1] = packed
+    return {"ibuf": ibuf, "fbuf": np.asarray(fs["fbuf"]),
+            "count": np.asarray(fs["count"])}
+
+
 def split_batched(fs) -> list[dict]:
     """Split a stacked per-column flight state (leading nrhs axis, as the
     batched solvers return it) into one state dict per column."""
@@ -139,10 +187,21 @@ class FlightLog:
     capacity: int
     recorded: int   # total rows ever written (may exceed capacity)
     dropped: int    # rows overwritten by the ring
+    # Per-group runs (PR 10): the min tag of the active (min, max) pair;
+    # equals ``tag`` on uniform recordings.  Defaulted so older pickled /
+    # hand-built logs keep constructing.
+    tag_min: np.ndarray | None = None
 
     @classmethod
     def from_state(cls, fs) -> "FlightLog":
-        """Decode a recorder state (single host sync, after the solve)."""
+        """Decode a recorder state (single host sync, after the solve).
+
+        Tag cells may carry a bit-packed (min, max) pair (per-group runs;
+        see :func:`pack_tag_pair`): ``tag`` decodes to the pair's MAX --
+        the tag every pre-existing consumer (switch derivation,
+        monotonicity, :func:`assert_consistent`) reasons about -- and the
+        min lands on :attr:`tag_min`.
+        """
         ibuf, fbuf = np.asarray(fs["ibuf"]), np.asarray(fs["fbuf"])
         count = int(np.asarray(fs["count"]))
         cap = ibuf.shape[0]
@@ -155,8 +214,11 @@ class FlightLog:
             fbuf = np.roll(fbuf, -shift, axis=0)
         cols = {c: ibuf[:, i].copy() for i, c in enumerate(_ICOLS)}
         cols.update({c: fbuf[:, i].copy() for i, c in enumerate(_FCOLS)})
+        lo, hi = unpack_tag_pair(cols["tag"])
+        cols["tag"] = hi.astype(np.int32)
         return cls(**cols, capacity=cap, recorded=count,
-                   dropped=max(count - cap, 0))
+                   dropped=max(count - cap, 0),
+                   tag_min=lo.astype(np.int32))
 
     def __len__(self) -> int:
         return int(self.it.shape[0])
@@ -210,6 +272,9 @@ class FlightLog:
             "last_it": int(self.it[last]) if len(self) else -1,
             "last_relres": float(self.relres[last]) if len(self) else None,
             "last_tag": int(self.tag[last]) if len(self) else 0,
+            "last_tag_min": (int(self.tag_min[last])
+                             if len(self) and self.tag_min is not None
+                             else (int(self.tag[last]) if len(self) else 0)),
             "switch_iters": self.switch_iters().tolist(),
             "first_unhealthy": self.first_unhealthy(),
             "health_counts": {

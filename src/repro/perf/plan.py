@@ -30,7 +30,7 @@ import dataclasses
 from repro.perf import tunecache
 
 __all__ = ["KernelPlan", "DEFAULT_PLAN", "DEFAULT_BLOCKS", "resolve",
-           "shape_class", "plan_key"]
+           "shape_class", "plan_key", "tag_token"]
 
 DEFAULT_BLOCKS = (8, 128)
 
@@ -112,9 +112,23 @@ def shape_class(obj) -> str:
     return f"m{_p2(rows)}r{_p2(mean_row)}"
 
 
+def tag_token(tag) -> str:
+    """Cache-key token of a precision axis value.
+
+    Scalar tags keep the pre-PR-10 ``tag{t}`` token (existing tune-cache
+    entries stay resolvable); a per-group :class:`~repro.core.tagmap.
+    TagMap` keys under its CRC32 -- ``map{crc:08x}`` -- so a promoted map
+    can never resolve a plan tuned for a different (stale) map.
+    """
+    crc = getattr(tag, "crc32", None)
+    if crc is not None:
+        return f"map{crc:08x}"
+    return f"tag{tag}"
+
+
 def plan_key(shape_cls: str, tag, layout: str, nrhs: int = 1) -> str:
-    """Tune-cache key: ``shape-class | tag | layout | nrhs``."""
-    return f"{shape_cls}|tag{tag}|{layout}|nrhs{int(nrhs)}"
+    """Tune-cache key: ``shape-class | tag-token | layout | nrhs``."""
+    return f"{shape_cls}|{tag_token(tag)}|{layout}|nrhs{int(nrhs)}"
 
 
 def resolve(source=None, *, tag=None, layout: str | None = None,

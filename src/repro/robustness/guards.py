@@ -46,6 +46,7 @@ __all__ = [
     "guard_step",
     "finalize_health",
     "run_with_recovery",
+    "run_with_recovery_map",
 ]
 
 # Health codes, carried as int32 scalars through the jitted loops so the
@@ -240,6 +241,52 @@ def run_with_recovery(run, x0, maxiter: int, init_tag: int = 1,
         health = int(res.health)
         trip = int(res.trip_iter)
         tag = max(int(res.tag), tag)
+    return res._replace(
+        iters=jnp.asarray(total, jnp.int32),
+        switch_iters=jnp.asarray(sw, jnp.int32),
+        trip_iter=jnp.asarray(first_trip, jnp.int32),
+    )
+
+
+def run_with_recovery_map(run, x0, maxiter: int, tm, recover: bool = True):
+    """Per-group twin of :func:`run_with_recovery` (PR 10, DESIGN.md §18).
+
+    ``run(x_start, budget, floor)`` must execute the solver with the
+    static :class:`~repro.core.tagmap.TagMap` FLOORED at ``floor``
+    (``TagMap.floored``: every group raised to at least the floor) and
+    return ``(res, ckpt)`` like the scalar driver's ``run``.
+
+    A trip escalates the floor one rung instead of the whole operator:
+    only the groups BELOW the floor promote -- the already-promoted
+    high-sensitivity groups keep their tags and the recovery cost is the
+    cheapest map that is one rung safer everywhere.  The final rung
+    (floor 3) is the uniform exact path, the same termination guarantee
+    as the scalar ladder.  Each escalation is billed into
+    ``switch_iters`` at its global iteration; inner runs never step
+    in-loop (the monitor is pinned at the map's max tag), so there is no
+    inner switch record to merge.
+    """
+    floor = tm.min_tag
+    res, ckpt = run(x0, maxiter, floor)
+    if not recover:
+        return res
+    health = int(res.health)
+    trip = int(res.trip_iter)
+    if health == HEALTH_OK or trip < 0:
+        return res
+
+    total = int(res.iters)
+    first_trip = trip
+    sw = np.asarray(res.switch_iters, dtype=np.int64).copy()
+    while health != HEALTH_OK and trip >= 0 and floor < 3:
+        floor += 1
+        if sw[floor - 2] < 0:
+            sw[floor - 2] = total
+        budget = max(maxiter - total, 1)
+        res, ckpt = run(ckpt, budget, floor)
+        total += int(res.iters)
+        health = int(res.health)
+        trip = int(res.trip_iter)
     return res._replace(
         iters=jnp.asarray(total, jnp.int32),
         switch_iters=jnp.asarray(sw, jnp.int32),

@@ -201,8 +201,19 @@ class BatchedChunks:
                  params: P.MonitorParams,
                  guards: GuardParams | None = None,
                  x0=None, precond=None, wire: str = "exact",
-                 init_tag: int = 1):
+                 init_tag: int = 1, tags=None):
         b, x0 = _normalize_block(b, x0)
+        if tags is not None:
+            # The batched precision axis (PR 10, DESIGN.md §18) resolves
+            # BEFORE chunking exactly as in solve_cg_batched: an int or
+            # uniform map overrides init_tag (same jaxpr), a non-uniform
+            # map swaps in the masked operand and pins the monitor -- so
+            # the chunked trajectory stays bit-identical to the unchunked
+            # tags= call by the same construction as everything else here.
+            from repro.solvers.batched import _batched_tag_axis
+
+            init_tag, op, params = _batched_tag_axis(
+                tags, op, int(b.shape[0]), params)
         self.b = b
         self.tol = jnp.asarray(tol, b.dtype)
         self.maxiter = maxiter

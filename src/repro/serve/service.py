@@ -52,6 +52,7 @@ from repro.launch.solver_serve import (
     SolveReport,
     SolveRequest,
     SolverService,
+    _tags_token,
 )
 from repro.obs import metrics as OM
 from repro.obs import trace as OT
@@ -168,6 +169,7 @@ class AsyncSolveService(SolverService):
         self._pack_k: Dict[str, int] = {}
         self._operators: Dict[str, Callable] = {}
         self._deadlines: Dict[int, tuple] = {}
+        self._adaptive_done: Dict[int, SolveReport] = {}
         self.reports: Dict[int, SolveReport] = {}
 
         const = {"service": self.service_id}
@@ -244,7 +246,7 @@ class AsyncSolveService(SolverService):
     # -- admission ---------------------------------------------------------
 
     def submit(self, handle: str, b, tol: float = 1e-8, x0=None,
-               deadline_s: float | None = None
+               deadline_s: float | None = None, tags=None
                ) -> Union[Accepted, Shed]:
         """Admission-controlled intake.
 
@@ -253,6 +255,14 @@ class AsyncSolveService(SolverService):
         service cannot take right now comes back as a typed
         :class:`Shed` instead.  Accepted requests return
         :class:`Accepted` and will be dispatched at a chunk boundary.
+
+        ``tags`` is the per-request precision axis override (PR 10, same
+        values as the sync service).  Int/map requests ride the chunked
+        groups as usual (bucketed by their effective axis);
+        ``tags="adaptive"`` requests run the host-looped adaptive driver
+        TO COMPLETION at their admission boundary -- the driver's replan
+        loop is not chunk-preemptible, so an adaptive request occupies
+        its pump turn entirely (deadline still suppresses retries).
         """
         # Queue bound FIRST: a queue_full shed must not consume a
         # half-open breaker's single probe admission.
@@ -267,7 +277,7 @@ class AsyncSolveService(SolverService):
             return Shed("breaker_open", retry_after_s=br.retry_after())
         try:
             rid = super().submit(handle, b, tol=tol, x0=x0,
-                                 deadline_s=deadline_s)
+                                 deadline_s=deadline_s, tags=tags)
         except Exception:
             br.release()  # the admission never dispatched
             raise
@@ -296,6 +306,9 @@ class AsyncSolveService(SolverService):
                      groups=len(self._groups),
                      queued=len(self._pending)):
             self._admit()
+            if self._adaptive_done:
+                finalized.update(self._adaptive_done)
+                self._adaptive_done = {}
             for key in list(self._groups):
                 group = self._groups[key]
                 try:
@@ -328,7 +341,13 @@ class AsyncSolveService(SolverService):
     def _bucket(self, req: SolveRequest) -> tuple:
         cls, _ = _dwell_params(self.params, req.deadline_s,
                                self.tight_deadline_s, self.loose_deadline_s)
-        return (req.handle, req.tol, cls)
+        return (req.handle, req.tol, cls, _tags_token(self._eff_tags(req)))
+
+    def _eff_tags(self, req: SolveRequest):
+        """The request's effective precision axis: its own override,
+        else the handle default."""
+        return req.tags if req.tags is not None \
+            else self._ops[req.handle].tags
 
     def _warm_key(self, handle: str, b) -> tuple:
         return (handle, zlib.crc32(np.ascontiguousarray(
@@ -359,6 +378,9 @@ class AsyncSolveService(SolverService):
         boundary."""
         still: List[SolveRequest] = []
         for req in self._pending:
+            if self._eff_tags(req) == "adaptive":
+                self._admit_adaptive(req)
+                continue
             key = self._bucket(req)
             group = self._groups.get(key)
             if group is not None and group.chunks.nrhs >= self.slots:
@@ -380,7 +402,8 @@ class AsyncSolveService(SolverService):
                     solve_op, req.b[:, None],
                     x0=None if x0 is None else x0[:, None],
                     tol=req.tol, maxiter=self.maxiter, params=dwell,
-                    guards=self.guards, precond=op.precond, wire=op.wire)
+                    guards=self.guards, precond=op.precond, wire=op.wire,
+                    tags=self._eff_tags(req))
                 self._groups[key] = _Group(chunks=chunks, members=[req])
             else:
                 group.chunks.join(req.b, x0=None if x0 is None
@@ -388,6 +411,41 @@ class AsyncSolveService(SolverService):
                 group.members.append(req)
         self._pending = still
         self.queue_depth.set(len(self._pending))
+
+    def _admit_adaptive(self, req: SolveRequest) -> None:
+        """Dispatch one ``tags="adaptive"`` request at its admission
+        boundary: the adaptive driver's host replan loop runs to
+        completion here (not chunk-preemptible), with the same breaker /
+        warm-cache / degradation bookkeeping as a finalized column."""
+        self.queue_wait.observe(max(0.0, self.clock() - req.t_submit))
+        self._verify_pack(req.handle)
+        op = self._ops[req.handle]
+        br = self._breaker(req.handle)
+        try:
+            reps = self._run_adaptive(op, req.tol, [req])
+            rep = reps[req.id]
+        except Exception:  # degraded, never propagated (pump contract)
+            self.stats["errors"] += 1
+            self._solutions.pop(req.id, None)
+            br.record_failure()
+            reps = {req.id: SolveReport(
+                id=req.id, handle=req.handle, iters=0,
+                relres=float("inf"), converged=False, tag=0,
+                switch_iters=np.full(2, -1, np.int64),
+                est_bytes=0, batch_size=1, health="error",
+            )}
+        else:
+            if rep.converged and rep.health == "ok":
+                br.record_success()
+                self._warm_store(req, self._solutions[req.id])
+            else:
+                br.record_failure()
+            self.request_bytes.observe(rep.est_bytes)
+        self._breaker_gauge.labels(
+            service=self.service_id, handle=req.handle
+        ).set(1 if br.state == OPEN else 0)
+        self.solve_latency.observe(max(0.0, self.clock() - req.t_submit))
+        self._adaptive_done.update(reps)
 
     def _expired(self, req: SolveRequest) -> bool:
         return (req.deadline_s is not None
@@ -434,7 +492,8 @@ class AsyncSolveService(SolverService):
         x_finite = bool(jnp.isfinite(jnp.vdot(x, x)))
         shares, total = self._byte_shares(
             op, np.asarray([it]), np.asarray(snap["switch_iters"]
-                                             ).reshape(1, -1))
+                                             ).reshape(1, -1),
+            tags=self._eff_tags(req))
         est_bytes = int(shares[0])
         self.stats["modeled_bytes"] += total
         solve_op = self._operators.get(req.handle, op.solve_op)

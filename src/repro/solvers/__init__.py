@@ -36,6 +36,7 @@ from repro.solvers.batched import (
     solve_ir_batched,
     solve_pcg_batched,
 )
+from repro.solvers.adaptive import AdaptiveResult, solve_adaptive
 from repro.solvers.cg import CGResult, solve_cg, solve_pcg
 from repro.solvers.fused_cg import fused_cg_step, fused_pcg_step, gse_matvec
 from repro.solvers.gmres import GMRESResult, solve_gmres
@@ -59,6 +60,8 @@ __all__ = [
     "DEFAULT_GUARDS",
     "GuardParams",
     "health_name",
+    "AdaptiveResult",
+    "solve_adaptive",
     "CGResult",
     "BatchedCGResult",
     "BatchedIRResult",

@@ -64,6 +64,32 @@ __all__ = [
 ]
 
 
+def _batched_tag_axis(tags, apply_a, m, params):
+    """Normalize the batched wrappers' ``tags=`` axis (PR 10).
+
+    Returns ``(init_tag, apply_a, params)``: ints and uniform maps
+    override the starting tag on the untouched operand (same jaxpr --
+    the uniform fast path); a non-uniform map swaps in the MASKED
+    operand decoded at its max tag with the monitor pinned there, the
+    same static-schedule semantics as single-RHS ``solve_cg(tags=tm)``.
+    There is no per-group recovery ladder in-batch -- flagged columns
+    go through the serving layer's tag-3 retry exactly as before.
+    """
+    if isinstance(tags, str):
+        raise ValueError(
+            "the batched solvers take an int tag or a TagMap; the "
+            "'adaptive' driver is single-RHS (repro.solvers.adaptive)")
+    from repro.solvers.cg import _normalize_tag_axis, _pin_params
+
+    t, tm = _normalize_tag_axis(tags, apply_a, m)
+    if tm is None:
+        return (1 if t is None else t), apply_a, params
+    from repro.kernels.ops import masked_for_tagmap
+
+    return tm.max_tag, masked_for_tagmap(apply_a, tm), _pin_params(
+        params, tm.max_tag)
+
+
 class BatchedCGResult(NamedTuple):
     x: jnp.ndarray             # (n, nrhs) solutions
     iters: jnp.ndarray         # (nrhs,) iterations executed per column
@@ -364,6 +390,7 @@ def solve_cg_batched(
     wire: str = "exact",
     guards: GuardParams | None = DEFAULT_GUARDS,
     flight: OF.FlightParams | None = None,
+    tags=None,
 ) -> BatchedCGResult:
     """Stepped CG over an (n, nrhs) right-hand-side block.
 
@@ -390,20 +417,30 @@ def solve_cg_batched(
     health code.  There is no in-batch tag escalation -- the serving
     layer retries flagged columns at tag 3 (``launch.solver_serve``).
     ``guards=None`` compiles the pre-guard loop.
+
+    ``tags`` (PR 10, DESIGN.md §18): an int or uniform
+    :class:`~repro.core.tagmap.TagMap` starts every column's monitor at
+    that tag (same jaxpr, bit-identical); a NON-uniform map runs the
+    static masked-operand schedule for the whole batch -- per-column
+    in-loop stepping is pinned off, exactly as in single-RHS
+    ``solve_cg(tags=tm)``.
     """
     b, x0 = _normalize_block(b, x0)
     if params is None:
         params = P.MonitorParams.for_cg()
     tol_ = jnp.asarray(tol, b.dtype)
+    init_tag, apply_a, params = _batched_tag_axis(
+        tags, apply_a, int(b.shape[0]), params)
     apply_a = _maybe_sharded(apply_a, wire)
     with OT.span("solve.cg_batched", n=int(b.shape[0]),
                  nrhs=int(b.shape[1]), tol=float(tol)):
         if isinstance(apply_a, (GSECSR, GSESellC)):
             return _solve_cg_batched_fused(apply_a, b, x0, tol_, maxiter,
-                                           params, guards=guards,
-                                           flight=flight)
+                                           params, init_tag=init_tag,
+                                           guards=guards, flight=flight)
         return _solve_cg_batched(apply_a, b, x0, tol_, maxiter, params,
-                                 guards=guards, flight=flight)
+                                 init_tag=init_tag, guards=guards,
+                                 flight=flight)
 
 
 # ---------------------------------------------------------------------------
@@ -487,6 +524,7 @@ def solve_pcg_batched(
     wire: str = "exact",
     guards: GuardParams | None = DEFAULT_GUARDS,
     flight: OF.FlightParams | None = None,
+    tags=None,
 ) -> BatchedCGResult:
     """Stepped preconditioned CG over an (n, nrhs) block.
 
@@ -498,26 +536,33 @@ def solve_pcg_batched(
     as in :func:`solve_cg_batched`.  ``guards`` works as in
     :func:`solve_cg_batched`, additionally flagging ``z.r < 0``
     (indefinite-preconditioner breakdown) per column.
+    ``tags`` works as in :func:`solve_cg_batched`; with a non-uniform map
+    the preconditioner stream rides the map's MAX tag (the conservative
+    charge ``iteration_stream_bytes`` models).
     """
     b, x0 = _normalize_block(b, x0)
     if params is None:
         params = P.MonitorParams.for_cg()
     tol_ = jnp.asarray(tol, b.dtype)
+    init_tag, apply_a, params = _batched_tag_axis(
+        tags, apply_a, int(b.shape[0]), params)
     apply_a = _maybe_sharded(apply_a, wire)
     with OT.span("solve.pcg_batched", n=int(b.shape[0]),
                  nrhs=int(b.shape[1]), tol=float(tol)):
         if isinstance(apply_a, (GSECSR, GSESellC)) and hasattr(precond,
                                                                "apply_at"):
             return _solve_pcg_batched_fused(apply_a, precond, b, x0, tol_,
-                                            maxiter, params, guards=guards,
-                                            flight=flight)
+                                            maxiter, params,
+                                            init_tag=init_tag,
+                                            guards=guards, flight=flight)
         apply_m = precond if callable(precond) else precond.apply
         if isinstance(apply_a, (GSECSR, GSESellC)):
             from repro.solvers.cg import _gsecsr_operator
 
             apply_a = _gsecsr_operator(apply_a)
         return _solve_pcg_batched(apply_a, apply_m, b, x0, tol_, maxiter,
-                                  params, guards=guards, flight=flight)
+                                  params, init_tag=init_tag, guards=guards,
+                                  flight=flight)
 
 
 # ---------------------------------------------------------------------------
@@ -536,6 +581,7 @@ def solve_ir_batched(
     wire: str = "exact",
     guards: GuardParams | None = DEFAULT_GUARDS,
     flight: OF.FlightParams | None = None,
+    tags=None,
 ) -> BatchedIRResult:
     """Batched stepped iterative refinement (the ``solve_ir`` outer loop
     over an (n, nrhs) block, inner solves batched).
@@ -548,6 +594,11 @@ def solve_ir_batched(
     trajectories match the single-RHS ``solve_ir`` exactly (the batched
     inner solve is per-column bit-identical and the outer ops are
     per-column).
+
+    ``tags`` threads to the INNER batched solves only (ints/uniform maps
+    start the inner monitors there; a non-uniform map runs the masked
+    static schedule) -- the outer tag-3 residual always reads the
+    UNMASKED operand, so the refinement target stays the true operator.
     """
     b = jnp.asarray(b)
     if b.ndim == 1:
@@ -602,11 +653,13 @@ def solve_ir_batched(
         if precond is not None:
             res = solve_pcg_batched(apply_a, r_in, precond, tol=inner_tol,
                                     maxiter=inner_maxiter, params=params,
-                                    guards=guards, flight=flight)
+                                    guards=guards, flight=flight,
+                                    tags=tags)
         else:
             res = solve_cg_batched(apply_a, r_in, tol=inner_tol,
                                    maxiter=inner_maxiter, params=params,
-                                   guards=guards, flight=flight)
+                                   guards=guards, flight=flight,
+                                   tags=tags)
         if flights is not None and res.flight is not None:
             flights.append(res.flight)
         inner_health[active] = np.asarray(res.health)[active]

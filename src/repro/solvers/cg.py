@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import precision as P
+from repro.core.tagmap import TagMap, normalize_tags
 from repro.obs import flight as OF
 from repro.obs import trace as OT
 from repro.robustness.guards import (
@@ -34,10 +35,43 @@ from repro.robustness.guards import (
     guard_init,
     guard_step,
     run_with_recovery,
+    run_with_recovery_map,
 )
 from repro.sparse.csr import GSECSR, GSESellC
 
 __all__ = ["CGResult", "solve_cg", "solve_pcg"]
+
+
+def _normalize_tag_axis(tags, apply_a, m):
+    """Normalize the public ``tags=`` axis (PR 10, DESIGN.md §18).
+
+    Returns ``(init_tag_override, tm)`` -- at most one non-None:
+
+      * ``None``            -> ``(None, None)``: legacy ``init_tag`` path;
+      * int / uniform map   -> ``(tag, None)``: the SAME jaxpr as today's
+        scalar ``tag=int`` API (the uniform fast path the bit-identity
+        acceptance criterion pins);
+      * non-uniform map     -> ``(None, tm)``: masked-operand path --
+        requires a packed GSE operand whose tail segments can be zeroed.
+    """
+    norm = normalize_tags(tags, m)
+    if norm is None or isinstance(norm, int):
+        return norm, None
+    tm = norm
+    from repro.distributed.partition import PartitionedGSECSR
+
+    if isinstance(apply_a, PartitionedGSECSR):
+        raise NotImplementedError(
+            "non-uniform TagMap schedules on sharded (PartitionedGSECSR) "
+            "operands are not supported yet; int tags and uniform maps are"
+        )
+    if not isinstance(apply_a, (GSECSR, GSESellC)):
+        raise ValueError(
+            "a non-uniform TagMap needs a packed GSE operand (GSECSR/"
+            "GSESellC) whose tail segments it can mask; got a generic "
+            f"apply_a of type {type(apply_a).__name__}"
+        )
+    return None, tm
 
 
 def _normalize_b_x0(b, x0):
@@ -586,6 +620,74 @@ def _finish_with_correction(res, b, tol, maxiter, apply3, resume):
     )
 
 
+def _pin_params(params: P.MonitorParams, max_tag: int) -> P.MonitorParams:
+    """Pin the in-loop monitor at the map's max tag: with
+    ``init_tag == max_tag`` the step predicate (``tag < max_tag``) is
+    statically false, so a static TagMap IS the schedule -- no in-loop
+    whole-operator stepping underneath a per-group map."""
+    if params.max_tag == max_tag:
+        return params
+    return dataclasses.replace(params, max_tag=max_tag)
+
+
+def _pack_map_flight(res, tme: TagMap):
+    """Restamp a TagMap segment's flight rows with the packed (min, max)
+    active tag pair (obs.flight satellite; schema unchanged for uniform
+    maps)."""
+    if res.flight is None:
+        return res
+    return res._replace(flight=OF.pack_state_tags(
+        res.flight, tme.min_tag, tme.max_tag))
+
+
+def _tagmap_run_cg(a, b, tol_, params, guards, flight, tm: TagMap):
+    """Build the ``run(x_start, budget, floor)`` closure the per-group
+    recovery ladder drives for CG: mask the operand at the floored map,
+    decode at its max tag, monitor pinned (DESIGN.md §18)."""
+    from repro.kernels.ops import masked_for_tagmap
+
+    def run(x_start, budget, floor):
+        tme = tm.floored(floor)
+        res, ckpt = _solve_cg_fused(
+            masked_for_tagmap(a, tme), b, x_start, tol_, budget,
+            _pin_params(params, tme.max_tag), init_tag=tme.max_tag,
+            guards=guards, flight=flight, return_ckpt=True)
+        return _pack_map_flight(res, tme), ckpt
+
+    return run
+
+
+def _tagmap_run_pcg(a, precond, b, tol_, params, guards, flight,
+                    fused: bool, tm: TagMap):
+    """PCG twin of :func:`_tagmap_run_cg` -- the preconditioner stream
+    runs at the map's MAX tag (the conservative charge
+    ``iteration_stream_bytes`` models)."""
+    from repro.kernels.ops import masked_for_tagmap
+
+    if fused:
+        def run(x_start, budget, floor):
+            tme = tm.floored(floor)
+            res, ckpt = _solve_pcg_fused(
+                masked_for_tagmap(a, tme), precond, b, x_start, tol_,
+                budget, _pin_params(params, tme.max_tag),
+                init_tag=tme.max_tag, guards=guards, flight=flight,
+                return_ckpt=True)
+            return _pack_map_flight(res, tme), ckpt
+    else:
+        apply_m = precond if callable(precond) else precond.apply
+
+        def run(x_start, budget, floor):
+            tme = tm.floored(floor)
+            res, ckpt = _solve_pcg(
+                _gsecsr_operator(masked_for_tagmap(a, tme)), apply_m, b,
+                x_start, tol_, budget, _pin_params(params, tme.max_tag),
+                init_tag=tme.max_tag, guards=guards, flight=flight,
+                return_ckpt=True)
+            return _pack_map_flight(res, tme), ckpt
+
+    return run
+
+
 def _gsecsr_operator(a) -> Callable:
     """Tag-dispatched operator view of a GSECSR/GSESellC, memoized on the instance
     so repeated solves reuse one closure (the closure is a static jit
@@ -615,6 +717,7 @@ def solve_pcg(
     recover: bool = True,
     init_tag: int = 1,
     flight: OF.FlightParams | None = None,
+    tags=None,
 ) -> CGResult:
     """Preconditioned CG for SPD systems with stepped mixed precision.
 
@@ -644,10 +747,32 @@ def solve_pcg(
     ``obs.flight.FlightLog.from_state``.  Bit-identical trajectories
     either way (DESIGN.md §16).
 
+    ``tags`` (PR 10, DESIGN.md §18) selects the precision axis: an int or
+    a uniform :class:`~repro.core.tagmap.TagMap` overrides ``init_tag``
+    (same jaxpr, bit-identical); a NON-uniform map runs the masked-operand
+    per-group schedule (the map IS the schedule -- the in-loop monitor is
+    pinned, and recovery escalates the map's FLOOR instead of the whole
+    operator); ``"adaptive"`` hands off to
+    :func:`repro.solvers.adaptive.solve_adaptive`.
+
     ``b``/``x0`` may be ``(n,)`` or ``(n, 1)``; the solution comes back in
     ``b``'s layout.
     """
     from repro.distributed.partition import PartitionedGSECSR
+
+    if isinstance(tags, str):
+        if tags != "adaptive":
+            raise ValueError(
+                f"tags= accepts an int tag, a TagMap, or 'adaptive'; "
+                f"got {tags!r}")
+        from repro.solvers.adaptive import solve_adaptive
+
+        return solve_adaptive(apply_a, b, precond=precond, x0=x0, tol=tol,
+                              maxiter=maxiter, params=params)
+    t_override, tm = _normalize_tag_axis(tags, apply_a,
+                                         int(jnp.asarray(b).shape[0]))
+    if t_override is not None:
+        init_tag = t_override
 
     if isinstance(apply_a, PartitionedGSECSR):
         from repro.solvers.sharded import solve_pcg_sharded
@@ -665,6 +790,30 @@ def solve_pcg(
     tol_ = jnp.asarray(tol, b.dtype)
     fused = (isinstance(apply_a, (GSECSR, GSESellC))
              and hasattr(precond, "apply_at"))
+
+    if tm is not None:
+        run = _tagmap_run_pcg(apply_a, precond, b, tol_, params, guards,
+                              flight, fused, tm)
+        with OT.span("solve.pcg", n=int(b.shape[0]), tol=float(tol),
+                     init_tag=tm.max_tag, fused=fused):
+            res = run_with_recovery_map(
+                run, x0, maxiter, tm,
+                recover=recover and guards is not None)
+        if not final_correction:
+            return _restore_shape(res, orig_shape)
+        apply3_op = _gsecsr_operator(apply_a)
+
+        def apply3(v):
+            return apply3_op(v, jnp.int32(3))
+
+        def resume(xr, budget):
+            return run(xr, budget, 3)[0]
+
+        return _restore_shape(
+            _finish_with_correction(res, b, tol, maxiter, apply3, resume),
+            orig_shape,
+        )
+
     if fused:
         def run(x_start, budget, tag):
             return _solve_pcg_fused(apply_a, precond, b, x_start, tol_,
@@ -714,6 +863,7 @@ def solve_cg(
     recover: bool = True,
     init_tag: int = 1,
     flight: OF.FlightParams | None = None,
+    tags=None,
 ) -> CGResult:
     """CG for SPD systems.  ``apply_a(x, tag)`` is the (possibly multi-
     precision) operator; fixed-precision baselines ignore ``tag``.
@@ -735,11 +885,27 @@ def solve_cg(
     ``guards``/``recover``/``init_tag``/``flight``: see :func:`solve_pcg`
     -- in-loop guardrails plus checkpoint-rollback tag-escalation recovery
     (DESIGN.md §14) and the per-iteration flight recorder (DESIGN.md §16).
+    ``tags``: the per-group precision axis (PR 10) -- also documented
+    there.
 
     ``b``/``x0`` may be ``(n,)`` or ``(n, 1)``; the solution comes back in
     ``b``'s layout.
     """
     from repro.distributed.partition import PartitionedGSECSR
+
+    if isinstance(tags, str):
+        if tags != "adaptive":
+            raise ValueError(
+                f"tags= accepts an int tag, a TagMap, or 'adaptive'; "
+                f"got {tags!r}")
+        from repro.solvers.adaptive import solve_adaptive
+
+        return solve_adaptive(apply_a, b, x0=x0, tol=tol, maxiter=maxiter,
+                              params=params)
+    t_override, tm = _normalize_tag_axis(tags, apply_a,
+                                         int(jnp.asarray(b).shape[0]))
+    if t_override is not None:
+        init_tag = t_override
 
     if isinstance(apply_a, PartitionedGSECSR):
         from repro.solvers.sharded import solve_cg_sharded
@@ -757,6 +923,28 @@ def solve_cg(
     tol_ = jnp.asarray(tol, b.dtype)
     fused = isinstance(apply_a, (GSECSR, GSESellC))
     solve = _solve_cg_fused if fused else _solve_cg
+
+    if tm is not None:
+        run = _tagmap_run_cg(apply_a, b, tol_, params, guards, flight, tm)
+        with OT.span("solve.cg", n=int(b.shape[0]), tol=float(tol),
+                     init_tag=tm.max_tag, fused=True):
+            res = run_with_recovery_map(
+                run, x0, maxiter, tm,
+                recover=recover and guards is not None)
+        if not final_correction:
+            return _restore_shape(res, orig_shape)
+        apply3_op = _gsecsr_operator(apply_a)
+
+        def apply3(v):
+            return apply3_op(v, jnp.int32(3))
+
+        def resume(xr, budget):
+            return run(xr, budget, 3)[0]
+
+        return _restore_shape(
+            _finish_with_correction(res, b, tol, maxiter, apply3, resume),
+            orig_shape,
+        )
 
     def run(x_start, budget, tag):
         return solve(apply_a, b, x_start, tol_, budget, params,

@@ -81,6 +81,7 @@ def solve_ir(
     wire: str = "exact",
     guards: GuardParams | None = DEFAULT_GUARDS,
     flight: OF.FlightParams | None = None,
+    tags=None,
 ) -> IRResult:
     """Iterative refinement with a stepped inner solver.
 
@@ -95,11 +96,21 @@ def solve_ir(
     ``guards`` threads the in-loop guardrails (DESIGN.md §14) into every
     inner solve; a non-finite correction is never folded into ``x`` and
     the report's ``health`` names the failing stage.
+
+    ``tags`` (PR 10, DESIGN.md §18) threads to the INNER CG/PCG solves:
+    an int or uniform :class:`~repro.core.tagmap.TagMap` starts every
+    correction's monitor there; a non-uniform map runs each correction
+    on the masked per-group operand.  The OUTER tag-3 residual always
+    reads the UNMASKED operand, so the refinement target stays the true
+    operator.  Requires ``inner="cg"`` (GMRES keeps its scalar axis).
     """
+    if tags is not None and inner != "cg":
+        raise ValueError("tags= requires inner='cg' (the GMRES inner "
+                         "solve keeps the legacy scalar tag axis)")
     st = _ir_setup(apply_a, b, tol=tol, max_outer=max_outer, inner=inner,
                    inner_tol=inner_tol, inner_maxiter=inner_maxiter,
                    params=params, precond=precond, restart=restart,
-                   wire=wire, guards=guards, flight=flight)
+                   wire=wire, guards=guards, flight=flight, tags=tags)
     with OT.span("solve.ir", n=int(b.shape[0]), tol=float(tol), inner=inner):
         while _ir_active(st):
             _ir_step(st)
@@ -107,7 +118,8 @@ def solve_ir(
 
 
 def _ir_setup(apply_a, b, *, tol, max_outer, inner, inner_tol, inner_maxiter,
-              params, precond, restart, wire, guards, flight) -> dict:
+              params, precond, restart, wire, guards, flight,
+              tags=None) -> dict:
     """Build the host-side refinement state for ``solve_ir``/chunked IR.
 
     Returns a mutable dict advanced one correction at a time by
@@ -155,7 +167,7 @@ def _ir_setup(apply_a, b, *, tol, max_outer, inner, inner_tol, inner_maxiter,
         b=b, bnorm=bnorm, tol=tol, max_outer=max_outer, inner=inner,
         inner_tol=inner_tol, inner_maxiter=inner_maxiter, params=params,
         precond=precond, restart=restart, guards=guards, flight=flight,
-        x=x, r=r, relres=relres, history=[relres], total_inner=0, outer=0,
+        tags=tags, x=x, r=r, relres=relres, history=[relres], total_inner=0, outer=0,
         inner_health=HEALTH_OK, stopped=False,
         flights=[] if flight is not None else None,
     )
@@ -179,11 +191,12 @@ def _ir_step(st: dict) -> dict:
             res = solve_pcg(st["apply_a"], st["r"], st["precond"],
                             tol=st["inner_tol"], maxiter=st["inner_maxiter"],
                             params=st["params"], guards=st["guards"],
-                            flight=st["flight"])
+                            flight=st["flight"], tags=st.get("tags"))
         else:
             res = solve_cg(st["apply_a"], st["r"], tol=st["inner_tol"],
                            maxiter=st["inner_maxiter"], params=st["params"],
-                           guards=st["guards"], flight=st["flight"])
+                           guards=st["guards"], flight=st["flight"],
+                           tags=st.get("tags"))
     else:
         res = solve_gmres(st["apply_tagged"], st["r"], tol=st["inner_tol"],
                           restart=st["restart"], maxiter=st["inner_maxiter"],
@@ -191,8 +204,9 @@ def _ir_step(st: dict) -> dict:
                           guards=st["guards"], flight=st["flight"])
     st["inner_health"] = int(getattr(res, "health", HEALTH_OK))
     st["total_inner"] += int(res.iters)
-    if st["flights"] is not None and res.flight is not None:
-        st["flights"].append(res.flight)
+    res_flight = getattr(res, "flight", None)  # adaptive results carry none
+    if st["flights"] is not None and res_flight is not None:
+        st["flights"].append(res_flight)
     if not bool(jnp.isfinite(jnp.vdot(res.x, res.x))):
         st["stopped"] = True  # never fold a non-finite correction into x
         return st

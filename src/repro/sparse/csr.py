@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import gse, precision_table
+from repro.core.tagmap import TagMap
 
 __all__ = [
     "CSR",
@@ -135,14 +136,27 @@ class GSECSR:
         padded onto tiles.  Passing a packed layout (``GSESellC`` or
         ``ELLLayout``) charges the ACTUAL padded slots that layout streams
         -- ``layout.bytes_touched(tag)`` -- so skewed matrices stop
-        under-reporting traffic (DESIGN.md §12)."""
+        under-reporting traffic (DESIGN.md §12).
+
+        ``tag`` may be a per-group :class:`~repro.core.tagmap.TagMap`
+        (DESIGN.md §18): the nnz-only mode then charges EACH entry at its
+        symmetric induced tag (max of row/column group tags -- what the
+        masked operand actually streams) -- the blended byte model the
+        adaptive schedule is gated on.  A uniform map reproduces the
+        scalar figure exactly.
+        """
         if layout is not None:
             return layout.bytes_touched(tag)
-        return (
-            self.nnz * self.bytes_per_nnz(tag)
-            + self.rowptr.size * 4
-            + self.table.size * 4
-        )
+        fixed = self.rowptr.size * 4 + self.table.size * 4
+        if isinstance(tag, TagMap):
+            cols = (np.asarray(self.colpak, np.uint32)
+                    & np.uint32((1 << (32 - self.ei_bit)) - 1))
+            et = tag.entry_tags(np.asarray(self.row_ids), cols)
+            counts = np.bincount(et, minlength=4)
+            return fixed + int(sum(
+                int(counts[t]) * self.bytes_per_nnz(t) for t in (1, 2, 3)
+            ))
+        return self.nnz * self.bytes_per_nnz(tag) + fixed
 
     def tree_flatten(self):
         return (
@@ -181,7 +195,21 @@ class ELLLayout:
         """Fraction of streamed slots that are padding, in [0, 1)."""
         return 1.0 - self.nnz / max(self.slots, 1)
 
-    def bytes_touched(self, tag: int) -> int:
+    def bytes_touched(self, tag) -> int:
+        """``tag`` may be a :class:`~repro.core.tagmap.TagMap`: each row's
+        padded slots are then charged at the ROW's group tag (the default
+        group size equals the kernels' 8-row grid block, so a per-row-
+        block operand choice is physically realizable -- DESIGN.md §18).
+        This is the idealized row-side model: entries promoted only via
+        their COLUMN's group (symmetric induced tags) are charged at the
+        row tag, so it lower-bounds the blended nnz model slightly.
+        A uniform map reproduces the scalar figure exactly."""
+        if isinstance(tag, TagMap):
+            rt = tag.row_tags(self.rows)
+            per = np.array([0] + [_SLOT_BYTES[t] for t in (1, 2, 3)],
+                           np.int64)
+            return (int(per[rt].sum()) * self.width
+                    + self.table_entries * 4)
         return self.slots * _SLOT_BYTES[tag] + self.table_entries * 4
 
 
@@ -264,15 +292,42 @@ class GSESellC:
         ``GSECSR.bytes_per_nnz``, which charges nnz only)."""
         return _SLOT_BYTES[tag] * self.slots / max(self.nnz, 1)
 
-    def bytes_touched(self, tag: int) -> int:
+    def bucket_tags(self, tm: "TagMap") -> Tuple[int, ...]:
+        """Per-width-bucket max INDUCED entry tag (max of row/column group
+        tags over the bucket's real entries) -- the coarse unit the SELL
+        kernels dispatch a per-group map at (DESIGN.md §18).  A bucket
+        with no real entries charges tag 1."""
+        cp_flat = np.concatenate(
+            [np.asarray(cp, np.uint32).reshape(-1) for cp in self.colpak]
+        ) if self.colpak else np.zeros(0, np.uint32)
+        gather = np.asarray(self.gather, np.int64)
+        cols = cp_flat[gather] & np.uint32((1 << (32 - self.ei_bit)) - 1)
+        et = tm.entry_tags(np.asarray(self.row_ids), cols)
+        sizes = np.array([cp.size for cp in self.colpak], np.int64)
+        offs = np.concatenate([[0], np.cumsum(sizes)])
+        bidx = np.searchsorted(offs, gather, side="right") - 1
+        tags = np.ones(len(self.colpak), np.int64)
+        np.maximum.at(tags, bidx, et.astype(np.int64))
+        return tuple(int(t) for t in tags)
+
+    def bytes_touched(self, tag) -> int:
         """Modeled HBM bytes one tag-``tag`` SpMV streams through this
         layout: every padded slot's value segment + packed colidx, the
-        output row permutation, and the shared-exponent table."""
-        return (
-            self.slots * _SLOT_BYTES[tag]
-            + self.perm.shape[0] * 4
-            + self.table.size * 4
-        )
+        output row permutation, and the shared-exponent table.
+
+        ``tag`` may be a :class:`~repro.core.tagmap.TagMap`: each width-
+        bucket's slots are then charged at the bucket's MAX group tag --
+        exactly what the per-bucket kernel dispatch streams (an all-tag-1
+        bucket never touches tails), so this blended figure is the
+        PHYSICAL model, not an optimistic nnz blend (DESIGN.md §18)."""
+        fixed = self.perm.shape[0] * 4 + self.table.size * 4
+        if isinstance(tag, TagMap):
+            return fixed + int(sum(
+                r * w * _SLOT_BYTES[t]
+                for r, w, t in zip(self.bucket_rows, self.widths,
+                                   self.bucket_tags(tag))
+            ))
+        return self.slots * _SLOT_BYTES[tag] + fixed
 
     def tree_flatten(self):
         leaves = (
@@ -410,12 +465,16 @@ def iteration_stream_bytes(op, tag, precond=None, nrhs: int = 1,
     else:
         total = op.bytes_touched(tag)
     if precond is not None:
-        if tag not in (1, 2, 3):
+        # A per-group TagMap charges the preconditioner at the map's MAX
+        # tag: the stepped preconditioners follow one scalar schedule, so
+        # this is the conservative (never-optimistic) account.
+        ptag = tag.max_tag if isinstance(tag, TagMap) else tag
+        if ptag not in (1, 2, 3):
             raise ValueError(
                 f"preconditioner streams need a GSE tag in {{1, 2, 3}}, "
                 f"got {tag!r}"
             )
-        total += precond.bytes_touched(tag)
+        total += precond.bytes_touched(ptag)
     total += (nrhs - 1) * vector_stream_bytes(op)
     return total
 
